@@ -1,0 +1,468 @@
+"""One benchmark per paper table/figure (DESIGN.md §6 maps each).
+
+Each ``bench_*`` returns (rows, derived) where rows are printable CSV
+lines ``name,us_per_call,derived`` and derived is the claim-checking
+summary.  All results cache to results/bench/.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import HotspotDetector, LMetricPolicy
+from .common import (build_policy, cached, csv_row, run_sim)
+
+Q = 0.5            # default rate fraction of capacity (paper: half max)
+DUR = 240.0
+
+
+def _s(res):
+    return res["summary"]
+
+
+# ---------------------------------------------------------------------------
+def bench_fig07_kv_awareness(force=False):
+    """Fig. 7: vLLM (load-balance only) vs +KV$-awareness (linear)."""
+    def go():
+        a = _s(run_sim(build_policy("vllm"), "chatbot", Q, DUR))
+        b = _s(run_sim(build_policy("linear", lam=0.7), "chatbot", Q, DUR))
+        return {"vllm": a, "kv": b}
+    r = cached("fig07", go, force)
+    dt = 1 - r["kv"]["ttft_mean"] / r["vllm"]["ttft_mean"]
+    dp = 1 - r["kv"]["tpot_mean"] / r["vllm"]["tpot_mean"]
+    rows = [csv_row("fig07.kv_ttft_improvement",
+                    r["kv"]["sched_us"], f"{dt * 100:.1f}%"),
+            csv_row("fig07.kv_tpot_improvement",
+                    r["kv"]["sched_us"], f"{dp * 100:.1f}%")]
+    derived = (f"KV$-awareness: TTFT -{dt * 100:.0f}% TPOT -{dp * 100:.0f}% "
+               f"hit {r['vllm']['kv_hit_ratio']:.2f}->"
+               f"{r['kv']['kv_hit_ratio']:.2f} (paper: -84%/-17%)")
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+def bench_fig11_linear_sweep(force=False):
+    """Fig. 11: optimal λ is workload-dependent (knee point)."""
+    lams = [0.4, 0.55, 0.7, 0.9]
+    traces = ["chatbot", "agent"]
+    def go():
+        out = {}
+        for t in traces:
+            out[t] = {str(l): _s(run_sim(build_policy("linear", lam=l),
+                                         t, Q, DUR)) for l in lams}
+        return out
+    r = cached("fig11", go, force)
+    rows, best = [], {}
+    for t in traces:
+        scores = {l: r[t][str(l)]["ttft_mean"] for l in lams}
+        best[t] = min(scores, key=scores.get)
+        for l in lams:
+            rows.append(csv_row(f"fig11.{t}.lam{l}", r[t][str(l)]["sched_us"],
+                                f"ttft={scores[l] * 1e3:.1f}ms"))
+    derived = (f"optimal λ: chatbot={best['chatbot']} agent={best['agent']}"
+               f" (workload-dependent: {'YES' if len(set(best.values())) > 1 else 'same here'})")
+    return rows, derived
+
+
+# ---------------------------------------------------------------------------
+def bench_fig12_filter_sweep(force=False):
+    """Fig. 12: filter threshold workload-dependent; filter < tuned linear."""
+    ranges = [2, 4, 8, 16]
+    def go():
+        out = {}
+        for t in ("coder", "agent"):
+            out[t] = {str(g): _s(run_sim(build_policy(
+                "filter", bs_range=g), t, Q, DUR)) for g in ranges}
+            out[t]["linear"] = _s(run_sim(build_policy("linear", lam=0.7),
+                                          t, Q, DUR))
+        return out
+    r = cached("fig12", go, force)
+    rows, derived_parts = [], []
+    for t in ("coder", "agent"):
+        scores = {g: r[t][str(g)]["ttft_p50"] for g in ranges}
+        bg = min(scores, key=scores.get)
+        rows += [csv_row(f"fig12.{t}.range{g}", r[t][str(g)]["sched_us"],
+                         f"p50_ttft={scores[g] * 1e3:.1f}ms")
+                 for g in ranges]
+        worse = r[t][str(bg)]["ttft_mean"] >= r[t]["linear"]["ttft_mean"]
+        derived_parts.append(f"{t}: best range={bg}, "
+                             f"filter{'>=' if worse else '<'}linear")
+    return rows, "; ".join(derived_parts)
+
+
+# ---------------------------------------------------------------------------
+def bench_fig15_simulator_accuracy(force=False):
+    """Fig. 15/16: untuned simulator hurts llm-d tail latency."""
+    def go():
+        tuned = _s(run_sim(build_policy("llm-d"), "chatbot", Q, DUR))
+        untuned = _s(run_sim(build_policy("llm-d-untuned"), "chatbot", Q,
+                             DUR))
+        return {"tuned": tuned, "untuned": untuned}
+    r = cached("fig15", go, force)
+    d99 = r["untuned"]["ttft_p99"] / max(r["tuned"]["ttft_p99"], 1e-9) - 1
+    dp99 = r["untuned"]["tpot_p99"] / max(r["tuned"]["tpot_p99"], 1e-9) - 1
+    rows = [csv_row("fig15.untuned_ttft_p99_penalty",
+                    r["untuned"]["sched_us"], f"+{d99 * 100:.0f}%"),
+            csv_row("fig15.untuned_tpot_p99_penalty",
+                    r["untuned"]["sched_us"], f"+{dp99 * 100:.0f}%")]
+    return rows, (f"untuned simulator: TTFT p99 +{d99 * 100:.0f}%, "
+                  f"TPOT p99 +{dp99 * 100:.0f}% (paper: 75.6%/79.7% "
+                  f"improvements from tuning)")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig18_ptoken_vs_hitratio(force=False):
+    """Fig. 18 (§5.1): P-token beats 1−hit-ratio as the KV$ indicator.
+    Measured on the long-prompt coder trace at higher load — the queued-
+    prefill term only matters once prefill queues actually form."""
+    def go():
+        pt = run_sim(build_policy("lmetric"), "coder", 0.7, DUR,
+                     collect=("imbalance",))
+        hr = run_sim(build_policy("lmetric", kv_indicator="one_minus_hit"),
+                     "coder", 0.7, DUR, collect=("imbalance",))
+        return {"ptoken": {"summary": _s(pt), "imb": pt["imbalance"]},
+                "hit": {"summary": _s(hr), "imb": hr["imbalance"]}}
+    r = cached("fig18", go, force)
+    p, h = r["ptoken"]["summary"], r["hit"]["summary"]
+    d50 = 1 - p["ttft_p50"] / h["ttft_p50"]
+    d95 = 1 - p["ttft_p95"] / h["ttft_p95"]
+    rows = [csv_row("fig18.ptoken_p50_ttft_gain", p["sched_us"],
+                    f"{d50 * 100:.1f}%"),
+            csv_row("fig18.ptoken_p95_ttft_gain", p["sched_us"],
+                    f"{d95 * 100:.1f}%")]
+    return rows, (f"P-token vs 1-hit: p50 -{d50 * 100:.0f}% p95 "
+                  f"-{d95 * 100:.0f}% (paper: 14.4%/42.8%); hits "
+                  f"{p['kv_hit_ratio']:.2f}≈{h['kv_hit_ratio']:.2f}; "
+                  f"imbalance {r['ptoken']['imb']['mean_std']:.2f} vs "
+                  f"{r['hit']['imb']['mean_std']:.2f}")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig19_bs_vs_tokens(force=False):
+    """Fig. 19 (§5.1): BS beats total-tokens as the load indicator."""
+    def go():
+        bs = _s(run_sim(build_policy("lmetric"), "chatbot", Q, DUR))
+        tk = _s(run_sim(build_policy("lmetric", load_indicator="tokens"),
+                        "chatbot", Q, DUR))
+        return {"bs": bs, "tokens": tk}
+    r = cached("fig19", go, force)
+    d = 1 - r["bs"]["ttft_mean"] / r["tokens"]["ttft_mean"]
+    dp = 1 - r["bs"]["tpot_mean"] / r["tokens"]["tpot_mean"]
+    rows = [csv_row("fig19.bs_ttft_gain", r["bs"]["sched_us"],
+                    f"{d * 100:.1f}%")]
+    return rows, (f"BS vs #tokens: TTFT -{d * 100:.0f}% TPOT "
+                  f"-{dp * 100:.0f}%")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig20_eq2_tracking(force=False):
+    """Fig. 20 (§5.2): Eq. 2 holds on all benign traces."""
+    def go():
+        out = {}
+        for t in ("chatbot", "agent", "coder", "toolagent"):
+            det = HotspotDetector()
+            pol = LMetricPolicy(detector=det)
+            _s(run_sim(pol, t, Q, DUR))
+            n = len(det.history)
+            viol = sum(1 for h in det.history if not h["eq2"])
+            act = sum(1 for e in det.events if e["event"] == "activate")
+            out[t] = {"checks": n, "violations": viol, "activations": act}
+        return out
+    r = cached("fig20", go, force)
+    rows = [csv_row(f"fig20.{t}", 0.0,
+                    f"eq2_viol={v['violations']}/{v['checks']} "
+                    f"act={v['activations']}") for t, v in r.items()]
+    total_act = sum(v["activations"] for v in r.values())
+    return rows, (f"benign traces: {total_act} hotspot activations "
+                  f"(paper: none observed)")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig21_hotspot_adversarial(force=False):
+    """Fig. 21 (§5.2): adversarial KV$ hotspot — LMETRIC degrades without
+    the detector; detector restores load-balance-level latency."""
+    def go():
+        base = _s(run_sim(build_policy("lmetric"), "hotspot", Q, DUR * 4))
+        det = HotspotDetector()
+        guarded = _s(run_sim(LMetricPolicy(detector=det), "hotspot", Q,
+                             DUR * 4))
+        vllm = _s(run_sim(build_policy("vllm"), "hotspot", Q, DUR * 4))
+        det_events = [e for e in det.events if e["event"] == "activate"]
+        return {"lmetric": base, "lmetric+det": guarded, "vllm": vllm,
+                "activations": len(det_events)}
+    r = cached("fig21", go, force)
+    rows = [csv_row(f"fig21.{k}", v["sched_us"],
+                    f"ttft_p95={v['ttft_p95'] * 1e3:.0f}ms "
+                    f"tpot_p99={v['tpot_p99'] * 1e3:.1f}ms")
+            for k, v in r.items() if isinstance(v, dict)]
+    gain = 1 - r["lmetric+det"]["ttft_p95"] / r["lmetric"]["ttft_p95"]
+    return rows, (f"detector: {r['activations']} activations, p95 TTFT "
+                  f"-{gain * 100:.0f}% vs undetected hotspot")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig22_end_to_end(force=False):
+    """Fig. 22: LMETRIC vs all production baselines on four traces."""
+    pols = ["vllm", "linear", "dynamo", "llm-d", "lmetric"]
+    traces = ["chatbot", "coder", "agent", "toolagent"]
+    def go():
+        out = {}
+        for t in traces:
+            out[t] = {p: _s(run_sim(build_policy(p), t, Q, DUR))
+                      for p in pols}
+        return out
+    r = cached("fig22", go, force)
+    rows, wins = [], 0
+    for t in traces:
+        for p in pols:
+            s = r[t][p]
+            rows.append(csv_row(
+                f"fig22.{t}.{p}", s["sched_us"],
+                f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+                f"tpot={s['tpot_mean'] * 1e3:.2f}ms "
+                f"hit={s['kv_hit_ratio']:.2f}"))
+        best = min(pols, key=lambda p: r[t][p]["ttft_mean"])
+        # the paper's thesis: matches/beats every baseline WITHOUT tuning
+        if r[t]["lmetric"]["ttft_mean"] <= 1.10 * r[t][best]["ttft_mean"]:
+            wins += 1
+    tpot_best = sum(
+        1 for t in traces
+        if r[t]["lmetric"]["tpot_mean"] <= 1.02 * min(
+            r[t][p]["tpot_mean"] for p in pols))
+    vs_vllm = 1 - (np.mean([r[t]["lmetric"]["ttft_mean"] for t in traces])
+                   / np.mean([r[t]["vllm"]["ttft_mean"] for t in traces]))
+    return rows, (f"LMETRIC TTFT best-or-within-10% on {wins}/{len(traces)}"
+                  f" traces, best TPOT on {tpot_best}/{len(traces)}; "
+                  f"mean TTFT -{vs_vllm * 100:.0f}% vs vLLM "
+                  f"(paper: -92% on ChatBot; llm-d close 2nd w/ 30% worse "
+                  f"TPOT on ToolAgent)")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig23_request_rates(force=False):
+    """Fig. 23: consistency across request rates."""
+    fracs = [0.25, 0.5, 0.75]
+    pols = ["vllm", "linear", "lmetric"]
+    def go():
+        return {str(f): {p: _s(run_sim(build_policy(p), "chatbot", f, DUR))
+                         for p in pols} for f in fracs}
+    r = cached("fig23", go, force)
+    rows, ok = [], True
+    for f in fracs:
+        s = r[str(f)]
+        best = min(pols, key=lambda p: s[p]["ttft_mean"])
+        gap = s["lmetric"]["ttft_mean"] / s[best]["ttft_mean"] - 1
+        ok &= gap <= 0.10
+        rows.append(csv_row(
+            f"fig23.rate{f}", s["lmetric"]["sched_us"],
+            f"best={best} lmetric gap=+{gap * 100:.1f}% "
+            f"ttft={s['lmetric']['ttft_mean'] * 1e3:.1f}ms"))
+    return rows, (f"lmetric best-or-within-10% of the tuned best at "
+                  f"{'ALL' if ok else 'SOME'} rates (untuned)")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig26_research_baselines(force=False):
+    """Fig. 26: vs Preble and PolyServe."""
+    def go():
+        out = {p: _s(run_sim(build_policy(p), "chatbot", Q, DUR))
+               for p in ("preble", "polyserve", "lmetric", "vllm")}
+        return out
+    r = cached("fig26", go, force)
+    rows = [csv_row(f"fig26.{p}", s["sched_us"],
+                    f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+                    f"tpot={s['tpot_mean'] * 1e3:.2f}ms")
+            for p, s in r.items()]
+    dt = 1 - r["lmetric"]["ttft_mean"] / r["preble"]["ttft_mean"]
+    return rows, (f"vs Preble: TTFT -{dt * 100:.0f}% (paper: -56%); "
+                  f"vs PolyServe: ttft {r['lmetric']['ttft_mean'] * 1e3:.0f}"
+                  f" vs {r['polyserve']['ttft_mean'] * 1e3:.0f}ms")
+
+
+# ---------------------------------------------------------------------------
+def bench_fig27_preble_branches(force=False):
+    """Fig. 27: Preble falls back to linear combination most of the time."""
+    def go():
+        out = {}
+        for T in (0.3, 0.5, 0.8):
+            pol = build_policy("preble", T=T)
+            _s(run_sim(pol, "chatbot", Q, DUR))
+            tot = sum(pol.branch_counts.values())
+            out[str(T)] = pol.branch_counts["kv"] / max(tot, 1)
+        return out
+    r = cached("fig27", go, force)
+    rows = [csv_row(f"fig27.T{T}", 0.0, f"kv_branch={v * 100:.0f}%")
+            for T, v in r.items()]
+    return rows, f"KV-branch rate at T=0.5: {r['0.5'] * 100:.0f}%"
+
+
+# ---------------------------------------------------------------------------
+def bench_fig28_load_gradient(force=False):
+    """Fig. 28: PolyServe concentrates load (gradient); LMETRIC spreads."""
+    def go():
+        out = {}
+        for p in ("polyserve", "lmetric"):
+            pol = (build_policy(p, slo_tpot=0.030) if p == "polyserve"
+                   else build_policy(p))
+            res = run_sim(pol, "chatbot", Q, DUR,
+                          collect=("batch_timeline",))
+            tl = res["batch_timeline"]
+            mean_bs = {k: (np.mean([b for _, b in v]) if v else 0.0)
+                       for k, v in tl.items()}
+            vals = sorted(mean_bs.values())
+            top = max(vals) or 1.0
+            out[p] = {"per_instance_bs": [round(v, 2) for v in vals],
+                      "underused": sum(1 for v in vals if v < 0.2 * top),
+                      "maxmin_ratio": float(top / max(min(vals), 1e-3)),
+                      "spread": float(np.std(vals))}
+        return out
+    r = cached("fig28", go, force)
+    rows = [csv_row(f"fig28.{p}", 0.0,
+                    f"underused={v['underused']} "
+                    f"max/min={v['maxmin_ratio']:.1f} "
+                    f"spread={v['spread']:.2f}") for p, v in r.items()]
+    return rows, (f"load gradient: polyserve max/min="
+                  f"{r['polyserve']['maxmin_ratio']:.1f} "
+                  f"({r['polyserve']['underused']} underused) vs lmetric "
+                  f"{r['lmetric']['maxmin_ratio']:.1f} (balanced)")
+
+
+# ---------------------------------------------------------------------------
+def bench_router_overhead(force=False):
+    """§3: per-decision scheduling latency by policy (µs)."""
+    def go():
+        out = {}
+        for p in ("vllm", "linear", "lmetric", "llm-d", "preble"):
+            s = _s(run_sim(build_policy(p), "agent", 0.3, 120.0))
+            out[p] = s["sched_us"]
+        return out
+    r = cached("router_overhead", go, force)
+    rows = [csv_row(f"router.{p}", v, f"{v:.1f}us/decision")
+            for p, v in r.items()]
+    return rows, f"lmetric decision: {r['lmetric']:.0f}µs"
+
+
+# ---------------------------------------------------------------------------
+def bench_beyond_pd_disagg(force=False):
+    """BEYOND PAPER (§7 Discussion): PD-disaggregation with the paper's
+    prescribed indicators (P-token prefill routing, BS decode routing)
+    vs PD-colocated LMETRIC at equal instance count."""
+    import copy
+    from repro.cluster.pd_disagg import PDDisaggSim
+    from repro.cluster.metrics import summarize
+    from repro.workloads.traces import make_trace
+    from .common import capacity_qps, cluster_spec
+
+    def go():
+        out = {}
+        for t in ("chatbot", "coder"):
+            qps = capacity_qps(t) * Q
+            trace = make_trace(t, qps=qps, duration=DUR, seed=1)
+            colo = _s(run_sim(build_policy("lmetric"), t, Q, DUR))
+            sim = PDDisaggSim(6, 10, cluster_spec())
+            done = sim.run(copy.deepcopy(trace))
+            dis = summarize(done)
+            out[t] = {"colocated": colo, "disagg": dict(dis)}
+        return out
+    r = cached("beyond_pd", go, force)
+    rows, notes = [], []
+    for t, v in r.items():
+        c, d = v["colocated"], v["disagg"]
+        rows.append(csv_row(f"beyond_pd.{t}.colocated", 0.0,
+                            f"ttft={c['ttft_mean'] * 1e3:.1f}ms "
+                            f"tpot={c['tpot_mean'] * 1e3:.2f}ms"))
+        rows.append(csv_row(f"beyond_pd.{t}.disagg(6P+10D)", 0.0,
+                            f"ttft={d['ttft_mean'] * 1e3:.1f}ms "
+                            f"tpot={d['tpot_mean'] * 1e3:.2f}ms"))
+        notes.append(f"{t}: disagg TPOT "
+                     f"{d['tpot_mean'] / max(c['tpot_mean'], 1e-9):.2f}× "
+                     f"colo")
+    return rows, "; ".join(notes) + " (no decode/prefill interference "
+    "vs KV$ transfer cost — §7's trade-off)"
+
+
+def bench_beyond_score_robustness(force=False):
+    """BEYOND PAPER (§5 support): the multiplicative score needs no
+    tuning — perturbing its arbitrary constants (the +1 smoothing, or
+    even squaring the BS factor) barely moves end-to-end latency, unlike
+    the λ sweep of Fig. 11 where 0.7→0.9 collapses TTFT by 1000×."""
+    from repro.core import LMetricPolicy
+
+    class Tweaked(LMetricPolicy):
+        def __init__(self, eps, beta, name):
+            super().__init__()
+            self.eps, self.beta = eps, beta
+            self.name = name
+
+        def scores(self, req, factory, hits):
+            out = []
+            for k, inst in enumerate(factory):
+                a = inst.p_token(req, hits[k]) + self.eps
+                b = (inst.bs + self.eps) ** self.beta
+                out.append(a * b)
+            return out
+
+    def go():
+        out = {}
+        for eps, beta in ((1.0, 1.0), (0.1, 1.0), (10.0, 1.0), (1.0, 2.0)):
+            pol = Tweaked(eps, beta, f"lmetric[eps={eps},β={beta}]")
+            out[f"{eps}_{beta}"] = _s(run_sim(pol, "chatbot", Q, DUR))
+        return out
+    r = cached("beyond_robust", go, force)
+    base = r["1.0_1.0"]["ttft_mean"]
+    rows, spread = [], []
+    for k, s in r.items():
+        rel = s["ttft_mean"] / base - 1
+        spread.append(abs(rel))
+        rows.append(csv_row(f"beyond_robust.{k}", s["sched_us"],
+                            f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+                            f"({rel * 100:+.1f}%)"))
+    return rows, (f"score-form perturbations move TTFT ≤"
+                  f"{max(spread) * 100:.0f}% (Fig. 11's λ 0.7→0.9 moves "
+                  f"it >1000×): multiplication is tuning-free in practice")
+
+
+def bench_beyond_cost_indicator(force=False):
+    """BEYOND PAPER: load indicator = physical decode-step cost (latency
+    model) instead of raw BS — still hyperparameter-free."""
+    from repro.core import LatencyModel, LMetricPolicy
+    from .common import cluster_spec
+
+    def go():
+        base = _s(run_sim(build_policy("lmetric"), "coder", 0.7, DUR))
+        cost = _s(run_sim(
+            LMetricPolicy(load_indicator="cost",
+                          latency_model=LatencyModel(cluster_spec())),
+            "coder", 0.7, DUR))
+        return {"bs": base, "cost": cost}
+    r = cached("beyond_cost", go, force)
+    d = 1 - r["cost"]["ttft_mean"] / r["bs"]["ttft_mean"]
+    dp = 1 - r["cost"]["tpot_mean"] / r["bs"]["tpot_mean"]
+    rows = [csv_row("beyond.cost_indicator", r["cost"]["sched_us"],
+                    f"ttft {'-' if d >= 0 else '+'}{abs(d) * 100:.1f}% "
+                    f"tpot {'-' if dp >= 0 else '+'}{abs(dp) * 100:.1f}%")]
+    return rows, (f"P-token × step-cost vs × BS: TTFT Δ{-d * 100:+.1f}%, "
+                  f"TPOT Δ{-dp * 100:+.1f}%")
+
+
+ALL_BENCHES = [
+    bench_fig07_kv_awareness,
+    bench_fig11_linear_sweep,
+    bench_fig12_filter_sweep,
+    bench_fig15_simulator_accuracy,
+    bench_fig18_ptoken_vs_hitratio,
+    bench_fig19_bs_vs_tokens,
+    bench_fig20_eq2_tracking,
+    bench_fig21_hotspot_adversarial,
+    bench_fig22_end_to_end,
+    bench_fig23_request_rates,
+    bench_fig26_research_baselines,
+    bench_fig27_preble_branches,
+    bench_fig28_load_gradient,
+    bench_router_overhead,
+    bench_beyond_pd_disagg,
+    bench_beyond_cost_indicator,
+    bench_beyond_score_robustness,
+]

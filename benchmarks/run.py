@@ -1,0 +1,43 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows plus a claim summary block.
+
+  PYTHONPATH=src python -m benchmarks.run [--only figNN] [--force]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on bench name")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore cached results")
+    args = ap.parse_args()
+
+    from benchmarks.figures import ALL_BENCHES
+
+    print("name,us_per_call,derived")
+    claims = []
+    for bench in ALL_BENCHES:
+        name = bench.__name__
+        if args.only and args.only not in name:
+            continue
+        try:
+            rows, derived = bench(force=args.force)
+        except Exception as e:  # noqa: BLE001
+            rows, derived = [f"{name},0.00,ERROR {type(e).__name__}: {e}"], \
+                f"ERROR: {e}"
+        for r in rows:
+            print(r, flush=True)
+        claims.append((name, derived))
+    print("\n=== claim summary ===")
+    for n, d in claims:
+        print(f"{n:36s} {d}")
+
+
+if __name__ == "__main__":
+    main()

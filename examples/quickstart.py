@@ -1,0 +1,40 @@
+"""Quickstart: LMETRIC in ~30 lines.
+
+Routes a small burst of requests across 4 simulated instances with the
+paper's multiplicative policy and prints the scheduling decisions —
+showing both objectives at work (KV$ hits AND load balance).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import IndicatorFactory, LMetricPolicy, Request
+
+factory = IndicatorFactory(n_instances=4)
+policy = LMetricPolicy()          # score_i = P-token_i × (BS_i + 1)
+
+shared_prefix = (101, 102, 103)   # a 3-block (192-token) system prompt
+
+print(f"{'req':>4} {'class':>7} {'hit_tok':>8} {'routed_to':>9}  scores")
+for i in range(12):
+    if i % 3 == 2:                # every 3rd request: unrelated workload
+        blocks = (900 + i,)
+        cls = "other"
+    else:
+        blocks = shared_prefix + (200 + i,)
+        cls = "shared"
+    req = Request(rid=i, arrival=float(i), blocks=blocks,
+                  prompt_len=len(blocks) * 64, output_len=64,
+                  class_id=0 if cls == "shared" else i)
+    hits = factory.hits_for(req)
+    scores = policy.scores(req, factory, hits)
+    iid = policy.route(req, factory, now=float(i))
+    inst = factory[iid]
+    inst.on_route(req, float(i), hits[iid])
+    inst.kv.insert(req.blocks)    # instance caches the prefix it served
+    print(f"{i:>4} {cls:>7} {hits[iid]:>8} {iid:>9}  "
+          f"{[f'{s:.0f}' for s in scores]}")
+
+print("\nper-instance batch size:", [inst.bs for inst in factory])
+print("KV$ blocks held:        ", [inst.kv.n_blocks for inst in factory])
+print("\nNote: shared-prefix requests consolidate onto the instance that "
+      "cached the prefix\nuntil its batch grows, then the BS factor pushes "
+      "new ones elsewhere — no tuning.")

@@ -1,0 +1,68 @@
+"""End-to-end driver: serve a REAL JAX model with batched requests.
+
+Spins up 4 in-process serving instances of a reduced qwen3-family model
+(real parameters, real KV cache, real chunked prefill with prefix-cache
+compute skip), routes ~40 requests with LMETRIC vs the vLLM baseline, and
+reports TTFT/TPOT/hit-rate from the virtual-time cluster.
+
+  PYTHONPATH=src python examples/serve_cluster.py [--n 40] [--policy both]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.cluster.metrics import fmt_row, summarize
+from repro.configs import get_config
+from repro.core import JSQPolicy, LMetricPolicy
+from repro.models import Model
+from repro.serving.engine import EngineCluster
+
+
+def build_workload(n, seed=0):
+    """Multi-app workload: 3 'applications' with shared system prompts."""
+    rng = np.random.RandomState(seed)
+    apps = [rng.randint(4, 500, size=96) for _ in range(3)]
+    arrivals, t = [], 0.0
+    for i in range(n):
+        t += float(rng.exponential(0.05))
+        app = rng.randint(3)
+        suffix = rng.randint(4, 500, size=rng.randint(8, 32))
+        toks = np.concatenate([apps[app], suffix]).astype(np.int32)
+        arrivals.append((t, toks, int(rng.randint(4, 12))))
+    return arrivals
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=40)
+    ap.add_argument("--arch", default="qwen3_4b-smoke")
+    ap.add_argument("--policy", default="both",
+                    choices=["lmetric", "vllm", "both"])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"serving {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"4 instances\n")
+
+    policies = {"lmetric": LMetricPolicy, "vllm": JSQPolicy}
+    names = [args.policy] if args.policy != "both" else list(policies)
+    for name in names:
+        t0 = time.time()
+        cluster = EngineCluster(4, model, params, policies[name](),
+                                block_size=16, max_batch=4, max_len=256,
+                                chunk_tokens=64)
+        done = cluster.run(build_workload(args.n))
+        s = summarize(done)
+        print(fmt_row(name, s) + f"  wall={time.time() - t0:.1f}s "
+              f"sched={cluster.router.mean_decision_us():.0f}µs")
+    print("\n(virtual-time: TTFT/TPOT are measured JAX step walltimes "
+          "composed per instance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Dev check: run the cluster sim with several policies on chatbot trace."""
+import time
+from repro.configs import get_config
+from repro.core import (LatencyModel, Router, make_policy, spec_from_config,
+                        HotspotDetector, LMetricPolicy)
+from repro.cluster.simulator import ClusterSim
+from repro.cluster.metrics import summarize, fmt_row, imbalance_stats
+from repro.workloads.traces import make_trace, trace_stats, estimate_capacity_qps
+
+cfg = get_config("qwen3_30b_moe")
+spec = spec_from_config(cfg, chips=1)
+probe = make_trace("chatbot", qps=10, duration=300, seed=0)
+print("trace stats:", {k: round(v,3) for k,v in trace_stats(probe).items()})
+cap = estimate_capacity_qps(spec, probe, 16)
+qps = 0.5 * cap
+print(f"capacity ~{cap:.1f} req/s for 16 inst; using qps={qps:.1f}")
+
+trace = make_trace("chatbot", qps=qps, duration=600, seed=1)
+print("requests:", len(trace))
+
+for pname in ["vllm", "linear", "lmetric"]:
+    t0 = time.time()
+    lm = LatencyModel(spec)
+    pol = make_policy(pname, latency_model=lm) if pname != "linear" else make_policy(pname, lam=0.7)
+    router = Router(pol, 16, kv_capacity_tokens=400_000, block_size=64)
+    sim = ClusterSim(router, spec, LatencyModel(spec))
+    reqs = [r.__class__(**{f: getattr(r, f) for f in
+            ("rid","arrival","blocks","prompt_len","output_len","class_id")})
+            for r in trace]
+    done = sim.run(reqs)
+    s = summarize(done)
+    print(fmt_row(pol.name, s), f"  wall={time.time()-t0:.1f}s  sched={router.mean_decision_us():.0f}us")

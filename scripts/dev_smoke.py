@@ -1,0 +1,47 @@
+"""Dev check: one forward/train/prefill/decode per smoke arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+
+archs = sys.argv[1:] or ARCH_IDS
+
+
+def specs_for(cfg, B=2, S=16):
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32) + 3,
+             "targets": jnp.ones((B, S), jnp.int32)}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.ones((B, cfg.enc_seq, cfg.enc_d_model),
+                                   jnp.bfloat16) * 0.01
+    if cfg.n_patches:
+        batch["patch_embeds"] = jnp.ones((B, cfg.n_patches, 1152),
+                                         jnp.bfloat16) * 0.01
+    return batch
+
+
+for a in archs:
+    cfg = get_config(a + "-smoke")
+    m = Model(cfg)
+    rng = jax.random.key(0)
+    params = m.init(rng)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    batch = specs_for(cfg)
+    loss, metrics = jax.jit(lambda p, b: m.forward_train(p, b, remat=False))(
+        params, batch)
+    logits, cache = jax.jit(m.prefill)(params, batch["tokens"], batch)
+    # decode one step continuing from a fresh cache
+    B = batch["tokens"].shape[0]
+    cache2 = m.init_cache(B, 32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    pos = jnp.full((B,), 5, jnp.int32)
+    dl, cache2 = jax.jit(m.decode_step)(params, tok, pos, cache2)
+    ok = (np.isfinite(float(loss)) and np.isfinite(np.asarray(dl, np.float32)).all()
+          and np.isfinite(np.asarray(logits, np.float32)).all())
+    print(f"{a:24s} params={n/1e6:8.2f}M loss={float(loss):8.4f} "
+          f"dlogits={dl.shape} {'OK' if ok else 'NAN!'}")
+    assert ok, a
+print("all smoke archs OK")

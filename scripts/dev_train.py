@@ -1,0 +1,16 @@
+import jax
+from repro.configs import get_config
+from repro.models import Model
+from repro.training.optim import OptimizerConfig
+from repro.training.train_loop import train_loop
+from repro.data.pipeline import DataConfig, DataIterator
+
+cfg = get_config("granite_moe_3b_a800m-smoke")
+m = Model(cfg)
+dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+it = DataIterator(dcfg)
+opt = OptimizerConfig(lr=1e-3, warmup_steps=5, total_steps=30, schedule="wsd")
+out = train_loop(m, opt, it, n_steps=30, log_every=10)
+h = out["history"]
+assert h[-1]["loss"] < h[0]["loss"], "loss should decrease"
+print("train loop OK; loss", h[0]["loss"], "->", h[-1]["loss"])

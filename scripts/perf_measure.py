@@ -1,0 +1,42 @@
+"""§Perf measurement helper: lower+compile a variant and record analysis."""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import sys, json, time
+import jax
+from repro.configs import get_config
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh, fsdp_axes
+from repro.launch.shapes import input_specs, analytic_flops, model_flops, resolve_arch_for_shape
+from repro.launch.sharding import param_shardings, batch_shardings
+from repro.launch.dryrun import roofline_terms, RESULTS_DIR
+from repro.models import Model
+
+arch, shape, tag, variant = sys.argv[1:5]
+cfg = get_config(arch)
+cfg, _ = resolve_arch_for_shape(cfg, shape)
+mesh = make_production_mesh()
+model = Model(cfg)
+specs = input_specs(cfg, shape)
+params_shape = model.abstract_params()
+pshard = param_shardings(params_shape, mesh, ("data",))
+with mesh:
+    bshard = batch_shardings(specs["batch"], mesh, ("data",))
+    last_only = variant != "full_logits"
+    def prefill(params, batch):
+        logits, cache = model.prefill(params, batch["tokens"], batch, last_only=last_only)
+        return logits[:, 0 if last_only else -1], cache
+    lowered = jax.jit(prefill, in_shardings=(pshard, bshard)).lower(params_shape, specs["batch"])
+t0=time.time(); compiled = lowered.compile(); ct=time.time()-t0
+mem = compiled.memory_analysis()
+peak = mem.argument_size_in_bytes + mem.output_size_in_bytes + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+ana = hlo.analyze(compiled.as_text(), 256)
+terms = roofline_terms(analytic_flops(cfg, shape)/256, ana["memory_traffic_bytes"], ana["collectives"]["total"])
+rec = dict(arch=arch, shape=shape, mesh="16x16", tag=tag, ok=True, variant=variant,
+           compile_s=ct, memory={"peak_bytes": peak},
+           collectives=ana["collectives"], memory_traffic_bytes=ana["memory_traffic_bytes"],
+           analytic_flops=analytic_flops(cfg, shape), model_flops=model_flops(cfg, shape),
+           flops_per_device=analytic_flops(cfg, shape)/256, roofline=terms,
+           dominant=max(terms, key=terms.get))
+json.dump(rec, open(os.path.join(RESULTS_DIR, f"{arch}__{shape}__16x16{tag}.json"), "w"), indent=1)
+print(f"{arch} {shape} {tag}: peak={peak/2**30:.2f}GiB compute={terms['t_compute']*1e3:.1f}ms mem={terms['t_memory']*1e3:.1f}ms coll={terms['t_collective']*1e3:.1f}ms dom={max(terms,key=terms.get)}")

@@ -1,0 +1,33 @@
+import os, sys, re
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from collections import Counter
+from repro.launch.dryrun import build_lowered
+from repro.launch import hlo
+
+lowered, skip, cfg = build_lowered(sys.argv[1], sys.argv[2], False)
+txt = lowered.compile().as_text()
+comps, entry = hlo._parse_computations(txt)
+# find per-op collective contributions with loop multipliers
+recs = Counter()
+def walk(name, mult):
+    comp = comps.get(name)
+    if comp is None: return
+    trips = {}
+    for cond, body, trip in comp.whiles:
+        trips[body] = trip or 1
+    for line in comp.lines:
+        m = hlo._OP_RE.match(line) if hasattr(hlo,'_OP_RE') else None
+        m = re.match(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\(", line)
+        if not m: continue
+        op = m.group("op")
+        base = op[:-6] if op.endswith("-start") else op
+        if base in ("all-reduce","all-gather","reduce-scatter","all-to-all","collective-permute") and not op.endswith("-done"):
+            size = hlo._shape_bytes(m.group("shape"))
+            g = hlo._group_size(line, 256)
+            wire = hlo._wire_bytes(base, size, g)
+            recs[f"{base} {m.group('shape')[:44]} g={g} x{mult}"] += wire*mult
+    for cond, body, t in comp.whiles:
+        walk(body, mult*trips.get(body,1))
+walk(entry, 1)
+for k,v in recs.most_common(12):
+    print(f"{v/2**30:8.2f} GiB  {k}")

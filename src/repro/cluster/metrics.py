@@ -1,0 +1,66 @@
+"""Serving-quality metrics: TTFT / TPOT summaries, CDFs, imbalance."""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.types import Request
+
+
+def pct(xs: Sequence[float], q: float) -> float:
+    if len(xs) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def summarize(requests: List[Request]) -> Dict[str, float]:
+    done = [r for r in requests if r.t_finish > 0.0]
+    ttft = [r.ttft for r in done]
+    tpot = [r.tpot for r in done if r.output_len > 1]
+    hits = sum(r.hit_tokens for r in done)
+    toks = sum(r.prompt_len for r in done)
+    return {
+        "n": len(done),
+        "ttft_mean": float(np.mean(ttft)) if ttft else math.nan,
+        "ttft_p50": pct(ttft, 50), "ttft_p95": pct(ttft, 95),
+        "ttft_p99": pct(ttft, 99),
+        "tpot_mean": float(np.mean(tpot)) if tpot else math.nan,
+        "tpot_p50": pct(tpot, 50), "tpot_p95": pct(tpot, 95),
+        "tpot_p99": pct(tpot, 99),
+        "kv_hit_ratio": hits / max(toks, 1),
+        "makespan": max((r.t_finish for r in done), default=0.0),
+    }
+
+
+def cdf(xs: Sequence[float], n_points: int = 50):
+    xs = np.sort(np.asarray(xs))
+    if len(xs) == 0:
+        return [], []
+    qs = np.linspace(0, 100, n_points)
+    return list(np.percentile(xs, qs)), list(qs / 100.0)
+
+
+def imbalance_stats(profile: Dict[int, List[float]]) -> Dict[str, float]:
+    """Std-dev of per-instance prefill seconds across windows; also the
+    paper's Fig. 10 metric: pick the window-wise top-2 spread."""
+    if not profile:
+        return {"mean_std": 0.0, "max_spread": 0.0}
+    stds, spreads = [], []
+    for w, vals in profile.items():
+        v = np.asarray(vals)
+        stds.append(float(v.std()))
+        spreads.append(float(v.max() - v.min()))
+    return {"mean_std": float(np.mean(stds)),
+            "max_spread": float(np.max(spreads))}
+
+
+def fmt_row(name: str, s: Dict[str, float]) -> str:
+    return (f"{name:28s} n={s['n']:6d} "
+            f"TTFT mean={s['ttft_mean'] * 1e3:9.1f}ms "
+            f"p50={s['ttft_p50'] * 1e3:8.1f} p95={s['ttft_p95'] * 1e3:9.1f} "
+            f"p99={s['ttft_p99'] * 1e3:9.1f} | "
+            f"TPOT mean={s['tpot_mean'] * 1e3:7.2f}ms "
+            f"p99={s['tpot_p99'] * 1e3:7.2f} | "
+            f"hit={s['kv_hit_ratio'] * 100:5.1f}%")

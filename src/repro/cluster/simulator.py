@@ -1,0 +1,178 @@
+"""Discrete-event cluster simulator (the paper's 16-instance testbed).
+
+Each instance models a PD-colocated vLLM-v1-style engine with chunked
+prefill (Sarathi): every engine step batches all running decodes (one
+token each) plus a FIFO prefill chunk within the token budget.  Step
+duration comes from ``LatencyModel.step_time`` (ground truth).  Requests
+arrive at the cluster, are routed by ``Router`` (the policy under test),
+skip prefilling their KV$-hit tokens, and stream decode tokens until done.
+
+The simulator emits exactly the telemetry the paper's figures need:
+per-request TTFT/TPOT, KV$ hit ratios, per-instance prefill-seconds in
+10-second windows (Fig. 10/25 imbalance profiles), and running-batch
+timelines (Fig. 28).
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core.latency_model import EngineSpec, LatencyModel
+from repro.core.router import Router
+from repro.core.types import Request
+
+WINDOW = 10.0  # seconds, for imbalance/batch telemetry
+
+
+class _SimInstance:
+    def __init__(self, iid: int, spec: EngineSpec, model: LatencyModel):
+        self.iid = iid
+        self.spec = spec
+        self.model = model
+        self.waiting: collections.deque = collections.deque()
+        self.prefill_left: Dict[int, int] = {}
+        self.running: List[Request] = []
+        self.generated: Dict[int, int] = {}
+        self.busy = False
+        # telemetry
+        self.prefill_seconds: Dict[int, float] = collections.defaultdict(float)
+        self.busy_seconds: Dict[int, float] = collections.defaultdict(float)
+        self.bs_samples: List = []
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def form_batch(self):
+        """Returns (prefill_allocs [(req, tokens)], decode_bs, ctx_tokens)."""
+        decode_bs = len(self.running)
+        budget = max(0, self.spec.chunk_tokens - decode_bs)
+        allocs = []
+        for req in self.waiting:
+            if budget <= 0:
+                break
+            if len(self.running) + len(allocs) >= self.spec.max_batch:
+                break
+            left = self.prefill_left[req.rid]
+            take = min(left, budget)
+            allocs.append((req, take))
+            budget -= take
+        ctx = sum(r.prompt_len + self.generated[r.rid] for r in self.running)
+        return allocs, decode_bs, ctx
+
+
+class ClusterSim:
+    def __init__(self, router: Router, spec: EngineSpec,
+                 model: Optional[LatencyModel] = None):
+        self.router = router
+        self.spec = spec
+        self.model = model or LatencyModel(spec)
+        n = len(router.factory)
+        self.instances = [_SimInstance(i, spec, self.model) for i in range(n)]
+        self._events: List = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def run(self, requests: List[Request], until: Optional[float] = None):
+        for req in requests:
+            self._push(req.arrival, "arrival", req)
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if until is not None and t > until:
+                break
+            self.now = t
+            if kind == "arrival":
+                self._on_arrival(payload)
+            else:
+                self._on_step_end(payload)
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def _on_arrival(self, req: Request):
+        iid = self.router.route(req, self.now)
+        inst = self.instances[iid]
+        inst.waiting.append(req)
+        inst.prefill_left[req.rid] = max(req.new_tokens, 1)
+        if not inst.busy:
+            self._start_step(inst)
+
+    def _start_step(self, inst: _SimInstance):
+        allocs, decode_bs, ctx = inst.form_batch()
+        prefill_tokens = sum(t for _, t in allocs)
+        if prefill_tokens == 0 and decode_bs == 0:
+            inst.busy = False
+            return
+        dt = self.model.step_time(prefill_tokens, decode_bs, ctx)
+        inst.busy = True
+        # telemetry: attribute step time to 10s windows
+        w = int(self.now / WINDOW)
+        total = prefill_tokens + decode_bs
+        if total:
+            inst.prefill_seconds[w] += dt * (prefill_tokens / total)
+        inst.busy_seconds[w] += dt
+        inst.bs_samples.append((self.now, len(inst.running)
+                                + len(inst.waiting)))
+        self._push(self.now + dt, "step_end", (inst.iid, allocs, decode_bs))
+
+    def _on_step_end(self, payload):
+        iid, allocs, decode_bs = payload
+        inst = self.instances[iid]
+        # prefill progress
+        for req, tokens in allocs:
+            inst.prefill_left[req.rid] -= tokens
+            self.router.on_prefill_progress(iid, tokens)
+            if inst.prefill_left[req.rid] <= 0:
+                req.t_first_token = self.now            # first token emitted
+                inst.waiting.remove(req)
+                del inst.prefill_left[req.rid]
+                self.router.on_start_running(iid, req)
+                if req.output_len <= 1:
+                    self._finish(inst, req)
+                else:
+                    inst.running.append(req)
+                    inst.generated[req.rid] = 1
+        # decode progress: each running request emitted one token
+        done = []
+        for req in list(inst.running):
+            if inst.generated.get(req.rid) is None:
+                continue
+            if req.t_first_token == self.now:
+                continue  # joined this step; starts decoding next step
+            inst.generated[req.rid] += 1
+            self.router.on_decode_token(iid)
+            if inst.generated[req.rid] >= req.output_len:
+                done.append(req)
+        for req in done:
+            inst.running.remove(req)
+            del inst.generated[req.rid]
+            self._finish(inst, req)
+        if inst.has_work():
+            self._start_step(inst)
+        else:
+            inst.busy = False
+
+    def _finish(self, inst: _SimInstance, req: Request):
+        req.t_finish = self.now
+        self.router.on_finish(inst.iid, req)
+        self.finished.append(req)
+
+    # ------------------------------------------------------------------
+    def imbalance_profile(self) -> Dict[int, List[float]]:
+        """window -> per-instance prefill seconds (Fig. 10 / Fig. 25)."""
+        windows = set()
+        for inst in self.instances:
+            windows |= set(inst.prefill_seconds)
+        out = {}
+        for w in sorted(windows):
+            out[w] = [inst.prefill_seconds.get(w, 0.0)
+                      for inst in self.instances]
+        return out
+
+    def batch_timeline(self):
+        return {inst.iid: inst.bs_samples for inst in self.instances}

@@ -1,0 +1,35 @@
+"""Whisper-medium — encoder-decoder, conv frontend STUB [arXiv:2212.04356].
+
+Assignment carve-out: the mel-spectrogram + conv feature extractor is a
+stub — ``input_specs()`` provides (B, 1500, 1024) frame embeddings; we
+implement the transformer encoder + decoder backbone.  ``max_position``
+is raised beyond Whisper's native 448 so the assigned decode_32k shape is
+expressible (noted in DESIGN.md).  long_500k is SKIPPED (full-attention
+enc-dec; no faithful sub-quadratic variant).
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        arch_type="audio",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,              # MHA
+        d_ff=4096,
+        vocab_size=51865,
+        block_pattern=("xattn",) * 24,
+        head_dim=64,
+        ffn_act="gelu",
+        norm_type="layernorm",
+        norm_eps=1e-5,
+        use_rope=False,             # learned decoder positions
+        max_position=33024,         # >= decode_32k cache length
+        tie_embeddings=True,
+        enc_layers=24,
+        enc_seq=1500,
+        enc_d_model=1024,
+        source="arXiv:2212.04356 (Whisper)",
+    )

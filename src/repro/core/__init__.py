@@ -1,0 +1,18 @@
+from .types import Request
+from .radix import RadixKVIndex, tokens_to_blocks
+from .indicators import IndicatorFactory, InstanceState
+from .latency_model import EngineSpec, LatencyModel, spec_from_config
+from .policies import (DynamoPolicy, FilterKVPolicy, JSQPolicy,
+                       LinearKVPolicy, LMetricPolicy, Policy,
+                       PolyServePolicy, PreblePolicy, SimulationPolicy,
+                       make_policy)
+from .hotspot import HotspotDetector
+from .router import Router
+
+__all__ = [
+    "Request", "RadixKVIndex", "tokens_to_blocks", "IndicatorFactory",
+    "InstanceState", "EngineSpec", "LatencyModel", "spec_from_config",
+    "Policy", "JSQPolicy", "LinearKVPolicy", "DynamoPolicy",
+    "FilterKVPolicy", "SimulationPolicy", "PreblePolicy", "PolyServePolicy",
+    "LMetricPolicy", "make_policy", "HotspotDetector", "Router",
+]

@@ -1,0 +1,135 @@
+"""Two-phase KV$-hotspot detector (paper §5.2).
+
+Phase 1 — the Eq. 2 boundary condition.  Per request class c we track,
+over a sliding accumulation window:
+
+    x / x̄        class popularity   (fraction of cluster arrivals)
+    |M| / |M̄|    cache coverage     (instances holding c's prefix)
+
+Eq. 2 (x/x̄ ≤ |M|/|M̄|) guarantees that even if every class-c request
+lands on M, no hit instance accumulates a larger batch than a non-hit
+one (substituting into Eq. 1).  A violation raises an ALARM — necessary
+but not sufficient for a hotspot (derived under the worst-case
+"all-c-requests-to-M" assumption).
+
+Phase 2 — confirmation.  While alarmed, we track each subsequent class-c
+request and activate mitigation only after ``2|M|`` consecutive requests
+whose best multiplicative score on a hotspot instance m∈M beats the best
+on m'∈M̄ (i.e. LMETRIC would keep feeding the hotspot).  Mitigation
+filters M from the routing targets; the alarm clears when Eq. 2 holds
+again in a later window.
+
+To bound overhead only the ``top_k`` classes by recent KV$-hit tokens are
+tracked (paper: "we only track requests with the highest KV$ hit rates").
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Sequence, Set
+
+from .indicators import IndicatorFactory
+from .types import Request
+
+
+class _ClassStats:
+    __slots__ = ("count", "hit_tokens", "alarmed", "consec", "active")
+
+    def __init__(self):
+        self.count = 0
+        self.hit_tokens = 0
+        self.alarmed = False
+        self.consec = 0
+        self.active = False
+
+
+class HotspotDetector:
+    def __init__(self, window: float = 60.0, top_k: int = 8,
+                 min_requests: int = 20):
+        self.window = window
+        self.top_k = top_k
+        self.min_requests = min_requests
+        self._win_start = 0.0
+        self._total = 0
+        self._stats: Dict[int, _ClassStats] = collections.defaultdict(
+            _ClassStats)
+        # telemetry for the Fig. 20/21 benchmarks
+        self.history: List[dict] = []
+        self.events: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _roll_window(self, now: float):
+        if now - self._win_start < self.window:
+            return
+        # snapshot top classes for telemetry before resetting
+        self._win_start = now
+        self._total = 0
+        for st in self._stats.values():
+            st.count = 0
+            st.hit_tokens = 0
+
+    # ------------------------------------------------------------------
+    def observe(self, req: Request, factory: IndicatorFactory,
+                hits: Sequence[int], scores: Sequence[float],
+                now: float) -> Set[int]:
+        """Called on every scheduling decision; returns instances to filter."""
+        self._roll_window(now)
+        self._total += 1
+        c = req.class_id
+        st = self._stats[c]
+        st.count += 1
+        st.hit_tokens += max(hits)
+
+        # only track the hottest classes
+        if len(self._stats) > self.top_k:
+            hot = sorted(self._stats.items(),
+                         key=lambda kv: -kv[1].hit_tokens)[: self.top_k]
+            keep = {k for k, _ in hot}
+            if c not in keep:
+                return set()
+
+        N = len(factory)
+        M = [k for k in range(N) if hits[k] > 0]
+        if not M or len(M) == N or self._total < self.min_requests:
+            st.alarmed = False
+            st.consec = 0
+            if st.active and not M:
+                st.active = False
+            return set(M) if st.active else set()
+
+        x = st.count / self._total
+        xbar = max(1.0 - x, 1e-9)
+        cover = len(M) / (N - len(M))
+        eq2_holds = (x / xbar) <= cover
+        self.history.append({"t": now, "class": c, "x_ratio": x / xbar,
+                             "coverage": cover, "eq2": eq2_holds})
+
+        if eq2_holds:
+            st.alarmed = False
+            st.consec = 0
+            if st.active:
+                st.active = False
+                self.events.append({"t": now, "class": c, "event": "clear"})
+            return set()
+
+        # ---- phase 1: alarm raised -----------------------------------
+        if not st.alarmed:
+            st.alarmed = True
+            st.consec = 0
+            self.events.append({"t": now, "class": c, "event": "alarm"})
+
+        if st.active:
+            return set(M)
+
+        # ---- phase 2: confirm via 2|M| consecutive score wins ---------
+        best_m = min(scores[k] for k in M)
+        best_other = min(scores[k] for k in range(N) if k not in M)
+        if best_m <= best_other:
+            st.consec += 1
+        else:
+            st.consec = 0
+        if st.consec >= 2 * len(M):
+            st.active = True
+            self.events.append({"t": now, "class": c, "event": "activate",
+                                "M": list(M)})
+            return set(M)
+        return set()

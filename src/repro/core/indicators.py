@@ -1,0 +1,115 @@
+"""Indicator factory (paper §3, Fig. 4).
+
+The factory holds one ``InstanceState`` per serving instance and exposes
+the *direct system indicators* of Fig. 2:
+
+  R-BS   running batch size
+  Q-BS   queued batch size
+  BS     R-BS + Q-BS
+  P_tokens   queued new-prefill tokens (decremented as prefill proceeds)
+  #Tokens    total context tokens resident on the instance
+  KV$        per-instance prefix-cache index (radix tree)
+
+Updates are piggybacked on instance responses in a real deployment; the
+cluster simulator and the in-process JAX engine call the same hooks.
+Derived indicators (kv_hit, p_token score inputs) are computed on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .radix import RadixKVIndex
+from .types import Request
+
+
+class InstanceState:
+    def __init__(self, iid: int, kv_capacity_tokens: int = 1 << 62,
+                 block_size: int = 64, exact_only: bool = False):
+        self.iid = iid
+        self.r_bs = 0
+        self.q_bs = 0
+        self.queued_prefill_tokens = 0
+        self.total_tokens = 0          # context tokens of resident requests
+        self.kv = RadixKVIndex(block_size=block_size,
+                               capacity_tokens=kv_capacity_tokens,
+                               exact_only=exact_only)
+        # rolling accounting for monitoring / Preble windows
+        self.routed_log: List = []     # (time, p_tokens) of routed requests
+
+    # ---- indicator reads -------------------------------------------------
+    @property
+    def bs(self) -> int:
+        return self.r_bs + self.q_bs
+
+    def kv_hit(self, req: Request, touch: bool = False) -> int:
+        return self.kv.match(req.blocks, req.prompt_len, touch=touch)
+
+    def p_token(self, req: Request, hit: Optional[int] = None) -> int:
+        """Paper Fig. 17(b): queued new-prefill tokens if routed here."""
+        if hit is None:
+            hit = self.kv_hit(req)
+        return self.queued_prefill_tokens + (req.prompt_len - hit)
+
+    # ---- update hooks (called by router / engine / simulator) ------------
+    def on_route(self, req: Request, now: float, hit: int):
+        self.q_bs += 1
+        self.queued_prefill_tokens += req.prompt_len - hit
+        self.total_tokens += req.prompt_len
+        self.routed_log.append((now, req.prompt_len - hit))
+
+    def on_prefill_progress(self, n_tokens: int):
+        self.queued_prefill_tokens = max(
+            0, self.queued_prefill_tokens - n_tokens)
+
+    def on_start_running(self, req: Request):
+        self.q_bs = max(0, self.q_bs - 1)
+        self.r_bs += 1
+
+    def on_decode_token(self):
+        self.total_tokens += 1
+
+    def on_finish(self, req: Request):
+        self.r_bs = max(0, self.r_bs - 1)
+        self.total_tokens = max(
+            0, self.total_tokens - req.prompt_len - req.output_len)
+
+    def trim_log(self, now: float, window: float):
+        log = self.routed_log
+        cut = now - window
+        k = 0
+        while k < len(log) and log[k][0] < cut:
+            k += 1
+        if k:
+            del log[:k]
+
+
+class IndicatorFactory:
+    def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
+                 block_size: int = 64, exact_only: bool = False):
+        self.instances = [
+            InstanceState(i, kv_capacity_tokens, block_size, exact_only)
+            for i in range(n_instances)]
+
+    def __len__(self):
+        return len(self.instances)
+
+    def __iter__(self):
+        return iter(self.instances)
+
+    def __getitem__(self, i) -> InstanceState:
+        return self.instances[i]
+
+    def hits_for(self, req: Request) -> List[int]:
+        return [inst.kv_hit(req) for inst in self.instances]
+
+    def snapshot(self) -> Dict[str, List]:
+        return {
+            "r_bs": [i.r_bs for i in self.instances],
+            "q_bs": [i.q_bs for i in self.instances],
+            "bs": [i.bs for i in self.instances],
+            "queued_prefill_tokens":
+                [i.queued_prefill_tokens for i in self.instances],
+            "total_tokens": [i.total_tokens for i in self.instances],
+            "kv_tokens": [i.kv.tokens_stored for i in self.instances],
+        }

@@ -1,0 +1,116 @@
+"""Analytic instance latency model (VIDUR-retrofit, paper §4.6).
+
+Serves two roles:
+
+1. **Ground truth** for the discrete-event cluster simulator: the step
+   time of a PD-colocated chunked-prefill engine iteration.
+2. **Predictor** inside simulation-based policies (llm-d, PolyServe).
+   A *well-tuned* predictor shares the ground-truth constants; an
+   *untuned* one uses another model's constants (paper Fig. 15/16 uses a
+   Qwen2-7B simulator to schedule Qwen3-30B).
+
+Step-time model for a batch of (prefill-chunk tokens P, decode batch D,
+resident context C):
+
+    t_step = c0 + c_flops * (P + D) + c_attn * (P * avg_prompt + C) .
+
+``c_flops`` derives from active-parameter FLOPs at the chip's peak;
+``c_attn`` covers KV-bandwidth-bound attention reads.  Constants per
+model are derived from our TPU-target roofline (EXPERIMENTS.md §Roofline)
+— the paper's H20 numbers are not reproducible here, but every paper
+claim is a *relative* policy comparison on equal substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    active_params: float          # per-token active parameters
+    n_layers: int
+    kv_bytes_per_token: int       # 2 * n_kv * hd * layers * 2B
+    chips: int = 1
+    chunk_tokens: int = 2048      # chunked-prefill budget per step
+    max_batch: int = 256
+    kv_capacity_tokens: int = 500_000
+    step_overhead: float = 0.004  # c0: per-step host+launch overhead (s)
+    mfu: float = 0.5              # achievable fraction of peak
+
+    @property
+    def c_flops(self) -> float:
+        return 2.0 * self.active_params / (PEAK_FLOPS * self.chips * self.mfu)
+
+    @property
+    def c_attn(self) -> float:
+        return self.kv_bytes_per_token / (HBM_BW * self.chips)
+
+
+def spec_from_config(cfg, chips: int = 1, **kw) -> EngineSpec:
+    kv_layers = sum(1 for k in cfg.block_pattern if k in ("attn", "swa",
+                                                          "xattn"))
+    kvb = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * kv_layers * 2
+    return EngineSpec(
+        name=cfg.name,
+        active_params=cfg.active_param_count(),
+        n_layers=cfg.n_layers,
+        kv_bytes_per_token=max(kvb, 64),
+        chips=chips,
+        **kw)
+
+
+class LatencyModel:
+    def __init__(self, spec: EngineSpec, error_std: float = 0.0,
+                 seed: int = 0):
+        self.spec = spec
+        self.error_std = error_std
+        self._rng_state = seed or 1
+
+    # -- deterministic cheap LCG so predictor error is reproducible -------
+    def _noise(self) -> float:
+        if not self.error_std:
+            return 1.0
+        self._rng_state = (self._rng_state * 6364136223846793005 +
+                           1442695040888963407) & ((1 << 64) - 1)
+        u = (self._rng_state >> 11) / float(1 << 53)
+        # lognormal-ish multiplicative error
+        return math.exp((u - 0.5) * 2.0 * self.error_std)
+
+    # ---------------------------------------------------------------------
+    def step_time(self, prefill_tokens: int, decode_bs: int,
+                  context_tokens: int) -> float:
+        s = self.spec
+        t = (s.step_overhead
+             + s.c_flops * (prefill_tokens + decode_bs)
+             + s.c_attn * context_tokens * (1 if decode_bs else 0)
+             + s.c_attn * prefill_tokens * 0.25)
+        return t
+
+    # ---------------------------------------------------------------------
+    def predict_ttft(self, queued_prefill_tokens: int, new_tokens: int,
+                     decode_bs: int, context_tokens: int) -> float:
+        """Expected TTFT if a request with ``new_tokens`` new prefill tokens
+        joins an instance with the given state (chunked prefill interleaved
+        with running decodes)."""
+        s = self.spec
+        todo = queued_prefill_tokens + new_tokens
+        steps = max(1, math.ceil(todo / s.chunk_tokens))
+        per_step = self.step_time(min(todo, s.chunk_tokens), decode_bs,
+                                  context_tokens)
+        return steps * per_step * self._noise()
+
+    def predict_tpot(self, decode_bs: int, context_tokens: int,
+                     queued_prefill_tokens: int = 0) -> float:
+        """Expected per-output-token time at the instance's current load."""
+        s = self.spec
+        # decode steps share the engine with queued prefill chunks
+        prefill_share = min(1.0, queued_prefill_tokens / (4 * s.chunk_tokens))
+        t = self.step_time(int(prefill_share * s.chunk_tokens),
+                           decode_bs + 1, context_tokens)
+        return t * self._noise()

@@ -1,0 +1,305 @@
+"""Scheduling policies (paper §4–§5) under one programming model.
+
+Every policy is "filter → score → select_min" over the indicator factory,
+mirroring the paper's Fig. 4 DSL.  All baselines are implemented from
+their published pseudocode:
+
+  JSQPolicy          vLLM-v1 default             (Fig. 6a)
+  LinearKVPolicy     BAILIAN linear combination  (Fig. 6b)
+  DynamoPolicy       ai-Dynamo weighted P-token + total-tokens
+  FilterKVPolicy     AIBrix filter-based         (Fig. 13)
+  SimulationPolicy   llm-d latency-based         (Fig. 14)
+  PreblePolicy       hybrid filter + linear      (Fig. 30)
+  PolyServePolicy    SLO/utilization packing     (Fig. 33)
+  LMetricPolicy      THE PAPER: P-token × BS     (Fig. 17b)
+
+LMetricPolicy exposes the §5.1 ablations via ``kv_indicator``
+("ptoken" | "one_minus_hit") and ``load_indicator`` ("bs" | "tokens")
+and hosts the §5.2 two-phase hotspot detector.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import List, Optional, Sequence
+
+from .indicators import IndicatorFactory, InstanceState
+from .latency_model import LatencyModel
+from .types import Request
+
+_EPS = 1e-9
+
+
+class Policy:
+    name = "base"
+    requires_kv = True
+
+    def __init__(self):
+        self._tie = itertools.count()
+
+    def _select_min(self, scores: Sequence[float],
+                    allowed: Optional[Sequence[int]] = None) -> int:
+        idx = range(len(scores)) if allowed is None else allowed
+        best = min(scores[i] for i in idx)
+        ties = [i for i in idx if scores[i] <= best + _EPS]
+        return ties[next(self._tie) % len(ties)]
+
+    def route(self, req: Request, factory: IndicatorFactory,
+              now: float) -> int:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+# ---------------------------------------------------------------------------
+class JSQPolicy(Policy):
+    """vLLM-v1: score = 4*Q-BS + R-BS (Fig. 6a). KV$-unaware."""
+    name = "vllm"
+    requires_kv = False
+
+    def route(self, req, factory, now):
+        scores = [4.0 * i.q_bs + i.r_bs for i in factory]
+        return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class LinearKVPolicy(Policy):
+    """BAILIAN: λ·(1 − kv_hit_ratio) + (1−λ)·norm(BS) (Fig. 6b)."""
+    name = "linear"
+
+    def __init__(self, lam: float = 0.7):
+        super().__init__()
+        self.lam = lam
+        self.name = f"linear(λ={lam})"
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        max_bs = max(max(i.bs for i in factory), 1)
+        L = max(req.prompt_len, 1)
+        scores = [self.lam * (1.0 - hits[k] / L)
+                  + (1.0 - self.lam) * (inst.bs / max_bs)
+                  for k, inst in enumerate(factory)]
+        return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class DynamoPolicy(Policy):
+    """ai-Dynamo: weighted, normalised P-token + total-tokens (§6.1)."""
+    name = "dynamo"
+
+    def __init__(self, lam: float = 0.5):
+        super().__init__()
+        self.lam = lam
+        self.name = f"dynamo(λ={lam})"
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        pt = [inst.p_token(req, hits[k]) for k, inst in enumerate(factory)]
+        tt = [inst.total_tokens for inst in factory]
+        mp, mt = max(max(pt), 1), max(max(tt), 1)
+        scores = [self.lam * pt[k] / mp + (1 - self.lam) * tt[k] / mt
+                  for k in range(len(factory))]
+        return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class FilterKVPolicy(Policy):
+    """AIBrix prefix-cache policy (Fig. 13)."""
+    name = "filter"
+
+    def __init__(self, bs_range: int = 8):
+        super().__init__()
+        self.bs_range = bs_range
+        self.name = f"filter(range={bs_range})"
+
+    def route(self, req, factory, now):
+        bss = [i.bs for i in factory]
+        if max(bss) - min(bss) > self.bs_range:            # load balance
+            return self._select_min(bss)
+        hits = factory.hits_for(req)                       # KV$-awareness
+        best = max(hits)
+        cand = [k for k, h in enumerate(hits) if h >= best]
+        return self._select_min(bss, allowed=cand)
+
+
+# ---------------------------------------------------------------------------
+class SimulationPolicy(Policy):
+    """llm-d: route to min simulator-predicted TTFT (Fig. 14)."""
+    name = "llm-d"
+
+    def __init__(self, model: LatencyModel, kv_aware: bool = True):
+        super().__init__()
+        self.model = model
+        self.kv_aware = kv_aware
+        self.name = "llm-d" + ("" if kv_aware else "-nokv")
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req) if self.kv_aware else [0] * len(factory)
+        scores = []
+        for k, inst in enumerate(factory):
+            new = req.prompt_len - hits[k]
+            scores.append(self.model.predict_ttft(
+                inst.queued_prefill_tokens, new, inst.r_bs,
+                inst.total_tokens))
+        return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class PreblePolicy(Policy):
+    """Preble (Fig. 30): KV$ filter on hit ratio T, else 3-min-window
+    linear fallback  α·Σ P-token + β·Σ BS."""
+    name = "preble"
+
+    def __init__(self, T: float = 0.5, alpha: float = 1.0,
+                 beta: float = 100.0, window: float = 180.0):
+        super().__init__()
+        self.T = T
+        self.alpha = alpha
+        self.beta = beta
+        self.window = window
+        self.name = f"preble(T={T})"
+        self.branch_counts = {"kv": 0, "fallback": 0}
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        L = max(req.prompt_len, 1)
+        best = max(hits) / L
+        if best > self.T:
+            self.branch_counts["kv"] += 1
+            cand = [k for k, h in enumerate(hits) if h / L >= best - _EPS]
+            pts = [factory[k].p_token(req, hits[k]) for k in range(
+                len(factory))]
+            return self._select_min(pts, allowed=cand)
+        self.branch_counts["fallback"] += 1
+        scores = []
+        for inst in factory:
+            inst.trim_log(now, self.window)
+            sum_pt = sum(p for _, p in inst.routed_log)
+            n = len(inst.routed_log)
+            scores.append(self.alpha * sum_pt + self.beta * n)
+        return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class PolyServePolicy(Policy):
+    """PolyServe (Fig. 33): pack the most-loaded instance that still meets
+    (SLO_TTFT, SLO_TPOT); else min predicted TPOT."""
+    name = "polyserve"
+
+    def __init__(self, model: LatencyModel, slo_ttft: float = 2.0,
+                 slo_tpot: float = 0.020):
+        super().__init__()
+        self.model = model
+        self.slo_ttft = slo_ttft
+        self.slo_tpot = slo_tpot
+        self.name = f"polyserve(τ={slo_tpot * 1e3:.0f}ms)"
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        ttfts, tpots = [], []
+        for k, inst in enumerate(factory):
+            new = req.prompt_len - hits[k]
+            ttfts.append(self.model.predict_ttft(
+                inst.queued_prefill_tokens, new, inst.r_bs,
+                inst.total_tokens))
+            tpots.append(self.model.predict_tpot(
+                inst.r_bs, inst.total_tokens, inst.queued_prefill_tokens))
+        feasible = [k for k in range(len(factory))
+                    if ttfts[k] <= self.slo_ttft and tpots[k] <= self.slo_tpot]
+        if not feasible:                         # load-balancing branch
+            return self._select_min(tpots)
+        # utilization branch: MOST loaded feasible instance
+        neg = [-tpots[k] for k in range(len(factory))]
+        return self._select_min(neg, allowed=feasible)
+
+
+# ---------------------------------------------------------------------------
+class LMetricPolicy(Policy):
+    """THE PAPER (Fig. 17b):  route to argmin  P-token_i × (BS_i + 1).
+
+    kv_indicator:  "ptoken" (paper) | "one_minus_hit" (§5.1 ablation)
+    load_indicator: "bs" (paper) | "tokens" (§5.1 ablation) |
+                    "cost" (BEYOND-PAPER: predicted decode step time from
+                    the physical latency model — still tuning-free, no
+                    workload hyperparameter; needs ``latency_model``)
+    detector: optional two-phase KV$-hotspot detector (§5.2); when it
+    fires, suspected instances are filtered and the policy degrades to
+    load-balance-only over the remainder, per the paper's retrofit.
+    """
+    name = "lmetric"
+
+    def __init__(self, kv_indicator: str = "ptoken",
+                 load_indicator: str = "bs", detector=None,
+                 latency_model: Optional[LatencyModel] = None):
+        super().__init__()
+        assert kv_indicator in ("ptoken", "one_minus_hit")
+        assert load_indicator in ("bs", "tokens", "cost")
+        if load_indicator == "cost":
+            assert latency_model is not None
+        self.kv_indicator = kv_indicator
+        self.load_indicator = load_indicator
+        self.latency_model = latency_model
+        self.detector = detector
+        if kv_indicator == "ptoken" and load_indicator == "bs":
+            self.name = "lmetric"
+        else:
+            self.name = f"lmetric[{kv_indicator}×{load_indicator}]"
+
+    def scores(self, req, factory, hits):
+        L = max(req.prompt_len, 1)
+        out = []
+        for k, inst in enumerate(factory):
+            if self.kv_indicator == "ptoken":
+                a = inst.p_token(req, hits[k]) + 1.0
+            else:
+                a = 1.0 - hits[k] / L + 1e-3
+            if self.load_indicator == "bs":
+                b = inst.bs + 1.0
+            elif self.load_indicator == "cost":
+                # physical decode-step cost at this instance's load
+                b = self.latency_model.step_time(
+                    0, inst.bs + 1, inst.total_tokens) * 1e3
+            else:
+                b = inst.total_tokens + 1.0
+            out.append(a * b)
+        return out
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        scores = self.scores(req, factory, hits)
+        excluded = set()
+        if self.detector is not None:
+            excluded = self.detector.observe(req, factory, hits, scores, now)
+        allowed = [k for k in range(len(factory)) if k not in excluded]
+        if not allowed:
+            allowed = list(range(len(factory)))
+        if excluded:
+            # mitigation: fall back to load-balance-only over remainder
+            bss = [factory[k].bs for k in range(len(factory))]
+            return self._select_min(bss, allowed=allowed)
+        return self._select_min(scores, allowed=allowed)
+
+
+def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
+                **kw) -> Policy:
+    name = name.lower()
+    if name in ("vllm", "jsq"):
+        return JSQPolicy()
+    if name in ("linear", "bailian"):
+        return LinearKVPolicy(**kw)
+    if name == "dynamo":
+        return DynamoPolicy(**kw)
+    if name in ("filter", "aibrix"):
+        return FilterKVPolicy(**kw)
+    if name in ("llm-d", "simulation"):
+        assert latency_model is not None
+        return SimulationPolicy(latency_model, **kw)
+    if name == "preble":
+        return PreblePolicy(**kw)
+    if name == "polyserve":
+        assert latency_model is not None
+        return PolyServePolicy(latency_model, **kw)
+    if name == "lmetric":
+        return LMetricPolicy(**kw)
+    raise KeyError(name)

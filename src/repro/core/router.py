@@ -1,0 +1,66 @@
+"""Global scheduler (paper Fig. 3): filter → score → route.
+
+The router owns the indicator factory and a policy; instance engines
+(simulated or real) push state updates through the factory hooks —
+piggybacked on responses in a real deployment.  Per-decision latency is
+recorded (the paper's §3 highlights router-implementation overhead).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+from .indicators import IndicatorFactory
+from .policies import Policy
+from .types import Request
+
+
+class Router:
+    def __init__(self, policy: Policy, n_instances: int,
+                 kv_capacity_tokens: int = 1 << 62, block_size: int = 64,
+                 exact_only: bool = False,
+                 insert_on_route: bool = True):
+        self.policy = policy
+        self.factory = IndicatorFactory(
+            n_instances, kv_capacity_tokens=kv_capacity_tokens,
+            block_size=block_size, exact_only=exact_only)
+        self.insert_on_route = insert_on_route
+        self.decision_ns: List[int] = []
+        self.routed = 0
+
+    # ------------------------------------------------------------------
+    def route(self, req: Request, now: float) -> int:
+        t0 = time.perf_counter_ns()
+        iid = self.policy.route(req, self.factory, now)
+        self.decision_ns.append(time.perf_counter_ns() - t0)
+        inst = self.factory[iid]
+        hit = inst.kv_hit(req, touch=True)
+        req.sched_to = iid
+        req.hit_tokens = hit
+        req.t_sched = now
+        inst.on_route(req, now, hit)
+        if self.insert_on_route:
+            # prefill will materialise this KV$ promptly; index it now so
+            # follow-up requests in the same class see the hit.
+            inst.kv.insert(req.blocks)
+        self.routed += 1
+        return iid
+
+    # ---- response piggyback hooks ------------------------------------
+    def on_prefill_progress(self, iid: int, n_tokens: int):
+        self.factory[iid].on_prefill_progress(n_tokens)
+
+    def on_start_running(self, iid: int, req: Request):
+        self.factory[iid].on_start_running(req)
+
+    def on_decode_token(self, iid: int):
+        self.factory[iid].on_decode_token()
+
+    def on_finish(self, iid: int, req: Request):
+        self.factory[iid].on_finish(req)
+
+    # ------------------------------------------------------------------
+    def mean_decision_us(self) -> float:
+        if not self.decision_ns:
+            return 0.0
+        return sum(self.decision_ns) / len(self.decision_ns) / 1e3

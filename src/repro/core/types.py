@@ -1,0 +1,36 @@
+"""Shared request / response types for the scheduling framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival: float                 # seconds since trace start
+    blocks: Tuple[int, ...]        # prompt as block ids (block_size tokens each)
+    prompt_len: int                # true prompt length in tokens
+    output_len: int                # decode tokens to generate
+    class_id: int = -1             # request class (shared-prefix group)
+
+    # ---- runtime bookkeeping (filled by sim/engine) ----
+    sched_to: int = -1
+    hit_tokens: int = 0
+    t_sched: float = 0.0
+    t_first_token: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def new_tokens(self) -> int:
+        return self.prompt_len - self.hit_tokens
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.output_len <= 1:
+            return 0.0
+        return (self.t_finish - self.t_first_token) / (self.output_len - 1)

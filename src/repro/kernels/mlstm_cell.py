@@ -1,0 +1,98 @@
+"""Fused mLSTM chunk cell — Pallas TPU kernel.
+
+One stabilised chunkwise-parallel mLSTM step per (batch, head): the
+(L,L) intra-chunk decay/score matrix, the inter-chunk contribution from
+the carried matrix memory C, and the end-of-chunk state update — all in
+one VMEM-resident kernel (the jnp model path materialises the same math
+across several HLO ops; fusing keeps the (L,hd) tiles and the (hd,hd)
+memory on-chip for the whole cell).
+
+Chunk-level sequencing stays in a host-side ``lax.scan`` over this
+kernel, exactly like the model's chunkwise prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
+            h_ref, c_ref, n_ref, m_ref, *, L: int):
+    q = q_ref[0, 0].astype(jnp.float32)        # (L, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    ilog = i_ref[0, 0].astype(jnp.float32)     # (L, 1)
+    flog = f_ref[0, 0].astype(jnp.float32)
+    C0 = c0_ref[0, 0].astype(jnp.float32)      # (hd, hd)
+    n0 = n0_ref[0, 0].astype(jnp.float32)      # (1, hd)
+    m0 = m0_ref[0, 0].astype(jnp.float32)      # (1, 1)
+
+    b = jnp.cumsum(flog, axis=0)               # (L,1)
+    dmat = b - b.T + ilog.T                    # (L,L): b_t - b_s + i_s
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dmat = jnp.where(rows >= cols, dmat, NEG_INF)
+    inter = b + m0                             # (L,1)
+    m_t = jnp.maximum(inter, jnp.max(dmat, axis=1, keepdims=True))
+    w_intra = jnp.exp(dmat - m_t)              # (L,L)
+    w_inter = jnp.exp(inter - m_t)             # (L,1)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * w_intra
+    h_num = (jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())))
+             + jax.lax.dot_general(q, C0, (((1,), (0,)), ((), ())))
+             * w_inter)
+    denom = (jnp.sum(scores, axis=1, keepdims=True)
+             + jax.lax.dot_general(q, n0.T, (((1,), (0,)), ((), ())))
+             * w_inter)
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+    h_ref[0, 0] = (h_num / denom).astype(h_ref.dtype)
+
+    bL = b[L - 1:L]                            # (1,1)
+    src = bL - b + ilog                        # (L,1)
+    m_new = jnp.maximum(bL + m0, jnp.max(src, axis=0, keepdims=True))
+    w_old = jnp.exp(bL + m0 - m_new)           # (1,1)
+    w_src = jnp.exp(src - m_new)               # (L,1)
+    kw = k * w_src
+    c_ref[0, 0] = (C0 * w_old + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())))).astype(c_ref.dtype)
+    n_ref[0, 0] = (n0 * w_old + jnp.sum(kw, axis=0,
+                                        keepdims=True)).astype(n_ref.dtype)
+    m_ref[0, 0] = m_new.astype(m_ref.dtype)
+
+
+def mlstm_chunk(q, k, v, ilog, flog, C0, n0, m0, *, interpret: bool = True):
+    """q,k,v: (B,L,H,hd); ilog,flog: (B,L,H); C0: (B,H,hd,hd);
+    n0: (B,H,hd); m0: (B,H).  Returns (h (B,L,H,hd), (C, n, m))."""
+    B, L, H, hd = q.shape
+    tr = lambda t: t.transpose(0, 2, 1, 3)       # (B,H,L,hd)
+    qx, kx, vx = tr(q), tr(k), tr(v)
+    ix = ilog.transpose(0, 2, 1)[..., None]      # (B,H,L,1)
+    fx = flog.transpose(0, 2, 1)[..., None]
+    n0x = n0[:, :, None, :]                      # (B,H,1,hd)
+    m0x = m0[:, :, None, None]                   # (B,H,1,1)
+
+    grid = (B, H)
+    bh = lambda b, h: (b, h, 0, 0)
+    spec = lambda s1, s2: pl.BlockSpec((1, 1, s1, s2), bh)
+    h, C, n, m = pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=grid,
+        in_specs=[spec(L, hd), spec(L, hd), spec(L, hd),
+                  spec(L, 1), spec(L, 1),
+                  spec(hd, hd), spec(1, hd), spec(1, 1)],
+        out_specs=[spec(L, hd), spec(hd, hd), spec(1, hd), spec(1, 1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qx, kx, vx, ix, fx, C0, n0x, m0x)
+    return (h.transpose(0, 2, 1, 3),
+            (C, n[:, :, 0], m[:, :, 0, 0]))

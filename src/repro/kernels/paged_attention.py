@@ -1,0 +1,111 @@
+"""Paged decode attention — Pallas TPU kernel.
+
+The serving engine's decode hot path: one query token per sequence
+attending over a block-table-paged KV cache.  TPU adaptation of vLLM's
+PagedAttention (DESIGN.md §3): instead of per-warp gather, the block
+table rides in scalar-prefetch SMEM and drives the ``index_map`` of the
+K/V page BlockSpecs, so each grid step DMA-gathers exactly one
+(page_size, hd) KV tile HBM→VMEM; the (G, hd) query tile stays resident
+in VMEM across the page loop and the online-softmax running state lives
+in VMEM scratch.  MXU alignment comes from hd ∈ {64,128,256} and
+page_size multiples of 8.
+
+Grid: (B, KV, n_pages)  — page loop innermost (sequential, carries the
+online softmax).  GQA handled by reshaping q to (B, KV, G, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_tables, context_lens,         # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,                # VMEM tiles
+            o_ref,                              # output tile
+            m_ref, l_ref, acc_ref,              # VMEM scratch
+            *, page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = context_lens[b]
+    valid_in_page = ctx - p * page_size        # tokens valid in this page
+
+    @pl.when(valid_in_page > 0)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)     # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s / math.sqrt(q.shape[-1])             # (G, page)
+        idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(idx < valid_in_page, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]    # (G,1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p_ = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p_, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p_, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
+                    *, interpret: bool = True):
+    """q: (B, H, hd); k_pages/v_pages: (n_total_pages, page_size, KV, hd);
+    block_tables: (B, pages_per_seq) int32; context_lens: (B,) int32.
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    n_total, page_size, KV, _ = k_pages.shape
+    G = H // KV
+    n_pages = block_tables.shape[1]
+    qg = q.reshape(B, KV, G, hd)
+
+    grid = (B, KV, n_pages)
+
+    def q_map(b, kv, p, *_):
+        return (b, kv, 0, 0)
+
+    def kv_map(b, kv, p, block_tables, context_lens):
+        return (block_tables[b, p], 0, kv, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, page_size=page_size, n_pages=n_pages),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), q_map),
+                pl.BlockSpec((1, page_size, 1, hd), kv_map),
+                pl.BlockSpec((1, page_size, 1, hd), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)

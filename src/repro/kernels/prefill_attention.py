@@ -1,0 +1,136 @@
+"""Chunked-prefill flash attention — Pallas TPU kernel.
+
+The engine's prefill hot path with KV$-hit compute skip: the query chunk
+holds only the NEW tokens (positions offset by the cached-prefix length
+``kv_offset``), while K/V span cached prefix + chunk.  Causality is
+enforced against absolute positions, so a prefix hit genuinely removes
+query rows — the kernel never touches them.
+
+Flash-style online softmax: grid (B, KV, n_q_blocks, n_kv_blocks), KV
+block loop innermost (sequential) carrying (m, l, acc) in VMEM scratch.
+Query tiles are (bq·G, hd) — GQA groups folded into MXU rows.  Fully
+non-causal KV blocks are skipped via ``pl.when`` (no MXU work issued).
+Optional sliding window for the swa/local-attention archs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kv_offset,                     # scalar prefetch (B,)
+            q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, n_kv_blocks: int, window, sk: int):
+    b = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = kv_offset[b]
+    q_lo = off + qi * bq                   # absolute position of q row 0
+    k_lo = ki * bk
+    # block-level causal/window culling
+    reachable = k_lo <= q_lo + bq - 1
+    if window is not None:
+        reachable &= (k_lo + bk - 1) > (q_lo - window)
+
+    @pl.when(reachable)
+    def _attend():
+        G = q_ref.shape[3]
+        hd = q_ref.shape[4]
+        q = q_ref[0, 0].reshape(bq * G, hd).astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s / math.sqrt(hd)                        # (bq*G, bk)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bq * G, bk), 0) // G
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bq * G, bk), 1)
+        qpos = q_lo + rows
+        kpos = k_lo + cols
+        mask = (kpos <= qpos) & (kpos < sk)
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        G = q_ref.shape[3]
+        hd = q_ref.shape[4]
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).reshape(bq, G, hd).astype(
+            o_ref.dtype)
+
+
+def flash_prefill(q, k, v, kv_offset, *, window=None, block_q: int = 128,
+                  block_k: int = 128, interpret: bool = True):
+    """q: (B,Sq,H,hd) new-token chunk; k/v: (B,Sk,KV,hd) cached prefix +
+    chunk; kv_offset: (B,) cached-prefix lengths. Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sqp, Skp = Sq + pad_q, Sk + pad_k
+    # layouts: q (B,KV,Sq,G,hd); k/v (B,KV,Sk,hd)
+    qx = q.reshape(B, Sqp, KV, G, hd).transpose(0, 2, 1, 3, 4)
+    kx = k.transpose(0, 2, 1, 3)
+    vx = v.transpose(0, 2, 1, 3)
+    n_q, n_k = Sqp // bq, Skp // bk
+    grid = (B, KV, n_q, n_k)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv_blocks=n_k,
+                          window=window, sk=Sk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, G, hd),
+                             lambda b, kv, qi, ki, *_: (b, kv, qi, 0, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda b, kv, qi, ki, *_: (b, kv, ki, 0)),
+                pl.BlockSpec((1, 1, bk, hd),
+                             lambda b, kv, qi, ki, *_: (b, kv, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, G, hd),
+                                   lambda b, kv, qi, ki, *_:
+                                   (b, kv, qi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq * G, 1), jnp.float32),
+                pltpu.VMEM((bq * G, 1), jnp.float32),
+                pltpu.VMEM((bq * G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, Sqp, G, hd), q.dtype),
+        interpret=interpret,
+    )(kv_offset, qx, kx, vx)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(B, Sqp, H, hd)
+    return out[:, :Sq]

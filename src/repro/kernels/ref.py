@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the shape/dtype-sweep tests assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """Gather pages then do masked attention. q: (B,H,hd)."""
+    B, H, hd = q.shape
+    _, page_size, KV, _ = k_pages.shape
+    G = H // KV
+    n_pages = block_tables.shape[1]
+    k = k_pages[block_tables]        # (B, n_pages, page, KV, hd)
+    v = v_pages[block_tables]
+    S = n_pages * page_size
+    k = k.reshape(B, S, KV, hd).astype(jnp.float32)
+    v = v.reshape(B, S, KV, hd).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k) / math.sqrt(hd)
+    mask = jnp.arange(S)[None] < context_lens[:, None]
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v)
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def flash_prefill_ref(q, k, v, kv_offset, window=None):
+    """Causal attention where q position i (absolute i + kv_offset) attends
+    kv positions j <= i + kv_offset.  q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd).
+    kv_offset: (B,) cached-prefix lengths."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = kv_offset[:, None] + jnp.arange(Sq)[None]          # (B,Sq)
+    mask = qpos[:, :, None] >= jnp.arange(Sk)[None, None]     # (B,Sq,Sk)
+    if window is not None:
+        mask &= (qpos[:, :, None] - jnp.arange(Sk)[None, None]) < window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(a, x, h0):
+    """h_t = a_t * h_{t-1} + x_t, h_0 given.  a,x: (B,S,D); h0: (B,D).
+    Returns (h (B,S,D), h_last (B,D)) in f32."""
+    def step(h, ax):
+        a_t, x_t = ax
+        h = a_t * h + x_t
+        return h, h
+    hlast, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.swapaxes(0, 1).astype(jnp.float32),
+         x.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1), hlast
+
+
+def mlstm_chunk_ref(q, k, v, ilog, flog, C0, n0, m0):
+    """One stabilised mLSTM chunk (the oracle for the fused cell kernel).
+    q,k,v: (B,L,H,hd); ilog,flog: (B,L,H); carries C0 (B,H,hd,hd),
+    n0 (B,H,hd), m0 (B,H).  Returns h (B,L,H,hd), (C,n,m)."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    b = jnp.cumsum(flog, axis=1)
+    dmat = b[:, :, None] - b[:, None, :, :] + ilog[:, None, :, :]
+    L = dmat.shape[1]
+    tidx = jnp.arange(L)
+    dmat = jnp.where((tidx[:, None] >= tidx[None, :])[None, :, :, None],
+                     dmat, -1e30)
+    inter = b + m0[:, None]
+    m_t = jnp.maximum(inter, dmat.max(axis=2))
+    w_intra = jnp.exp(dmat - m_t[:, :, None])
+    w_inter = jnp.exp(inter - m_t)
+    scores = jnp.einsum("blhd,bshd->blsh", qf, kf) * w_intra
+    h_num = (jnp.einsum("blsh,bshd->blhd", scores, vf)
+             + jnp.einsum("blhd,bhde->blhe", qf, C0) * w_inter[..., None])
+    denom = (scores.sum(axis=2)
+             + jnp.einsum("blhd,bhd->blh", qf, n0) * w_inter)
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+    h = h_num / denom[..., None]
+    bL = b[:, -1]
+    m_new = jnp.maximum(bL + m0, (bL[:, None] - b + ilog).max(axis=1))
+    w_old = jnp.exp(bL + m0 - m_new)
+    w_src = jnp.exp(bL[:, None] - b + ilog - m_new[:, None])
+    C = (C0 * w_old[..., None, None]
+         + jnp.einsum("blh,blhd,blhe->bhde", w_src, kf, vf))
+    n = n0 * w_old[..., None] + jnp.einsum("blh,blhd->bhd", w_src, kf)
+    return h.astype(q.dtype), (C, n, m_new)

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this builds the jit'd step (train_step / prefill /
+decode) with full production shardings, lowers it against
+ShapeDtypeStruct inputs (no allocation), compiles it, and records:
+
+  memory_analysis()   -> per-device bytes (proves it fits)
+  cost_analysis()     -> HLO FLOPs / bytes for §Roofline
+  compiled.as_text()  -> collective wire bytes (launch.hlo)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs-file f.txt]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import hlo
+from repro.launch.mesh import fsdp_axes, make_production_mesh
+from repro.launch.shapes import (INPUT_SHAPES, analytic_flops, input_specs,
+                                 model_flops, resolve_arch_for_shape)
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   opt_shardings, param_shardings)
+from repro.models import Model
+from repro.training.optim import OptimizerConfig, adamw_init
+from repro.training.train_loop import make_train_step
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  remat: bool = True, extra_tag: str = ""):
+    cfg = get_config(arch)
+    cfg, skip = resolve_arch_for_shape(cfg, shape_name)
+    if skip:
+        return None, skip, cfg
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = fsdp_axes(multi_pod)
+    batch_axes = fsdp
+    model = Model(cfg)
+    from repro.models.model import set_activation_sharding
+    from repro.models.sharding_hooks import set_sequence_parallel
+    set_activation_sharding(mesh, batch_axes)
+    set_sequence_parallel(os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1")
+    specs = input_specs(cfg, shape_name)
+    params_shape = model.abstract_params()
+    pshard = param_shardings(params_shape, mesh, fsdp)
+
+    with mesh:
+        if specs["kind"] == "train":
+            opt_cfg = OptimizerConfig(moment_dtype=cfg.opt_state_dtype)
+            opt_shape = jax.eval_shape(
+                lambda p: adamw_init(p, opt_cfg), params_shape)
+            oshard = opt_shardings(opt_shape, pshard, mesh)
+            bshard = batch_shardings(specs["batch"], mesh, batch_axes)
+            # §Perf it#8: big models micro-batch (activation peak /4)
+            accum = 4 if cfg.param_count() > 3e10 else 1
+            step = make_train_step(model, opt_cfg, remat=remat,
+                                   accum_steps=accum)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, specs["batch"])
+        elif specs["kind"] == "prefill":
+            bshard = batch_shardings(specs["batch"], mesh, batch_axes)
+
+            def prefill(params, batch):
+                logits, cache = model.prefill(params, batch["tokens"],
+                                              batch, last_only=True)
+                return logits[:, 0], cache
+
+            jitted = jax.jit(prefill, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_shape, specs["batch"])
+        else:  # decode
+            cshard = cache_shardings(specs["cache"], mesh, batch_axes)
+            tshard = batch_shardings(
+                {"t": specs["token"], "p": specs["pos"]}, mesh, batch_axes)
+
+            def decode(params, token, pos, cache):
+                return model.decode_step(params, token, pos, cache)
+
+            jitted = jax.jit(decode,
+                             in_shardings=(pshard, tshard["t"],
+                                           tshard["p"], cshard),
+                             out_shardings=(None, cshard),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(params_shape, specs["token"],
+                                   specs["pos"], specs["cache"])
+    return lowered, None, cfg
+
+
+def roofline_terms(flops, bytes_acc, coll_bytes):
+    """Three per-device roofline terms in seconds (HLO stats are already
+    per-device post-SPMD)."""
+    return {
+        "t_compute": flops / PEAK_FLOPS,
+        "t_memory": bytes_acc / HBM_BW,
+        "t_collective": coll_bytes / ICI_BW,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            remat: bool = True, tag: str = "", save: bool = True):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_dev = 512 if multi_pod else 256
+    key = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "ok": False}
+    t0 = time.time()
+    try:
+        lowered, skip, cfg = build_lowered(arch, shape_name, multi_pod,
+                                           remat=remat)
+        if skip:
+            rec.update(skipped=skip, ok=True)
+            print(f"[dryrun] {key}: SKIP ({skip})")
+        else:
+            rec["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t1
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                               + getattr(mem, "output_size_in_bytes", 0)
+                               + getattr(mem, "temp_size_in_bytes", 0)
+                               - getattr(mem, "alias_size_in_bytes", 0)),
+            }
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            # raw XLA numbers (scan bodies counted ONCE — recorded for
+            # reference, not used for the roofline; see launch/hlo.py)
+            rec["xla_flops_raw"] = float(cost.get("flops", 0.0))
+            rec["xla_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+            txt = compiled.as_text()
+            ana = hlo.analyze(txt, n_dev)        # loop-aware
+            coll = ana["collectives"]
+            rec["hlo_ops"] = txt.count("\n")
+            rec["collectives"] = coll
+            rec["memory_traffic_bytes"] = ana["memory_traffic_bytes"]
+            rec["loops"] = ana["loops"][:8]
+            rec["model_flops"] = model_flops(cfg, shape_name)
+            rec["analytic_flops"] = analytic_flops(cfg, shape_name)
+            rec["flops_per_device"] = rec["analytic_flops"] / n_dev
+            rec["model_flops_per_device"] = rec["model_flops"] / n_dev
+            terms = roofline_terms(rec["flops_per_device"],
+                                   ana["memory_traffic_bytes"],
+                                   coll["total"])
+            rec["roofline"] = terms
+            dom = max(terms, key=terms.get)
+            rec["dominant"] = dom
+            rec["useful_flops_ratio"] = (rec["model_flops"]
+                                         / max(rec["analytic_flops"], 1.0))
+            rec["ok"] = True
+            print(f"[dryrun] {key}: OK compile={rec['compile_s']:.1f}s "
+                  f"peak={rec['memory']['peak_bytes'] / 2**30:.2f}GiB/dev "
+                  f"compute={terms['t_compute'] * 1e3:.2f}ms "
+                  f"mem={terms['t_memory'] * 1e3:.2f}ms "
+                  f"coll={terms['t_collective'] * 1e3:.2f}ms "
+                  f"dom={dom[2:]}")
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {key}: FAIL {rec['error']}")
+    rec["total_s"] = time.time() - t0
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, key + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    jobs = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in INPUT_SHAPES:
+                jobs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        jobs.append((args.arch, args.shape))
+    for a, s in jobs:
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        out = os.path.join(RESULTS_DIR,
+                           f"{a}__{s}__{mesh_name}{args.tag}.json")
+        if not args.force and os.path.exists(out):
+            with open(out) as f:
+                if json.load(f).get("ok"):
+                    print(f"[dryrun] {a}__{s}__{mesh_name}: cached OK")
+                    continue
+        run_one(a, s, multi_pod=args.multi_pod,
+                remat=not args.no_remat, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""HLO text analysis: loop-aware traffic extraction for the roofline.
+
+``compiled.as_text()`` (post-SPMD, per-device shapes) is parsed into
+computations; while loops (scan lowerings) are attributed their trip
+count (largest integer constant in the loop condition — exact for scan),
+and nested loops multiply.  XLA's ``cost_analysis`` counts a while body
+ONCE, so without this correction a 95-layer scanned model under-reports
+flops/collectives by ~95× (EXPERIMENTS.md §Perf it#0 shows the raw
+numbers for comparison).
+
+Outputs per-device estimates of:
+  * collective wire bytes per op type (ring-algorithm factors)
+  * memory traffic (≈ 2× result bytes of non-trivial ops at fusion
+    granularity — operands of a fused kernel are other kernels' results,
+    so read+write ≈ 2× writes; documented approximation)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_COMP_HDR = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_REFS = re.compile(r"(condition|body)=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_REFS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_ITER_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "while", "conditional", "call", "custom-call",
+             # in-place buffer update (XLA aliases it inside loops):
+             # traffic is the (small) update operand, not the result —
+             # counting the full KV-cache-sized result would dominate
+             # every decode roofline with phantom bytes
+             "dynamic-update-slice"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITER_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _wire_bytes(op: str, size: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return size * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * size * (g - 1) / g
+    if op == "reduce-scatter":
+        return size * (g - 1)
+    if op == "all-to-all":
+        return size * (g - 1) / g
+    return float(size)   # collective-permute
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.lines: List[str] = []
+        self.whiles: List[Tuple[str, str, int]] = []  # (cond, body, trip|0)
+        self.fusion_calls: List[str] = []
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, "_Comp"], str]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = _Comp(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cur.lines.append(line)
+        if " while(" in line:
+            refs = dict()
+            for kind, name in _WHILE_REFS.findall(line):
+                refs[kind] = name
+            mt = _TRIP_RE.search(line)
+            trip = int(mt.group(1)) if mt else 0
+            if "condition" in refs and "body" in refs:
+                cur.whiles.append((refs["condition"], refs["body"], trip))
+        for name in _CALLS_REFS.findall(line):
+            cur.fusion_calls.append(name)
+    return comps, entry
+
+
+def _trip_count(comp: _Comp) -> int:
+    best = 1
+    for line in comp.lines:
+        for c in _CONST_INT.findall(line):
+            v = int(c)
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def analyze(text: str, n_devices: int) -> Dict:
+    """Loop-aware per-device traffic analysis of post-SPMD HLO."""
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return {"collectives": {k: 0.0 for k in _COLL} | {"total": 0.0},
+                "memory_traffic_bytes": 0.0, "loops": []}
+
+    coll = {k: 0.0 for k in _COLL}
+    counts = {k: 0 for k in _COLL}
+    mem_traffic = 0.0
+    loops: List[Dict] = []
+    visited_stack = []
+
+    def walk(name: str, multiplier: float):
+        nonlocal mem_traffic
+        comp = comps.get(name)
+        if comp is None or name in visited_stack:
+            return
+        visited_stack.append(name)
+        # map cond->trip for whiles: exact backend_config trip count when
+        # present, else largest constant in the loop condition
+        trips = {}
+        for cond, body, trip in comp.whiles:
+            t = trip or (_trip_count(comps[cond]) if cond in comps else 1)
+            trips[body] = t
+            loops.append({"body": body, "trip": t,
+                          "multiplier": multiplier})
+        for line in comp.lines:
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            op = m.group("op")
+            shape = m.group("shape")
+            if op in _COLL or (op.endswith("-start")
+                               and op[:-6] in _COLL):
+                base = op[:-6] if op.endswith("-start") else op
+                size = _shape_bytes(shape)
+                g = _group_size(line, n_devices)
+                coll[base] += _wire_bytes(base, size, g) * multiplier
+                counts[base] += 1
+                continue
+            if op.endswith("-done") or op in _SKIP_OPS:
+                continue
+            mem_traffic += 2.0 * _shape_bytes(shape) * multiplier
+        for cond, body, _ in comp.whiles:
+            walk(body, multiplier * trips.get(body, 1))
+        visited_stack.pop()
+
+    walk(entry, 1.0)
+    coll_total = sum(coll.values())
+    return {
+        "collectives": {**coll, "total": coll_total, "counts": counts},
+        "memory_traffic_bytes": mem_traffic,
+        "loops": loops[:32],
+    }
+
+
+# backwards-compatible simple interface -----------------------------------
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    return analyze(hlo_text, n_devices)["collectives"]

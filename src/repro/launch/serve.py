@@ -1,0 +1,67 @@
+"""Serving launcher: N in-process engine instances + the LMETRIC router.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_4b \
+      --instances 4 --requests 40 --policy lmetric
+
+Decode shapes at production scale are exercised by the dry-run
+(`--dry-run` delegates); this launcher serves a reduced model for real.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_4b")
+    ap.add_argument("--instances", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--policy", default="lmetric",
+                    choices=["lmetric", "vllm", "linear"])
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape, "--force"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=dict(os.environ)))
+
+    import jax
+    import numpy as np
+
+    from repro.cluster.metrics import fmt_row, summarize
+    from repro.configs import get_config
+    from repro.core import JSQPolicy, LinearKVPolicy, LMetricPolicy
+    from repro.models import Model
+    from repro.serving.engine import EngineCluster
+
+    cfg = get_config(args.arch + "-smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    pol = {"lmetric": LMetricPolicy, "vllm": JSQPolicy,
+           "linear": LinearKVPolicy}[args.policy]()
+    cluster = EngineCluster(args.instances, model, params, pol,
+                            block_size=16, max_batch=4, max_len=256,
+                            chunk_tokens=64)
+    rng = np.random.RandomState(0)
+    apps = [rng.randint(4, 500, size=96) for _ in range(3)]
+    t, arrivals = 0.0, []
+    for _ in range(args.requests):
+        t += float(rng.exponential(0.05))
+        toks = np.concatenate([apps[rng.randint(3)],
+                               rng.randint(4, 500,
+                                           size=rng.randint(8, 32))])
+        arrivals.append((t, toks.astype(np.int32), int(rng.randint(4, 12))))
+    done = cluster.run(arrivals)
+    print(fmt_row(pol.name, summarize(done)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Assigned input shapes and per-arch input specs (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models.model import VISION_DIM
+
+INPUT_SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4_096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32_768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524_288, batch=1),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def resolve_arch_for_shape(cfg, shape_name: str):
+    """long_500k needs sub-quadratic decode: dense/vlm archs swap in their
+    sliding-window variant; whisper (enc-dec full attention) is skipped.
+    Returns (cfg', skip_reason|None)."""
+    if shape_name != "long_500k":
+        return cfg, None
+    if cfg.supports_long_decode():
+        return cfg, None
+    if cfg.is_encdec:
+        return cfg, ("enc-dec full-attention (whisper): no faithful "
+                     "sub-quadratic variant; skipped per DESIGN.md")
+    return cfg.with_sliding_window(), None
+
+
+def input_specs(cfg, shape_name: str) -> Dict:
+    """ShapeDtypeStruct pytrees for one (arch, shape) combination.
+
+    train  -> {"batch": {tokens,targets[,frames,patch_embeds]}}
+    prefill-> {"tokens", "batch"}
+    decode -> {"token", "pos", "cache"}  (cache via eval_shape: abstract)
+    """
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    dtype = jnp.dtype(cfg.dtype)
+    model = Model(cfg)
+
+    def extras(b):
+        out = {}
+        if cfg.is_encdec:
+            out["frames"] = _sds((b, cfg.enc_seq,
+                                  cfg.enc_d_model or cfg.d_model), dtype)
+        if cfg.n_patches:
+            out["patch_embeds"] = _sds((b, cfg.n_patches, VISION_DIM), dtype)
+        return out
+
+    if kind == "train":
+        s_text = S - (cfg.n_patches or 0)
+        batch = {"tokens": _sds((B, s_text), jnp.int32),
+                 "targets": _sds((B, s_text), jnp.int32), **extras(B)}
+        return {"kind": kind, "batch": batch}
+    if kind == "prefill":
+        s_text = S - (cfg.n_patches or 0)
+        batch = {"tokens": _sds((B, s_text), jnp.int32), **extras(B)}
+        return {"kind": kind, "batch": batch}
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"kind": kind,
+            "token": _sds((B, 1), jnp.int32),
+            "pos": _sds((B,), jnp.int32),
+            "cache": cache}
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS: 6·N·D for train, 2·N·D for inference (N = active
+    params, D = tokens processed)."""
+    sh = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if sh["kind"] == "train":
+        return 6.0 * n * sh["batch"] * sh["seq"]
+    if sh["kind"] == "prefill":
+        # serving semantics: lm-head logits for the LAST position only
+        lm = 0 if cfg.tie_embeddings else cfg.d_model * cfg.vocab_size
+        return (2.0 * (n - lm) * sh["batch"] * sh["seq"]
+                + 2.0 * lm * sh["batch"])
+    return 2.0 * n * sh["batch"]          # decode: one token per sequence
+
+
+def analytic_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS + attention/recurrence flops (the quadratic terms 6·N·D
+    misses).  Used for the roofline compute term because XLA's
+    cost_analysis counts scan bodies once (see launch/hlo.py)."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    extra = 0.0
+    for bk in cfg.block_pattern:
+        if bk in ("attn", "xattn"):
+            span = S
+        elif bk == "swa":
+            span = min(S, cfg.window_size)
+        elif bk == "mlstm":
+            # chunkwise: intra-chunk (L) + matrix-memory (hd) terms
+            di_hd = 2 * cfg.d_model // H
+            span = 256 + 2 * di_hd
+        elif bk in ("rglru", "slstm"):
+            span = 8   # elementwise recurrence: negligible vs matmuls
+        else:
+            span = 0
+        if kind == "decode":
+            extra += 4.0 * B * span * H * hd
+        else:
+            eff = span / 2 if bk in ("attn", "xattn") else span
+            extra += 4.0 * B * S * eff * H * hd
+        if bk == "xattn" and kind != "decode":
+            extra += 4.0 * B * S * cfg.enc_seq * H * hd
+    if kind == "train":
+        extra *= 3.0   # fwd + bwd
+    return model_flops(cfg, shape_name) + extra

@@ -1,0 +1,186 @@
+"""Sharding rules: FSDP over (pod×)data + tensor-parallel over model.
+
+Parameters get deliberate TP placement (column-sharded up-projections,
+row-sharded down-projections → one all-reduce per block in the forward)
+with the FSDP axis on the complementary dimension; MoE experts are
+expert-parallel over the model axis when the expert count divides it,
+else TP within the expert FFN dims.  Every rule degrades to ``None`` on
+non-divisible dims, so every assigned architecture lowers on the
+production meshes (e.g. granite's 40 experts / 49155 vocab).
+
+Caches for decode shard batch over data and kv-heads (or head_dim when
+kv_heads < model axis) over model; the long_500k batch=1 shape instead
+shards the window/sequence dim over data.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model
+
+
+def _div(dim: int, mesh: Mesh, axes) -> Optional[Any]:
+    """Return axes if dim divides their total size, else None."""
+    if axes is None:
+        return None
+    tup = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = int(np.prod([mesh.shape[a] for a in tup]))
+    if size > 0 and dim % size == 0:
+        return axes
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                fsdp) -> P:
+    """PartitionSpec for one parameter leaf (path uses '/' separators)."""
+    n_lead = 0
+    # stacked-unit leading dim (units/<j>/... leaves) and encoder stacks
+    if path.startswith("units/") or "/layers/" in path:
+        n_lead = 1
+    base = shape[n_lead:]
+    lead = (None,) * n_lead
+
+    def col():   # (.., d_in, d_out): fsdp on in, model on out
+        if len(base) == 2:
+            return P(*lead, _div(base[0], mesh, fsdp),
+                     _div(base[1], mesh, "model"))
+        return P(*lead, *(None,) * len(base))
+
+    def row():   # (.., d_in, d_out): model on in, fsdp on out
+        if len(base) == 2:
+            return P(*lead, _div(base[0], mesh, "model"),
+                     _div(base[1], mesh, fsdp))
+        return P(*lead, *(None,) * len(base))
+
+    # MoE expert weights (E, d_in, d_out) MUST be matched before the
+    # generic col/row rules (wi/wg/wo names overlap): expert-parallel over
+    # the model axis when E divides it, else TP within the expert FFN.
+    if len(base) == 3 and re.search(r"/(wi|wg|wo)/w$", path):
+        E = base[0]
+        ep = _div(E, mesh, "model")
+        if ep is not None:
+            return P(*lead, ep, _div(base[1], mesh, fsdp), None)
+        if path.endswith("wo/w"):
+            return P(*lead, None, _div(base[1], mesh, "model"),
+                     _div(base[2], mesh, fsdp))
+        return P(*lead, None, _div(base[1], mesh, fsdp),
+                 _div(base[2], mesh, "model"))
+    if re.search(r"/(wq|wk|wv|xwq|xwk|xwv|wi|wg|up|wx|wgate)/w$", path):
+        return col()
+    if re.search(r"/(wo|xwo|down)/w$", path):
+        return row()
+    if path.endswith("router/w"):
+        return P(*lead, _div(base[0], mesh, fsdp), None)
+    # vocab tables: shard the VOCAB dim over model only.  Sharding the
+    # d_model dim over the fsdp axis makes the lm-head contraction dim
+    # conflict with batch-over-data activations; XLA then replicates the
+    # whole batch (observed: f32[256,4096,V/16] logits — §Perf it#6).
+    if path.endswith("embed/w"):
+        return P(_div(base[0], mesh, "model"), None)
+    if path.endswith("lm_head/w"):
+        return P(None, _div(base[1], mesh, "model"))
+    if path.endswith("dec_pos"):
+        return P(_div(base[0], mesh, fsdp), None)
+    if path.endswith("vlm_proj/w"):
+        return col()
+    if path.endswith("/r"):          # slstm recurrent (4, H, hd, hd)
+        return P(*lead, None, _div(base[1], mesh, "model"),
+                 None, _div(base[3], mesh, fsdp))
+    if path.endswith("/wif"):        # mlstm gates (di, 2H)
+        return P(*lead, _div(base[0], mesh, fsdp), None)
+    if path.endswith("/conv"):       # (cw, dr)
+        return P(*lead, None, _div(base[1], mesh, "model"))
+    if len(base) == 1 and base[0] >= 1024:
+        # large vectors (rglru lambda/gates): shard over model
+        return P(*lead, _div(base[0], mesh, "model"))
+    return P(*lead, *(None,) * len(base))
+
+
+def param_shardings(params_shape, mesh: Mesh, fsdp=("data",)):
+    """Pytree of NamedSharding matching an eval_shape'd params tree."""
+    def one(path, leaf):
+        spec = param_pspec(_path_str(path), leaf.shape, mesh, fsdp)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# caches and batches
+# ---------------------------------------------------------------------------
+
+def cache_pspec(path: str, shape, mesh: Mesh, batch_axes=("data",)) -> P:
+    n_lead = 1 if path.startswith("units/") else 0
+    base = shape[n_lead:]
+    lead = (None,) * n_lead
+    if not base:
+        return P()
+    B = base[0]
+    b_ax = _div(B, mesh, batch_axes)
+    rest = [None] * (len(base) - 1)
+    if len(base) >= 4:               # (B, S, KV, hd) attention cache
+        S, KV, hd = base[1], base[2], base[3]
+        # flash-decode layout (§Perf it#5): shard the SEQUENCE over the
+        # model axis — each shard attends its KV slice with the (tiny)
+        # softmax stats combined by small all-reduces, instead of
+        # resharding/gathering head-sharded caches every layer.
+        s_ax = _div(S, mesh, "model")
+        if s_ax is not None:
+            rest[0] = s_ax
+        else:
+            kv_ax = _div(KV, mesh, "model")
+            if kv_ax is not None:
+                rest[1] = kv_ax
+            else:
+                hd_ax = _div(hd, mesh, "model")
+                if hd_ax is not None:
+                    rest[2] = hd_ax
+        if b_ax is None and rest[0] is None:   # B=1 fallback: S over data
+            rest[0] = _div(S, mesh, batch_axes)
+    elif len(base) >= 2:
+        # recurrent states (B, ...): shard a trailing dim over model
+        for i in range(len(base) - 1, 0, -1):
+            ax = _div(base[i], mesh, "model")
+            if ax is not None:
+                rest[i - 1] = ax
+                break
+        if b_ax is None and rest and rest[0] is None and len(base) > 2:
+            rest[0] = _div(base[1], mesh, batch_axes)
+    return P(*lead, b_ax, *rest)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, batch_axes=("data",)):
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or leaf.shape == ():
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, cache_pspec(_path_str(path), leaf.shape, mesh,
+                              batch_axes))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_shardings(batch_shape, mesh: Mesh, batch_axes=("data",)):
+    def one(leaf):
+        B = leaf.shape[0] if leaf.shape else 1
+        ax = _div(B, mesh, batch_axes)
+        return NamedSharding(mesh, P(ax, *(None,) * (len(leaf.shape) - 1)))
+    return jax.tree.map(one, batch_shape)
+
+
+def opt_shardings(opt_shape, pshard, mesh: Mesh):
+    """AdamW state: moments mirror param shardings, step replicated."""
+    from repro.training.optim import AdamWState
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      m=jax.tree.map(lambda p, s: s, opt_shape.m, pshard),
+                      v=jax.tree.map(lambda p, s: s, opt_shape.v, pshard))

@@ -1,0 +1,67 @@
+"""Distributed training launcher.
+
+On real hardware this runs the sharded train step on the production mesh
+(per-process data loading via DataIterator rank/world); on this CPU
+container it runs the single-device smoke path, and `--dry-run` lowers
+the full production configuration instead (no allocation).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_4b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek_67b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced config (default on CPU)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile the production train_4k config")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # delegate to the dry-run module (it must own process start-up:
+        # XLA device-count flags are set before jax import there)
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k", "--force"]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd, env=dict(os.environ)))
+
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, DataIterator
+    from repro.models import Model
+    from repro.training.optim import OptimizerConfig
+    from repro.training.train_loop import train_loop
+
+    cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
+    model = Model(cfg)
+    data = DataIterator(DataConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=args.seq,
+                                   global_batch=args.batch))
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps, schedule=cfg.lr_schedule)
+    out = train_loop(model, opt, data, n_steps=args.steps,
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=max(args.steps // 2, 1)
+                     if args.ckpt_dir else 0)
+    h = out["history"]
+    print(f"final loss {h[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

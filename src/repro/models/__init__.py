@@ -1,0 +1,4 @@
+from .config import ModelConfig, dense_pattern, hybrid_pattern
+from .model import Model
+
+__all__ = ["ModelConfig", "Model", "dense_pattern", "hybrid_pattern"]

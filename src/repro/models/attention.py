@@ -1,0 +1,295 @@
+"""GQA attention: prefill (full / sliding-window / cross) and cached decode.
+
+Long prefill uses a blockwise online-softmax path (flash-style, pure jnp
+``lax.scan`` over KV chunks) so 32k-token prefill never materialises an
+S×S score matrix.  The Pallas kernels in ``repro.kernels`` implement the
+same math for the TPU target and are validated against these functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_linear, init_norm, linear, norm_apply, apply_rope
+
+# sequence length above which attention goes blockwise (flash-style online
+# softmax) instead of materialising (S,S) scores.  §Perf it#4: at 4k train
+# the materialised path holds B·H·S² f32 per layer — blockwise caps the
+# working set at B·H·S·kv_chunk.
+BLOCKWISE_THRESHOLD = 2048
+KV_CHUNK = 1024
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, kind: str, d_model=None):
+    D = d_model or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 10)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": init_linear(ks[0], D, H * hd, dtype),
+        "wk": init_linear(ks[1], D, KV * hd, dtype),
+        "wv": init_linear(ks[2], D, KV * hd, dtype),
+        "wo": init_linear(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd, dtype)
+        p["k_norm"] = init_norm(hd, dtype)
+    if kind == "xattn":
+        eD = cfg.enc_d_model or D
+        p["xwq"] = init_linear(ks[4], D, H * hd, dtype)
+        p["xwk"] = init_linear(ks[5], eD, KV * hd, dtype)
+        p["xwv"] = init_linear(ks[6], eD, KV * hd, dtype)
+        p["xwo"] = init_linear(ks[7], H * hd, D, dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, prefix=""):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = linear(p[prefix + "wq"], x).reshape(B, S, H, hd)
+    k = linear(p[prefix + "wk"], x).reshape(B, S, KV, hd)
+    v = linear(p[prefix + "wv"], x).reshape(B, S, KV, hd)
+    if cfg.qk_norm and not prefix:
+        q = norm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = norm_apply(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, soft_cap=0.0):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,KV,hd) mask:(B,Sq,Sk) bool or None.
+
+    Inputs stay in model dtype; the dots accumulate in f32 via
+    ``preferred_element_type`` (MXU-native on TPU; avoids XLA hoisting
+    f32 copies of whole KV caches out of the layer scan — §Perf it#2)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if soft_cap:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    if mask is not None:
+        # (B,Sq,Sk) -> (B,1,1,Sq,Sk) to align with (B,KV,G,Sq,Sk)
+        scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _blockwise_sdpa(q, k, v, positions, window: Optional[int],
+                    soft_cap=0.0, kv_chunk=KV_CHUNK):
+    """Causal flash-style attention scanning KV chunks (online softmax).
+
+    q,k,v: (B,S,·,hd); positions: (B,S) absolute positions (causality uses
+    these, so cached-prefix prefill works by passing offset positions).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nchunk = (S + kv_chunk - 1) // kv_chunk
+    pad = nchunk * kv_chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(positions, ((0, 0), (0, pad)),
+                       constant_values=jnp.iinfo(jnp.int32).max)
+    else:
+        kpos = positions
+    qf = (q.reshape(B, S, KV, G, hd) / math.sqrt(hd)).astype(q.dtype)
+    ks = k.reshape(B, nchunk, kv_chunk, KV, hd)
+    vs = v.reshape(B, nchunk, kv_chunk, KV, hd)
+    kpos = kpos.reshape(B, nchunk, kv_chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs  # (B,kv_chunk,KV,hd), (B,kv_chunk)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kc,
+                       preferred_element_type=jnp.float32)
+        if soft_cap:
+            s = jnp.tanh(s / soft_cap) * soft_cap
+        causal = positions[:, None, None, :, None] >= pc[:, None, None, None, :]
+        if window is not None:
+            causal &= (positions[:, None, None, :, None]
+                       - pc[:, None, None, None, :]) < window
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (ks.swapaxes(0, 1), vs.swapaxes(0, 1), kpos.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attn_prefill(p, x, positions, cfg: ModelConfig, kind: str,
+                 enc_out=None) -> Tuple[jnp.ndarray, Tuple]:
+    """Returns (y, (k_cache_entry, v_cache_entry)).
+
+    For ``swa`` blocks the returned cache entry is the last ``window`` keys
+    arranged as a ring buffer consistent with absolute positions.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    window = cfg.window_size if kind == "swa" else None
+    if S > BLOCKWISE_THRESHOLD:
+        y = _blockwise_sdpa(q, k, v, positions, window, cfg.logit_soft_cap)
+    else:
+        i = positions[:, :, None]
+        j = positions[:, None, :]
+        mask = i >= j
+        if window is not None:
+            mask &= (i - j) < window
+        y = _sdpa(q, k, v, mask, cfg.logit_soft_cap)
+    y = linear(p["wo"], y.reshape(B, S, -1))
+
+    if kind == "xattn":
+        xq = linear(p["xwq"], x).reshape(B, S, cfg.n_heads, -1)
+        eS = enc_out.shape[1]
+        xk = linear(p["xwk"], enc_out).reshape(B, eS, cfg.n_kv_heads, -1)
+        xv = linear(p["xwv"], enc_out).reshape(B, eS, cfg.n_kv_heads, -1)
+        xy = _sdpa(xq, xk, xv, None, cfg.logit_soft_cap)
+        y = y + linear(p["xwo"], xy.reshape(B, S, -1))
+        return y, (k, v, xk, xv)
+
+    if window is not None:
+        W = window
+        if S >= W:
+            kw, vw = k[:, -W:], v[:, -W:]
+            wpos = positions[:, -W:]
+        else:
+            kw = jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+            vw = jnp.pad(v, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+            wpos = jnp.pad(positions, ((0, 0), (0, W - S)),
+                           constant_values=-1)
+        # ring order: slot = pos % W
+        slot = jnp.where(wpos >= 0, wpos % W, W)  # invalid -> scratch slot
+        bidx = jnp.arange(B)[:, None]
+        kr = jnp.zeros((B, W + 1) + k.shape[2:], k.dtype).at[bidx, slot].set(kw)
+        vr = jnp.zeros((B, W + 1) + v.shape[2:], v.dtype).at[bidx, slot].set(vw)
+        return y, (kr[:, :W], vr[:, :W])
+    return y, (k, v)
+
+
+def attn_prefill_cached(p, x, positions, cfg: ModelConfig, kind: str,
+                        cache, cache_len, enc_out=None):
+    """Chunked prefill continuing an existing cache (the engine hot path —
+    this is where a KV$ hit skips compute: only the chunk's new tokens are
+    processed, attending over the cached prefix).
+
+    x: (B,S_c,D) chunk; positions: (B,S_c) absolute; cache_len: (B,) valid
+    prefix length already in cache.  Returns (y, new_cache).
+    """
+    B, Sc, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    kb, vb = cache[0], cache[1]
+    W = kb.shape[1]
+    j = jnp.arange(W)[None, :]
+    if kind == "swa":
+        # ring buffer: slot j holds abs position a = last - ((last - j) % W)
+        last = jnp.maximum(cache_len - 1, 0)[:, None]
+        abs_j = last - ((last - j) % W)
+        buf_valid = (abs_j < cache_len[:, None]) & (cache_len[:, None] > 0)
+    else:
+        abs_j = j
+        buf_valid = j < cache_len[:, None]
+    # mask vs buffer: causal (+ window)
+    qpos = positions[:, :, None]
+    mb = buf_valid[:, None, :] & (abs_j[:, None, :] <= qpos)
+    if kind == "swa":
+        mb &= (qpos - abs_j[:, None, :]) < cfg.window_size
+    # mask vs chunk itself
+    kpos = positions[:, None, :]
+    mc = qpos >= kpos
+    if kind == "swa":
+        mc &= (qpos - kpos) < cfg.window_size
+    k_all = jnp.concatenate([kb, k], axis=1)
+    v_all = jnp.concatenate([vb, v], axis=1)
+    mask = jnp.concatenate([mb, mc], axis=2)
+    y = _sdpa(q, k_all, v_all, mask, cfg.logit_soft_cap)
+    y = linear(p["wo"], y.reshape(B, Sc, -1))
+
+    # write the chunk into the buffers
+    bidx = jnp.arange(B)[:, None]
+    if kind == "swa":
+        slot = positions % W
+    else:
+        slot = jnp.minimum(positions, W - 1)
+    kb = kb.at[bidx, slot].set(k)
+    vb = vb.at[bidx, slot].set(v)
+
+    if kind == "xattn":
+        if enc_out is not None:
+            eS = enc_out.shape[1]
+            xk = linear(p["xwk"], enc_out).reshape(B, eS, cfg.n_kv_heads, -1)
+            xv = linear(p["xwv"], enc_out).reshape(B, eS, cfg.n_kv_heads, -1)
+        else:
+            xk, xv = cache[2], cache[3]
+        xq = linear(p["xwq"], x).reshape(B, Sc, cfg.n_heads, -1)
+        xy = _sdpa(xq, xk, xv, None, cfg.logit_soft_cap)
+        y = y + linear(p["xwo"], xy.reshape(B, Sc, -1))
+        return y, (kb, vb, xk, xv)
+    return y, (kb, vb)
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
+    """One-token decode. x: (B,1,D); pos: (B,) absolute position of the new
+    token; cache: (k, v[, xk, xv]) with k/v (B,S_cache,KV,hd).
+    Returns (y, new_cache)."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k_new, v_new = _qkv(p, x, cfg, pos[:, None])
+    k_cache, v_cache = cache[0], cache[1]
+    S = k_cache.shape[1]
+    bidx = jnp.arange(B)
+
+    if kind == "swa":
+        W = S  # cache is the ring buffer of width window
+        slot = pos % W
+        k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+        j = jnp.arange(W)[None, :]
+        abs_j = pos[:, None] - ((pos[:, None] - j) % W)
+        mask = abs_j >= 0
+    else:
+        slot = jnp.minimum(pos, S - 1)
+        k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+        j = jnp.arange(S)[None, :]
+        mask = j <= pos[:, None]
+
+    y = _sdpa(q, k_cache, v_cache, mask[:, None, :], cfg.logit_soft_cap)
+    y = linear(p["wo"], y.reshape(B, 1, -1))
+
+    if kind == "xattn":
+        xk, xv = cache[2], cache[3]
+        xq = linear(p["xwq"], x).reshape(B, 1, H, hd)
+        xy = _sdpa(xq, xk, xv, None, cfg.logit_soft_cap)
+        y = y + linear(p["xwo"], xy.reshape(B, 1, -1))
+        return y, (k_cache, v_cache, xk, xv)
+    return y, (k_cache, v_cache)

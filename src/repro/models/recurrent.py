@@ -1,0 +1,321 @@
+"""Recurrent blocks: RG-LRU (Griffin/RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+Each block exposes ``*_prefill`` (whole sequence, parallel form where the
+math allows: associative scan for RG-LRU, chunkwise-parallel for mLSTM,
+stepwise scan for sLSTM which has true recurrent weights) and ``*_decode``
+(single-token state update).  States are fixed-size — these are the
+sub-quadratic families that make ``long_500k`` decodable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_linear, linear, _dense_init
+
+MLSTM_CHUNK = 256
+RGLRU_C = 8.0  # Griffin's fixed recurrence-gate exponent
+
+
+# ===========================================================================
+# RG-LRU
+# ===========================================================================
+
+def init_rglru(key, cfg: ModelConfig):
+    D, dr, cw = cfg.d_model, cfg.resolved_d_rnn, cfg.conv_width
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ)^c is in (0.9, 0.999) — griffin-style
+    u = jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / RGLRU_C) / (1 - u ** (1.0 / RGLRU_C)))
+    return {
+        "wx": init_linear(ks[0], D, dr, dtype),
+        "wgate": init_linear(ks[1], D, dr, dtype),
+        "conv": _dense_init(ks[2], (cw, dr), dtype, 1.0 / math.sqrt(cw)),
+        "wo": init_linear(ks[3], dr, D, dtype),
+        "lambda": lam,
+        "wa": _dense_init(ks[5], (dr,), jnp.float32, 1.0),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wi": jnp.ones((dr,), jnp.float32),
+        "bi": jnp.zeros((dr,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x:(B,S,dr), w:(cw,dr), state:(B,cw-1,dr)."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return out, xp[:, -(cw - 1):]  # new conv state
+
+
+def _rglru_gates(p, u):
+    """u: conv output (...,dr) -> (log_a, gated_input) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(uf * p["wi"] + p["bi"])
+    log_a = -RGLRU_C * r * jax.nn.softplus(p["lambda"])  # log sigmoid(Λ)^(c·r)
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, x_in
+
+
+def rglru_prefill(p, x, cfg: ModelConfig, state=None):
+    """x:(B,S,D) -> (y, new_state). Linear recurrence via associative scan.
+
+    The recurrence branch stays dr-sharded over the model axis end to end
+    (§Perf it#10: without the constraint the unrolled remainder layers
+    all-gathered full f32 (B,S,dr) activations — 43 GiB/step of wire)."""
+    from .sharding_hooks import batch_axes, constrain, model_axis
+    B, S, D = x.shape
+    gate = jax.nn.gelu(linear(p["wgate"], x))
+    u = linear(p["wx"], x)
+    gate = constrain(gate, batch_axes(), None, model_axis())
+    u = constrain(u, batch_axes(), None, model_axis())
+    u, conv_state = _causal_conv(u, p["conv"],
+                                 None if state is None else state["conv"])
+    a, x_in = _rglru_gates(p, u)                      # (B,S,dr) f32
+    if state is not None:
+        # fold carried hidden state in as a virtual step 0
+        h0 = state["h"].astype(jnp.float32)
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        x_in = jnp.concatenate([h0[:, None], x_in], axis=1)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    A, h = jax.lax.associative_scan(comb, (a, x_in), axis=1)
+    if state is not None:
+        h = h[:, 1:]
+    h = constrain(h, batch_axes(), None, model_axis())
+    y = linear(p["wo"], (gate.astype(jnp.float32) * h).astype(x.dtype))
+    new_state = {"h": h[:, -1], "conv": conv_state.astype(jnp.float32)}
+    return y, new_state
+
+
+def rglru_decode(p, x, state, cfg: ModelConfig):
+    """x:(B,1,D), state {'h':(B,dr),'conv':(B,cw-1,dr)} -> (y, new_state)."""
+    gate = jax.nn.gelu(linear(p["wgate"], x))
+    u = linear(p["wx"], x)
+    u, conv_state = _causal_conv(u, p["conv"], state["conv"])
+    a, x_in = _rglru_gates(p, u)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + x_in[:, 0]
+    y = linear(p["wo"], (gate.astype(jnp.float32) * h[:, None]).astype(x.dtype))
+    return y, {"h": h, "conv": conv_state.astype(jnp.float32)}
+
+
+def rglru_init_state(B, cfg: ModelConfig):
+    dr, cw = cfg.resolved_d_rnn, cfg.conv_width
+    return {"h": jnp.zeros((B, dr), jnp.float32),
+            "conv": jnp.zeros((B, cw - 1, dr), jnp.float32)}
+
+
+# ===========================================================================
+# mLSTM (matrix memory, chunkwise-parallel prefill)
+# ===========================================================================
+
+def init_mlstm(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di = 2 * D
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "up": init_linear(ks[0], D, 2 * di, dtype),    # -> (x_m, z)
+        "wq": init_linear(ks[1], di, di, dtype),
+        "wk": init_linear(ks[2], di, di, dtype),
+        "down": init_linear(ks[3], di, D, dtype),
+        "wif": _dense_init(ks[4], (di, 2 * cfg.n_heads), jnp.float32, 0.01),
+        "bif": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
+                                jnp.full((cfg.n_heads,), 3.0)]),  # i, f bias
+    }
+
+
+def _mlstm_qkvif(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = 2 * D
+    hd = di // H
+    up = linear(p["up"], x)
+    x_m, z = jnp.split(up, 2, axis=-1)
+    q = linear(p["wq"], x_m).reshape(B, S, H, hd)
+    k = linear(p["wk"], x_m).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = x_m.reshape(B, S, H, hd)
+    gates = x_m.astype(jnp.float32) @ p["wif"] + p["bif"]
+    ilog = gates[..., :H]                                   # (B,S,H)
+    flog = jax.nn.log_sigmoid(gates[..., H:])               # (B,S,H)
+    return q, k, v, ilog, flog, z
+
+
+def mlstm_prefill(p, x, cfg: ModelConfig, state=None, chunk=MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM. x:(B,S,D) -> (y, new_state)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = 2 * D
+    hd = di // H
+    q, k, v, ilog, flog, z = _mlstm_qkvif(p, x, cfg)
+    L = min(chunk, S)
+    nchunk = (S + L - 1) // L
+    pad = nchunk * L - S
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        ilog = jnp.pad(ilog, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)   # i=0 for padding
+        flog = jnp.pad(flog, ((0, 0), (0, pad), (0, 0)))
+    rs = lambda t: t.reshape((B, nchunk, L) + t.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, ilog, flog))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, xs):
+        C, n, m = carry
+        qx, kx, vx, ix, fx = xs          # (B,L,H,·)
+        qf = qx.astype(jnp.float32)
+        kf = kx.astype(jnp.float32)
+        vf = vx.astype(jnp.float32)
+        b = jnp.cumsum(fx, axis=1)                        # (B,L,H)
+        # intra-chunk log weights: D[t,s] = b_t - b_s + i_s  (s <= t)
+        dmat = (b[:, :, None] - b[:, None, :, :] + ix[:, None, :, :])
+        tidx = jnp.arange(dmat.shape[1])
+        dmat = jnp.where((tidx[:, None] >= tidx[None, :])[None, :, :, None],
+                         dmat, -1e30)                     # (B,L,L,H)
+        inter = b + m[:, None]                            # (B,L,H)
+        m_t = jnp.maximum(inter, dmat.max(axis=2))        # (B,L,H)
+        w_intra = jnp.exp(dmat - m_t[:, :, None])         # (B,L,L,H)
+        w_inter = jnp.exp(inter - m_t)                    # (B,L,H)
+        scores = jnp.einsum("blhd,bshd->blsh", qf, kf) * w_intra
+        h_num = (jnp.einsum("blsh,bshd->blhd", scores, vf)
+                 + jnp.einsum("blhd,bhde->blhe", qf, C)
+                 * w_inter[..., None])
+        denom = (scores.sum(axis=2)
+                 + jnp.einsum("blhd,bhd->blh", qf, n) * w_inter)
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t))
+        h = h_num / denom[..., None]                      # (B,L,H,hd)
+        # state update to end of chunk
+        bL = b[:, -1]                                     # (B,H)
+        m_new = jnp.maximum(bL + m, (bL[:, None] - b + ix).max(axis=1))
+        w_old = jnp.exp(bL + m - m_new)                   # (B,H)
+        w_src = jnp.exp(bL[:, None] - b + ix - m_new[:, None])  # (B,L,H)
+        C_new = (C * w_old[..., None, None]
+                 + jnp.einsum("blh,blhd,blhe->bhde", w_src, kf, vf))
+        n_new = n * w_old[..., None] + jnp.einsum("blh,blhd->bhd", w_src, kf)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.swapaxes(0, 1).reshape(B, nchunk * L, di)[:, :S]
+    y = linear(p["down"], (h.astype(x.dtype)
+                           * jax.nn.silu(z)))
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode(p, x, state, cfg: ModelConfig):
+    """x:(B,1,D) -> (y, new_state)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    q, k, v, ilog, flog, z = _mlstm_qkvif(p, x, cfg)
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    i0, f0 = ilog[:, 0], flog[:, 0]                       # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(f0 + m, i0)
+    w_old = jnp.exp(f0 + m - m_new)[..., None]
+    w_in = jnp.exp(i0 - m_new)[..., None]
+    C = C * w_old[..., None] + (w_in[..., None]
+                                * kf[..., :, None] * vf[..., None, :])
+    n = n * w_old + w_in * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, -1)
+    y = linear(p["down"], h.astype(x.dtype) * jax.nn.silu(z))
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(B, cfg: ModelConfig):
+    H = cfg.n_heads
+    hd = 2 * cfg.d_model // H
+    return {"C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+# ===========================================================================
+# sLSTM (scalar memory, true recurrence -> stepwise scan)
+# ===========================================================================
+
+def init_slstm(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": init_linear(ks[0], D, 4 * D, dtype),               # z,i,f,o
+        "r": _dense_init(ks[1], (4, H, hd, hd), dtype,
+                         1.0 / math.sqrt(hd)),                   # recurrent
+        "b": jnp.zeros((4 * D,), jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, carry, xw):
+    """carry: (c,n,m,h) each (B,D) f32; xw: pre-computed W x_t (B,4D)."""
+    c, n, m, h = carry
+    B, D = h.shape
+    H = cfg.n_heads
+    hd = D // H
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", hh.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(B, 4 * D)
+    pre = xw.astype(jnp.float32) + rec + p["b"]
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zp)
+    ilog = ip
+    flog = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(flog + m, ilog)
+    iw = jnp.exp(ilog - m_new)
+    fw = jnp.exp(flog + m - m_new)
+    c_new = fw * c + iw * zt
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(op) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_prefill(p, x, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    xw = linear(p["wx"], x)                                   # (B,S,4D)
+    if state is None:
+        state = slstm_init_state(B, cfg)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(
+        lambda c, xi: _slstm_step(p, cfg, c, xi),
+        carry, xw.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    c, n, m, h = carry
+    return y, {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_decode(p, x, state, cfg: ModelConfig):
+    xw = linear(p["wx"], x)[:, 0]
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    carry, h = _slstm_step(p, cfg, carry, xw)
+    c, n, m, hh = carry
+    return h[:, None].astype(x.dtype), {"c": c, "n": n, "m": m, "h": hh}
+
+
+def slstm_init_state(B, cfg: ModelConfig):
+    D = cfg.d_model
+    z = lambda: jnp.zeros((B, D), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((B, D), -1e30, jnp.float32),
+            "h": z()}

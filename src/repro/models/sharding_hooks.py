@@ -1,0 +1,85 @@
+"""Optional activation-sharding constraints (set by distributed
+launchers; inactive on single host).
+
+Pins the batch dim of activations to the data axes, logits' vocab dim
+and MoE dispatch buffers' expert dim to the model axis, so SPMD
+propagation can never fall back to batch replication (§Perf it#6/it#7).
+Dims that don't divide their axes degrade to unsharded.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+_ACT_SHARD = {"mesh": None, "batch_axes": None, "model_axis": "model"}
+
+
+def set_activation_sharding(mesh, batch_axes, model_axis="model"):
+    _ACT_SHARD.update(mesh=mesh, batch_axes=batch_axes,
+                      model_axis=model_axis)
+
+
+def clear_activation_sharding():
+    _ACT_SHARD.update(mesh=None, batch_axes=None)
+
+
+def active() -> bool:
+    return _ACT_SHARD["mesh"] is not None
+
+
+def constrain(x, *spec):
+    if _ACT_SHARD["mesh"] is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = _ACT_SHARD["mesh"]
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        fixed.append(ax if dim % size == 0 else None)
+    ns = NamedSharding(mesh, PartitionSpec(*fixed))
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def batch_axes():
+    return _ACT_SHARD["batch_axes"]
+
+
+def model_axis():
+    return _ACT_SHARD["model_axis"]
+
+
+SEQUENCE_PARALLEL = False   # §Perf it#11: Megatron-SP activation layout
+
+
+def set_sequence_parallel(v: bool):
+    global SEQUENCE_PARALLEL
+    SEQUENCE_PARALLEL = bool(v)
+
+
+def constrain_tokens_dim(x):
+    """(B, S, ...) activations at block boundaries: batch over the data
+    axes; with SEQUENCE_PARALLEL also sequence over the model axis
+    (Megatron-SP: turns each block's output all-reduce into an
+    all-gather + reduce-scatter pair at half the wire bytes).  Dims that
+    don't divide (e.g. decode S=1) degrade to unsharded automatically."""
+    if SEQUENCE_PARALLEL and x.ndim >= 3:
+        return constrain(x, _ACT_SHARD["batch_axes"],
+                         _ACT_SHARD["model_axis"],
+                         *(None,) * (x.ndim - 2))
+    return constrain(x, _ACT_SHARD["batch_axes"], *(None,) * (x.ndim - 1))
+
+
+def constrain_logits(x):
+    return constrain(x, _ACT_SHARD["batch_axes"], None,
+                     _ACT_SHARD["model_axis"])
+
+
+def constrain_moe_buffer(x):
+    """(B, E, cap, D) dispatch buffers: batch over data, experts over
+    model (expert-parallel compute — §Perf it#7)."""
+    return constrain(x, _ACT_SHARD["batch_axes"], _ACT_SHARD["model_axis"],
+                     None, None)

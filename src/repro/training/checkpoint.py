@@ -1,0 +1,85 @@
+"""Simple sharded-pytree checkpointing (host-side npz + JSON manifest).
+
+Values are gathered to host (fine at smoke scale; at production scale
+you'd swap the io layer for per-shard writes — the manifest format
+already records the tree structure independently of array storage).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(path: str, step: int, params: Any,
+                    opt_state: Any = None, extra: Optional[Dict] = None):
+    os.makedirs(path, exist_ok=True)
+    blobs = {}
+    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+    for name, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        for key, leaf in _flatten_with_paths(tree).items():
+            full = f"{name}/{key}"
+            arr = np.asarray(jax.device_get(leaf))
+            orig_dtype = str(arr.dtype)
+            if orig_dtype == "bfloat16":      # npz has no bf16: store f32
+                arr = arr.astype(np.float32)
+            blobs[full.replace("/", "__")] = arr
+            manifest["arrays"][full] = {
+                "dtype": orig_dtype, "shape": list(arr.shape)}
+    np.savez(os.path.join(path, f"step_{step:08d}.npz"), **blobs)
+    with open(os.path.join(path, f"step_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+
+
+def latest_step(path: str) -> Optional[int]:
+    p = os.path.join(path, "latest")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore_checkpoint(path: str, step: Optional[int], params_like: Any,
+                       opt_like: Any = None):
+    """Restore into the structure of params_like/opt_like."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {path}")
+    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+
+    def rebuild(name, like):
+        keys = _flatten_with_paths(like)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        out = []
+        flatmap = {}
+        for key in keys:
+            flatmap[key] = data[f"{name}/{key}".replace("/", "__")]
+        import jax.numpy as jnp
+        for (key, like_leaf) in zip(keys, leaves):
+            arr = flatmap[key]
+            if hasattr(like_leaf, "dtype"):
+                out.append(jnp.asarray(arr).astype(like_leaf.dtype))
+            else:
+                out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    params = rebuild("params", params_like)
+    opt = rebuild("opt", opt_like) if opt_like is not None else None
+    return step, params, opt

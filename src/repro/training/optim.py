@@ -1,0 +1,109 @@
+"""Optimizer + LR schedules, pure-JAX (no optax dependency).
+
+AdamW with decoupled weight decay and global-norm clipping; moment dtype
+configurable per arch (arctic-480b uses bf16 moments so one pod's HBM
+holds the state — see configs/arctic_480b.py).  Schedules: cosine and
+WSD (warmup-stable-decay, MiniCPM's schedule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"          # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1       # last 10% of steps decay (WSD)
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        frac = jnp.ones(())
+    elif cfg.schedule == "wsd":
+        decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+        in_decay = jnp.clip((step - decay_start)
+                            / jnp.maximum(cfg.total_steps - decay_start, 1),
+                            0.0, 1.0)
+        # MiniCPM uses exponential-ish rapid decay; cosine-shape the tail
+        frac = 1.0 - (1.0 - cfg.min_lr_frac) * in_decay
+    else:  # cosine
+        prog = jnp.clip(step / jnp.maximum(cfg.total_steps, 1), 0.0, 1.0)
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * frac
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def _decay_mask(params):
+    """No weight decay on norms/scales/biases (ndim <= 1)."""
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_init(params, cfg: OptimizerConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v, do_decay):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if do_decay:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * update
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mask = treedef.flatten_up_to(mask)
+    out = [upd(p, g, m, v, dm) for p, g, m, v, dm in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {
+        "lr": lr, "grad_norm": gnorm}

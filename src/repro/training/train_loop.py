@@ -1,0 +1,100 @@
+"""Training step + loop: builds the jit'd (optionally pjit-sharded)
+train_step used both by the end-to-end example driver and by the
+multi-pod dry-run (train_4k shape)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from .optim import AdamWState, OptimizerConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    remat: bool = True, accum_steps: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).
+
+    accum_steps > 1 splits the global batch into micro-batches scanned
+    with f32 gradient accumulation (§Perf it#8): activation peak scales
+    with B/accum while the optimizer sees the full-batch gradient.
+    """
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.forward_train(p, batch, remat=remat)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def body(gsum, mb):
+                (l, m), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return gsum, (l, m)
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, (losses, ms) = jax.lax.scan(body, g0, micro)
+            grads = jax.tree.map(
+                lambda g, p: (g / accum_steps).astype(p.dtype), gsum,
+                params)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        params2, opt_state2, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.forward_train(params, batch, remat=False)
+        return {**metrics, "loss": loss}
+    return eval_step
+
+
+def train_loop(model: Model, opt_cfg: OptimizerConfig, data_iter,
+               n_steps: int, params=None, log_every: int = 10,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, remat: bool = True,
+               log_fn=print) -> Dict[str, Any]:
+    """Single-host training loop (smoke/examples scale)."""
+    from .checkpoint import save_checkpoint
+
+    if params is None:
+        params = model.init(jax.random.key(0))
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, remat=remat))
+    history = []
+    t0 = time.time()
+    for step in range(1, n_steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.time() - t0
+            history.append(m)
+            log_fn(f"step {step:5d} loss={m['loss']:.4f} "
+                   f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+                   f"lr={m['lr']:.2e} ({m['wall']:.1f}s)")
+        if checkpoint_dir and checkpoint_every and \
+                step % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, step, params, opt_state)
+    return {"params": params, "opt_state": opt_state, "history": history}

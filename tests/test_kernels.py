@@ -1,0 +1,122 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the TPU kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mlstm_cell import mlstm_chunk
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.prefill_attention import flash_prefill
+from repro.kernels.rglru_scan import rglru_scan
+
+RNG = np.random.RandomState(42)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,KV,hd,page,npages",
+    [(2, 4, 4, 64, 16, 3),     # MHA
+     (3, 8, 2, 64, 16, 4),     # GQA
+     (1, 8, 1, 128, 8, 5),     # MQA, wide head
+     (2, 4, 2, 128, 32, 2)])
+def test_paged_attention_sweep(B, H, KV, hd, page, npages, dtype):
+    ntotal = npages * B + 2
+    q = jnp.asarray(RNG.randn(B, H, hd) * 0.5, dtype)
+    kp = jnp.asarray(RNG.randn(ntotal, page, KV, hd) * 0.5, dtype)
+    vp = jnp.asarray(RNG.randn(ntotal, page, KV, hd) * 0.5, dtype)
+    bt = jnp.asarray(RNG.randint(0, ntotal, (B, npages)), jnp.int32)
+    ctx = jnp.asarray(RNG.randint(1, npages * page + 1, (B,)), jnp.int32)
+    out = paged_attention(q, kp, vp, bt, ctx, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ctx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,off,H,KV,hd,window,bq,bk",
+    [(2, 24, 16, 4, 2, 64, None, 8, 8),
+     (1, 17, 5, 8, 8, 64, None, 16, 16),     # ragged block edges
+     (2, 32, 0, 4, 1, 128, None, 16, 32),    # MQA, no cached prefix
+     (2, 24, 16, 4, 2, 64, 8, 8, 8),         # sliding window
+     (1, 64, 32, 8, 2, 64, 16, 32, 16)])
+def test_flash_prefill_sweep(B, Sq, off, H, KV, hd, window, bq, bk, dtype):
+    Sk = off + Sq
+    q = jnp.asarray(RNG.randn(B, Sq, H, hd) * 0.4, dtype)
+    k = jnp.asarray(RNG.randn(B, Sk, KV, hd) * 0.4, dtype)
+    v = jnp.asarray(RNG.randn(B, Sk, KV, hd) * 0.4, dtype)
+    offs = jnp.full((B,), off, jnp.int32)
+    out = flash_prefill(q, k, v, offs, window=window, block_q=bq,
+                        block_k=bk, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, offs, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize(
+    "B,S,D,bs,bd",
+    [(2, 40, 96, 16, 32), (1, 7, 130, 8, 128), (3, 64, 64, 64, 64),
+     (2, 257, 128, 128, 128)])
+def test_rglru_scan_sweep(B, S, D, bs, bd):
+    a = jnp.asarray(RNG.rand(B, S, D) * 0.95, jnp.float32)
+    x = jnp.asarray(RNG.randn(B, S, D), jnp.float32)
+    h0 = jnp.asarray(RNG.randn(B, D), jnp.float32)
+    h, hl = rglru_scan(a, x, h0, block_s=bs, block_d=bd, interpret=True)
+    hr, hlr = ref.rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,L,H,hd", [(2, 16, 3, 32), (1, 32, 4, 64),
+                                      (2, 8, 1, 128)])
+def test_mlstm_chunk_sweep(B, L, H, hd):
+    q = jnp.asarray(RNG.randn(B, L, H, hd) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, L, H, hd) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, L, H, hd) * 0.3, jnp.float32)
+    il = jnp.asarray(RNG.randn(B, L, H) * 0.5, jnp.float32)
+    fl = jnp.asarray(-np.abs(RNG.randn(B, L, H)) * 0.3, jnp.float32)
+    C0 = jnp.asarray(RNG.randn(B, H, hd, hd) * 0.1, jnp.float32)
+    n0 = jnp.abs(jnp.asarray(RNG.randn(B, H, hd) * 0.1, jnp.float32))
+    m0 = jnp.asarray(RNG.randn(B, H) * 0.1, jnp.float32)
+    h, (C, n, m) = mlstm_chunk(q, k, v, il, fl, C0, n0, m0, interpret=True)
+    hr, (Cr, nr, mr) = ref.mlstm_chunk_ref(q, k, v, il, fl, C0, n0, m0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(nr), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=3e-5)
+
+
+def test_mlstm_chunk_chain_equals_model_prefill():
+    """Chaining the kernel over chunks == the model's chunkwise scan."""
+    from repro.kernels.ref import mlstm_chunk_ref
+    B, S, H, hd, L = 1, 32, 2, 16, 8
+    q = jnp.asarray(RNG.randn(B, S, H, hd) * 0.3, jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, H, hd) * 0.3, jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, H, hd) * 0.3, jnp.float32)
+    il = jnp.asarray(RNG.randn(B, S, H) * 0.5, jnp.float32)
+    fl = jnp.asarray(-np.abs(RNG.randn(B, S, H)) * 0.3, jnp.float32)
+    C = jnp.zeros((B, H, hd, hd))
+    n = jnp.zeros((B, H, hd))
+    m = jnp.full((B, H), -1e30)
+    hs_k, hs_r = [], []
+    Ck, nk, mk = C, n, m
+    Cr, nr, mr = C, n, m
+    for c in range(S // L):
+        sl = slice(c * L, (c + 1) * L)
+        hk, (Ck, nk, mk) = mlstm_chunk(q[:, sl], k[:, sl], v[:, sl],
+                                       il[:, sl], fl[:, sl], Ck, nk, mk,
+                                       interpret=True)
+        hr, (Cr, nr, mr) = mlstm_chunk_ref(q[:, sl], k[:, sl], v[:, sl],
+                                           il[:, sl], fl[:, sl], Cr, nr, mr)
+        hs_k.append(hk)
+        hs_r.append(hr)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(hs_k, 1)),
+                               np.asarray(jnp.concatenate(hs_r, 1)),
+                               atol=5e-5)

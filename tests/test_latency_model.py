@@ -1,0 +1,48 @@
+"""Latency model sanity + monotonicity properties."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import EngineSpec, LatencyModel, spec_from_config
+
+
+def spec():
+    return spec_from_config(get_config("qwen2_7b"), chips=1)
+
+
+def test_step_time_positive_and_scales_with_tokens():
+    m = LatencyModel(spec())
+    t1 = m.step_time(256, 8, 10_000)
+    t2 = m.step_time(2048, 8, 10_000)
+    assert 0 < t1 < t2
+
+
+def test_bigger_model_is_slower():
+    small = LatencyModel(spec_from_config(get_config("qwen2_7b")))
+    big = LatencyModel(spec_from_config(get_config("deepseek_67b")))
+    assert big.step_time(1024, 8, 1000) > small.step_time(1024, 8, 1000)
+
+
+def test_predictor_noise_reproducible_and_unbiased_scale():
+    a = LatencyModel(spec(), error_std=0.5, seed=3)
+    b = LatencyModel(spec(), error_std=0.5, seed=3)
+    xs = [a.predict_ttft(0, 1000, 4, 1000) for _ in range(20)]
+    ys = [b.predict_ttft(0, 1000, 4, 1000) for _ in range(20)]
+    assert xs == ys
+    assert len(set(xs)) > 1          # noise actually varies
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 100_000), st.integers(1, 32_000),
+       st.integers(0, 128), st.integers(0, 500_000))
+def test_property_ttft_monotone_in_queue(q, new, bs, ctx):
+    m = LatencyModel(spec())
+    assert m.predict_ttft(q, new, bs, ctx) <= \
+        m.predict_ttft(q + 4096, new, bs, ctx) + 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 64), st.integers(0, 300_000))
+def test_property_tpot_monotone_in_batch(bs, ctx):
+    m = LatencyModel(spec())
+    assert m.predict_tpot(bs, ctx) <= m.predict_tpot(bs + 16, ctx) + 1e-9

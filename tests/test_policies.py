@@ -1,0 +1,140 @@
+"""Policy behaviour tests + the paper's key algebraic property: the
+multiplicative score's ranking is invariant to per-indicator rescaling
+(the 'hyperparameters cancel out' claim of §5)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (IndicatorFactory, JSQPolicy, LinearKVPolicy,
+                        LMetricPolicy, FilterKVPolicy, PreblePolicy,
+                        PolyServePolicy, SimulationPolicy, DynamoPolicy,
+                        LatencyModel, EngineSpec, Request)
+
+SPEC = EngineSpec(name="t", active_params=1e9, n_layers=8,
+                  kv_bytes_per_token=1024)
+
+
+def req(blocks=(1, 2, 3), out=32, cid=0):
+    return Request(rid=0, arrival=0.0, blocks=tuple(blocks),
+                   prompt_len=len(blocks) * 64, output_len=out,
+                   class_id=cid)
+
+
+def factory(n=4, **kw):
+    return IndicatorFactory(n, **kw)
+
+
+def test_jsq_picks_least_loaded():
+    f = factory()
+    f[1].r_bs = 5
+    f[2].q_bs = 2
+    f[0].r_bs = 1
+    # instance 3 is idle
+    assert JSQPolicy().route(req(), f, 0.0) == 3
+
+
+def test_lmetric_prefers_kv_hit_when_balanced():
+    f = factory()
+    f[2].kv.insert((1, 2, 3))
+    for i in f:
+        i.r_bs = 3
+    assert LMetricPolicy().route(req(), f, 0.0) == 2
+
+
+def test_lmetric_avoids_overloaded_hit_instance():
+    f = factory()
+    f[2].kv.insert((1, 2, 3))
+    f[2].queued_prefill_tokens = 100_000     # giant prefill backlog
+    f[2].r_bs = 64
+    chosen = LMetricPolicy().route(req(), f, 0.0)
+    assert chosen != 2
+
+
+def test_lmetric_ptoken_considers_queued_prefill():
+    """§5.1: P-token = queued prefill + new tokens — bypasses instances
+    with queued prefill even at equal hit."""
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    f[1].kv.insert((1, 2, 3))
+    f[0].queued_prefill_tokens = 5000
+    assert LMetricPolicy().route(req(), f, 0.0) == 1
+
+
+def test_linear_weight_extremes():
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    f[0].r_bs = 10
+    f[1].r_bs = 0
+    # pure KV weight -> instance 0; pure LB weight -> instance 1
+    assert LinearKVPolicy(lam=1.0).route(req(), f, 0.0) == 0
+    assert LinearKVPolicy(lam=0.0).route(req(), f, 0.0) == 1
+
+
+def test_filter_policy_branches():
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    f[0].r_bs = 20
+    pol = FilterKVPolicy(bs_range=8)
+    assert pol.route(req(), f, 0.0) == 1     # imbalanced -> LB branch
+    f[0].r_bs = 2
+    assert pol.route(req(), f, 0.0) == 0     # balanced -> KV branch
+
+
+def test_preble_branch_counting():
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    pol = PreblePolicy(T=0.5)
+    pol.route(req(), f, 0.0)                  # hit ratio 1.0 > T
+    r2 = req(blocks=(9, 9, 9))
+    pol.route(r2, f, 0.0)                     # no hits -> fallback
+    assert pol.branch_counts["kv"] == 1
+    assert pol.branch_counts["fallback"] == 1
+
+
+def test_simulation_policy_prefers_hit_instance():
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    pol = SimulationPolicy(LatencyModel(SPEC))
+    assert pol.route(req(), f, 0.0) == 0
+
+
+def test_polyserve_packs_most_loaded_feasible():
+    f = factory(3)
+    f[0].r_bs = 1
+    f[1].r_bs = 6          # most loaded, still feasible
+    f[2].r_bs = 0
+    pol = PolyServePolicy(LatencyModel(SPEC), slo_ttft=100.0, slo_tpot=10.0)
+    assert pol.route(req(), f, 0.0) == 1
+
+
+def test_dynamo_normalised_sum():
+    f = factory(2)
+    f[0].kv.insert((1, 2, 3))
+    f[0].total_tokens = 100
+    f[1].total_tokens = 100
+    assert DynamoPolicy(lam=0.5).route(req(), f, 0.0) == 0
+
+
+# ---------------------------------------------------------------------------
+# the paper's central algebraic claim (§5, Fig. 17a): for ANY positive
+# rescaling (α,β) of the two indicators, argmin over instances of
+# (α·KV_i)·(β·LOAD_i) equals argmin of KV_i·LOAD_i — multiplication needs
+# no tuned weights.  A linear combination does NOT have this property.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.integers(1, 300)),
+                min_size=2, max_size=16),
+       st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+def test_property_multiplicative_ranking_scale_invariant(ind, alpha, beta):
+    scores = [a * b for a, b in ind]
+    scaled = [(alpha * a) * (beta * b) for a, b in ind]
+    assert scores.index(min(scores)) == scaled.index(min(scaled))
+
+
+def test_linear_ranking_is_weight_dependent():
+    # witness that linear combination rankings flip with λ (needs tuning)
+    ind = [(10.0, 1.0), (1.0, 5.0)]
+    lam_hi = [0.9 * a + 0.1 * b for a, b in ind]
+    lam_lo = [0.1 * a + 0.9 * b for a, b in ind]
+    assert lam_hi.index(min(lam_hi)) != lam_lo.index(min(lam_lo))

@@ -1,0 +1,84 @@
+"""System-level property tests (hypothesis): conservation laws and
+invariants of the cluster simulator and router under random workloads."""
+import copy
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.cluster.simulator import ClusterSim
+from repro.configs import get_config
+from repro.core import (LatencyModel, LMetricPolicy, JSQPolicy, Router,
+                        spec_from_config)
+from repro.core.types import Request
+
+
+def _spec():
+    return spec_from_config(get_config("qwen2_7b"))
+
+
+@st.composite
+def small_traces(draw):
+    n = draw(st.integers(3, 25))
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.001, 0.5))
+        nblocks = draw(st.integers(1, 12))
+        base = draw(st.integers(0, 3))
+        blocks = tuple(range(base * 100, base * 100 + nblocks))
+        out = draw(st.integers(1, 40))
+        reqs.append(Request(rid=i, arrival=t, blocks=blocks,
+                            prompt_len=nblocks * 64, output_len=out,
+                            class_id=base))
+    return reqs
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_traces(), st.sampled_from(["lmetric", "jsq"]), st.integers(1, 4))
+def test_property_conservation_and_ordering(trace, pol, n_inst):
+    """Every request finishes exactly once, timestamps are ordered,
+    hit_tokens <= prompt_len, and indicators return to zero."""
+    policy = LMetricPolicy() if pol == "lmetric" else JSQPolicy()
+    router = Router(policy, n_inst)
+    spec = _spec()
+    sim = ClusterSim(router, spec, LatencyModel(spec))
+    done = sim.run(copy.deepcopy(trace))
+    assert len(done) == len(trace)
+    assert len({r.rid for r in done}) == len(trace)
+    for r in done:
+        assert r.arrival <= r.t_sched <= r.t_first_token <= r.t_finish
+        assert 0 <= r.hit_tokens <= r.prompt_len
+        assert 0 <= r.sched_to < n_inst
+    for inst in router.factory:
+        assert inst.r_bs == 0 and inst.q_bs == 0
+        assert inst.queued_prefill_tokens == 0
+        assert inst.total_tokens == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_traces())
+def test_property_kv_awareness_never_lowers_hits(trace):
+    """LMETRIC's aggregate hit tokens >= JSQ's on identical traces (with
+    identical insert-on-route KV$ state evolution it may tie, never
+    meaningfully lose)."""
+    def run(policy):
+        router = Router(policy, 2)
+        spec = _spec()
+        sim = ClusterSim(router, spec, LatencyModel(spec))
+        done = sim.run(copy.deepcopy(trace))
+        return sum(r.hit_tokens for r in done)
+    h_lm = run(LMetricPolicy())
+    h_jsq = run(JSQPolicy())
+    # allow one block of slack for tie-break ordering noise
+    assert h_lm >= h_jsq - 64 * len(trace)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 1_000_000), min_size=1, max_size=50),
+       st.integers(1, 64))
+def test_property_request_new_tokens_consistent(lens, hit):
+    for L in lens:
+        r = Request(rid=0, arrival=0.0, blocks=(1,), prompt_len=max(L, 1),
+                    output_len=1)
+        r.hit_tokens = min(hit, r.prompt_len)
+        assert 0 <= r.new_tokens <= r.prompt_len

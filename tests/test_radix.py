@@ -1,0 +1,107 @@
+"""Unit + property tests for the block-granular radix KV$ index."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.radix import RadixKVIndex, tokens_to_blocks
+
+B = 4  # block size for tests
+
+
+def test_match_empty():
+    kv = RadixKVIndex(block_size=B)
+    assert kv.match((1, 2, 3), 12) == 0
+
+
+def test_insert_then_match_full_and_partial():
+    kv = RadixKVIndex(block_size=B)
+    kv.insert((10, 11, 12))
+    assert kv.match((10, 11, 12), 12) == 12
+    assert kv.match((10, 11), 8) == 8
+    assert kv.match((10, 99), 8) == B
+    assert kv.match((99,), 4) == 0
+
+
+def test_prompt_len_caps_hit():
+    kv = RadixKVIndex(block_size=B)
+    kv.insert((1, 2))
+    # prompt has 2 full blocks + 3 trailing tokens (len 11): hit <= 11
+    assert kv.match((1, 2), prompt_len=7) == 7
+
+
+def test_lru_eviction_under_capacity():
+    kv = RadixKVIndex(block_size=B, capacity_tokens=3 * B)
+    kv.insert((1,))
+    kv.insert((2,))
+    kv.insert((3,))
+    assert kv.tokens_stored == 3 * B
+    kv.match((2,), touch=True)   # refresh 2
+    kv.match((3,), touch=True)
+    kv.insert((4,))              # evicts 1 (LRU leaf)
+    assert kv.tokens_stored <= 3 * B
+    assert kv.match((1,), 4) == 0
+    assert kv.match((3,), 4) == B
+
+
+def test_eviction_respects_tree_structure():
+    kv = RadixKVIndex(block_size=B, capacity_tokens=2 * B)
+    kv.insert((1, 2, 3))   # over capacity: evicts deepest LRU leaves
+    assert kv.tokens_stored <= 2 * B
+    assert kv.match((1,), 4) == B   # prefix survives, leaf evicted
+
+
+def test_exact_only_snapshot_semantics():
+    kv = RadixKVIndex(block_size=B, exact_only=True)
+    kv.insert((1, 2, 3))        # snapshot at depth 3 only
+    assert kv.match((1, 2, 3, 4), 16) == 12   # resume from snapshot
+    assert kv.match((1, 2), 8) == 0           # no snapshot at depth 2
+    kv.insert((1, 2))
+    assert kv.match((1, 2), 8) == 8
+
+
+def test_tokens_to_blocks_prefix_property():
+    a = list(range(100))
+    b = list(range(100)) + [7, 7, 7]
+    ba = tokens_to_blocks(a, 16)
+    bb = tokens_to_blocks(b, 16)
+    assert bb[:len(ba)] == ba
+    c = [1] + list(range(99))
+    bc = tokens_to_blocks(c, 16)
+    assert bc[0] != ba[0]
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.lists(st.integers(0, 5), min_size=1,
+                                   max_size=8)),
+                min_size=1, max_size=40))
+def test_property_match_is_longest_inserted_prefix(ops):
+    """match() == block_size * (longest inserted prefix path length)."""
+    kv = RadixKVIndex(block_size=B)
+    inserted = []
+    for is_insert, seq in ops:
+        seq = tuple(seq)
+        if is_insert:
+            kv.insert(seq)
+            inserted.append(seq)
+        else:
+            got = kv.match(seq, len(seq) * B)
+            best = 0
+            for ins in inserted:
+                d = 0
+                for x, y in zip(ins, seq):
+                    if x != y:
+                        break
+                    d += 1
+                best = max(best, d)
+            assert got == best * B
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=6),
+                min_size=1, max_size=20),
+       st.integers(1, 4))
+def test_property_capacity_never_exceeded_after_insert(seqs, cap_blocks):
+    kv = RadixKVIndex(block_size=B, capacity_tokens=cap_blocks * B)
+    for s in seqs:
+        kv.insert(tuple(s))
+        assert kv.tokens_stored <= cap_blocks * B

@@ -1,0 +1,75 @@
+"""Cluster-simulator integration tests: conservation, ordering, and the
+paper's headline directional claims at small scale."""
+import copy
+
+import pytest
+
+from repro.cluster.metrics import summarize
+from repro.cluster.simulator import ClusterSim
+from repro.configs import get_config
+from repro.core import (LatencyModel, LMetricPolicy, JSQPolicy, Router,
+                        spec_from_config, make_policy)
+from repro.workloads.traces import make_trace, trace_stats
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return spec_from_config(get_config("qwen2_7b"), chips=1)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace("chatbot", qps=20.0, duration=120.0, seed=3)
+
+
+def run_policy(policy, trace, spec, n=8):
+    reqs = copy.deepcopy(trace)
+    router = Router(policy, n, kv_capacity_tokens=300_000)
+    sim = ClusterSim(router, spec, LatencyModel(spec))
+    done = sim.run(reqs)
+    return done, router, sim
+
+
+def test_all_requests_finish_with_sane_timestamps(trace, spec):
+    done, router, sim = run_policy(JSQPolicy(), trace, spec)
+    assert len(done) == len(trace)
+    for r in done:
+        assert r.t_first_token >= r.arrival
+        assert r.t_finish >= r.t_first_token
+        assert r.ttft >= 0 and (r.output_len <= 1 or r.tpot > 0)
+
+
+def test_kv_aware_beats_jsq_on_hits_and_ttft(trace, spec):
+    """Fig. 7 direction: KV$-awareness cuts TTFT and raises hit rate."""
+    d1, _, _ = run_policy(JSQPolicy(), trace, spec)
+    d2, _, _ = run_policy(LMetricPolicy(), trace, spec)
+    s1, s2 = summarize(d1), summarize(d2)
+    assert s2["kv_hit_ratio"] > s1["kv_hit_ratio"] + 0.1
+    assert s2["ttft_mean"] < s1["ttft_mean"]
+
+
+def test_router_indicators_return_to_zero(trace, spec):
+    done, router, _ = run_policy(LMetricPolicy(), trace, spec)
+    for inst in router.factory:
+        assert inst.r_bs == 0
+        assert inst.q_bs == 0
+
+
+def test_finite_kv_capacity_reduces_hits(trace, spec):
+    _, router_big, _ = run_policy(LMetricPolicy(), trace, spec)
+    small = Router(LMetricPolicy(), 8, kv_capacity_tokens=10_000)
+    sim = ClusterSim(small, spec, LatencyModel(spec))
+    done_small = sim.run(copy.deepcopy(trace))
+    hits_small = summarize(done_small)["kv_hit_ratio"]
+    done_big, router, _ = run_policy(LMetricPolicy(), trace, spec)
+    assert hits_small < summarize(done_big)["kv_hit_ratio"]
+
+
+def test_deterministic_given_seed(spec):
+    t1 = make_trace("agent", qps=10, duration=60, seed=9)
+    t2 = make_trace("agent", qps=10, duration=60, seed=9)
+    assert [r.blocks for r in t1] == [r.blocks for r in t2]
+    d1, _, _ = run_policy(LMetricPolicy(), t1, spec, n=4)
+    d2, _, _ = run_policy(LMetricPolicy(), t2, spec, n=4)
+    s1, s2 = summarize(d1), summarize(d2)
+    assert s1["ttft_mean"] == pytest.approx(s2["ttft_mean"])

@@ -1,0 +1,64 @@
+"""Workload generator tests: family characteristics, determinism, the
+adversarial hotspot structure."""
+import numpy as np
+import pytest
+
+from repro.workloads.traces import (FAMILIES, infinite_kv_hit_ratio,
+                                    make_hotspot_trace, make_trace,
+                                    trace_stats)
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_family_shape_characteristics(fam):
+    reqs = make_trace(fam, qps=8.0, duration=240.0, seed=2)
+    st = trace_stats(reqs)
+    assert st["n"] > 100
+    assert 0.3 * 8 < st["qps"] < 2.5 * 8          # rate in the ballpark
+    # Fig. 5: every family exhibits substantial infinite-KV$ hit rate
+    assert st["inf_kv_hit"] > 0.35, f"{fam}: {st['inf_kv_hit']}"
+    assert st["inf_kv_hit"] < 0.98
+
+
+def test_family_contrasts():
+    """coder has much longer prompts than agent; toolagent has the
+    highest hit rate (long tool loops over a growing shared context)."""
+    coder = trace_stats(make_trace("coder", 6, 240, seed=1))
+    agent = trace_stats(make_trace("agent", 6, 240, seed=1))
+    tool = trace_stats(make_trace("toolagent", 6, 240, seed=1))
+    assert coder["input_mean"] > 3 * agent["input_mean"]
+    assert tool["inf_kv_hit"] > agent["inf_kv_hit"]
+
+
+def test_multi_turn_prompts_grow_and_share_prefix():
+    reqs = make_trace("chatbot", 6, 200, seed=4)
+    by_class = {}
+    for r in reqs:
+        by_class.setdefault(r.class_id, []).append(r)
+    multi = [v for v in by_class.values() if len(v) >= 3]
+    assert multi, "expected multi-turn conversations"
+    conv = sorted(multi[0], key=lambda r: r.arrival)
+    for a, b in zip(conv, conv[1:]):
+        assert len(b.blocks) > len(a.blocks)
+        assert b.blocks[:len(a.blocks)] == a.blocks   # prefix containment
+
+
+def test_determinism():
+    a = make_trace("agent", 5, 120, seed=7)
+    b = make_trace("agent", 5, 120, seed=7)
+    assert [(r.arrival, r.blocks, r.output_len) for r in a] == \
+           [(r.arrival, r.blocks, r.output_len) for r in b]
+    c = make_trace("agent", 5, 120, seed=8)
+    assert [r.blocks for r in a] != [r.blocks for r in c]
+
+
+def test_hotspot_trace_has_burst_window_with_shared_prefix():
+    reqs = make_hotspot_trace(qps=10, duration=900, seed=0)
+    hot = [r for r in reqs if r.class_id == 999_999]
+    assert len(hot) > 50
+    assert all(660 <= r.arrival <= 780 for r in hot)
+    p = hot[0].blocks[:64]
+    assert all(r.blocks[:64] == p for r in hot)
+    # the hot class dominates arrivals inside the burst window (x/x̄ high)
+    window = [r for r in reqs if 660 <= r.arrival <= 780]
+    frac = len(hot) / len(window)
+    assert frac > 0.25
