@@ -12,7 +12,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import HotspotDetector, LMetricPolicy
-from .common import (build_policy, cached, csv_row, run_sim)
+from .common import (KV_CAPACITY, build_policy, cached, csv_row, run_sim)
 
 Q = 0.5            # default rate fraction of capacity (paper: half max)
 DUR = 240.0
@@ -330,6 +330,62 @@ def bench_fig28_load_gradient(force=False):
 
 
 # ---------------------------------------------------------------------------
+def bench_router_scale(force=False):
+    """Vectorized scoring core vs the frozen scalar reference: mean
+    per-decision latency of the paper's LMETRIC policy at 16 / 256 / 1024
+    instances.  The scalar path walks per-instance Python state; the
+    vectorized path is a handful of array ops over the factory's
+    indicator arrays plus one aggregated-prefix-index walk for the hit
+    vector — this is what makes routing viable at 1000-instance scale."""
+    import time
+
+    from repro.core import make_policy
+    from repro.core.indicators import IndicatorFactory
+    from repro.core.scalar_ref import make_scalar_policy
+    from repro.workloads.traces import make_trace
+
+    sizes = (16, 256, 1024)
+    decisions = {16: 1200, 256: 600, 1024: 250}
+
+    def measure(policy, n_inst, reqs):
+        factory = IndicatorFactory(n_inst, kv_capacity_tokens=KV_CAPACITY)
+        ns = []
+        for req in reqs:
+            t0 = time.perf_counter_ns()
+            iid = policy.route(req, factory, req.arrival)
+            ns.append(time.perf_counter_ns() - t0)
+            inst = factory[iid]
+            hit = inst.kv_hit(req, touch=True)
+            inst.on_route(req, req.arrival, hit)
+            inst.kv.insert(req.blocks)
+        warm = ns[len(ns) // 5:]           # drop cold-cache warmup
+        return sum(warm) / len(warm) / 1e3
+
+    def go():
+        trace = make_trace("agent", qps=30.0, duration=120.0, seed=2)
+        out = {}
+        for n in sizes:
+            reqs = trace[:decisions[n]]
+            out[str(n)] = {
+                "vector_us": measure(make_policy("lmetric"), n, reqs),
+                "scalar_us": measure(make_scalar_policy("lmetric"), n, reqs),
+            }
+        return out
+    r = cached("router_scale", go, force)
+    rows = []
+    for n in sizes:
+        v, s = r[str(n)]["vector_us"], r[str(n)]["scalar_us"]
+        rows.append(csv_row(f"router_scale.n{n}.vector", v,
+                            f"scalar={s:.1f}us speedup={s / v:.1f}x"))
+    sp256 = r["256"]["scalar_us"] / r["256"]["vector_us"]
+    sp1k = r["1024"]["scalar_us"] / r["1024"]["vector_us"]
+    return rows, (f"vectorized core: {sp256:.1f}x faster @256 instances, "
+                  f"{sp1k:.1f}x @1024 "
+                  f"({r['1024']['vector_us']:.0f}us/decision at 1k scale; "
+                  f"target >=5x @256)")
+
+
+# ---------------------------------------------------------------------------
 def bench_router_overhead(force=False):
     """§3: per-decision scheduling latency by policy (µs)."""
     def go():
@@ -461,6 +517,7 @@ ALL_BENCHES = [
     bench_fig26_research_baselines,
     bench_fig27_preble_branches,
     bench_fig28_load_gradient,
+    bench_router_scale,
     bench_router_overhead,
     bench_beyond_pd_disagg,
     bench_beyond_cost_indicator,

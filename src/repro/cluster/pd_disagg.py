@@ -20,6 +20,8 @@ import heapq
 import itertools
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.indicators import IndicatorFactory
 from repro.core.latency_model import EngineSpec, LatencyModel
 from repro.core.types import Request
@@ -63,13 +65,12 @@ class PDDisaggSim:
     # ---- prefill pool -------------------------------------------------
     def _on_arrival(self, req: Request):
         # §7: unified indicator = P-token (new tokens after hit + queue)
-        hits = [i.kv_hit(req) for i in self.pf]
-        scores = [self.pf[k].p_token(req, hits[k])
-                  for k in range(len(self.pf))]
-        iid = min(range(len(scores)), key=lambda k: scores[k])
+        hits = self.pf.hits_for(req)
+        scores = self.pf.p_tokens_for(req, hits)
+        iid = int(np.argmin(scores))
         inst = self.pf[iid]
         req.sched_to = iid
-        req.hit_tokens = hits[iid]
+        req.hit_tokens = int(hits[iid])
         req.t_sched = self.now
         inst.on_route(req, self.now, hits[iid])
         inst.kv.insert(req.blocks)
@@ -116,8 +117,7 @@ class PDDisaggSim:
 
     # ---- decode pool ---------------------------------------------------
     def _on_decode_admit(self, req: Request):
-        bss = [i.bs for i in self.df]                 # §7: select_min(BS)
-        did = min(range(len(bss)), key=lambda k: bss[k])
+        did = int(np.argmin(self.df.bs_vector()))     # §7: select_min(BS)
         self.df[did].on_route(req, self.now, 0)
         self.df[did].on_start_running(req)
         if req.output_len <= 1:

@@ -1,7 +1,6 @@
-"""Indicator factory (paper §3, Fig. 4).
+"""Indicator factory (paper §3, Fig. 4) — structure-of-arrays core.
 
-The factory holds one ``InstanceState`` per serving instance and exposes
-the *direct system indicators* of Fig. 2:
+The factory exposes the *direct system indicators* of Fig. 2:
 
   R-BS   running batch size
   Q-BS   queued batch size
@@ -10,34 +9,215 @@ the *direct system indicators* of Fig. 2:
   #Tokens    total context tokens resident on the instance
   KV$        per-instance prefix-cache index (radix tree)
 
+Array contract
+--------------
+All scalar indicators live in contiguous ``numpy`` int64 arrays on the
+factory itself — one slot per instance, updated **in place** by the
+instance hooks:
+
+  ``factory.r_bs``                    shape (n,)   running batch sizes
+  ``factory.q_bs``                    shape (n,)   queued batch sizes
+  ``factory.queued_prefill_tokens``   shape (n,)   queued new-prefill tokens
+  ``factory.total_tokens``            shape (n,)   resident context tokens
+  ``factory.bs_vector()``             shape (n,)   R-BS + Q-BS (fresh array)
+  ``factory.hits_for(req)``           shape (n,)   per-instance KV$ hit tokens
+
+Policies score by vectorized expressions over these arrays (LMetric's
+``(p_token + 1) * (bs + 1)`` is two fused array ops); nothing in the
+scoring path walks per-instance Python objects.  The arrays are the
+substrate later PRs jit through jax/pallas for batch routing.
+
+``InstanceState`` remains the mutation interface — it is a *view* over
+one column of the factory's arrays (attribute reads/writes hit the
+arrays directly), so the existing update hooks, the cluster simulator,
+the in-process JAX engine, and tests that poke ``f[i].r_bs = 5`` all
+keep working unchanged.
+
+Vectorized KV$ hits
+-------------------
+``hits_for`` is backed by an aggregated prefix index: one radix tree
+shared across the factory whose nodes carry an instance *bitmask* (bit i
+set ⇔ instance i's own tree contains that block chain).  A single walk
+down the prompt yields every instance's hit depth; per-instance LRU
+clocks and capacity eviction stay in the per-instance trees, which keep
+the aggregate coherent through the ``RadixKVIndex`` on_insert/on_evict
+callbacks.  ``exact_only`` factories (recurrent-state semantics) fall
+back to the per-instance scalar walk, which the aggregate cannot model.
+
 Updates are piggybacked on instance responses in a real deployment; the
 cluster simulator and the in-process JAX engine call the same hooks.
-Derived indicators (kv_hit, p_token score inputs) are computed on demand.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from .radix import RadixKVIndex
 from .types import Request
 
 
+class AggregatedPrefixIndex:
+    """Cross-instance radix tree with per-node instance bitmasks.
+
+    ``match_depths(blocks)`` returns, for every instance at once, the
+    number of leading prompt blocks cached on that instance — O(prompt
+    depth) dict walks plus a handful of C-speed bit-scatter ops, instead
+    of O(n_instances) Python tree walks.
+    """
+
+    __slots__ = ("n", "_nbytes", "_full", "root")
+
+    class _Node:
+        __slots__ = ("children", "mask")
+
+        def __init__(self):
+            self.children: Dict[int, "AggregatedPrefixIndex._Node"] = {}
+            self.mask = 0
+
+    def __init__(self, n_instances: int):
+        self.n = n_instances
+        self._nbytes = (n_instances + 7) // 8
+        self._full = (1 << n_instances) - 1
+        self.root = self._Node()
+
+    # ------------------------------------------------------------------
+    def add(self, iid: int, blocks: Sequence[int]):
+        """Mark the whole chain as present on instance ``iid``."""
+        bit = 1 << iid
+        node = self.root
+        for b in blocks:
+            child = node.children.get(b)
+            if child is None:
+                child = self._Node()
+                node.children[b] = child
+            child.mask |= bit
+            node = child
+
+    def remove_leaf(self, iid: int, path: Sequence[int]):
+        """Instance ``iid`` evicted the leaf at ``path`` (root→leaf keys).
+
+        Only the final node loses the bit — ancestors are still cached
+        (radix eviction removes leaves only, so chains stay prefix-closed).
+        """
+        bit = 1 << iid
+        node = self.root
+        chain = []
+        for b in path:
+            nxt = node.children.get(b)
+            if nxt is None:
+                return
+            chain.append((node, b, nxt))
+            node = nxt
+        node.mask &= ~bit
+        # prune nodes that no instance holds and nothing hangs off
+        for parent, key, child in reversed(chain):
+            if child.mask == 0 and not child.children:
+                del parent.children[key]
+            else:
+                break
+
+    def remove_instance(self, iid: int):
+        """Instance ``iid`` cleared its whole cache."""
+        keep = ~(1 << iid)
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            dead = []
+            for key, child in node.children.items():
+                child.mask &= keep
+                if child.mask == 0 and not child.children:
+                    dead.append(key)
+                else:
+                    stack.append(child)
+            for key in dead:
+                del node.children[key]
+
+    # ------------------------------------------------------------------
+    def _scatter(self, mask: int, depth: int, out: np.ndarray):
+        if not mask or not depth:
+            return  # depth 0 is the zero-initialised default
+        raw = np.frombuffer(mask.to_bytes(self._nbytes, "little"), np.uint8)
+        bits = np.unpackbits(raw, bitorder="little", count=self.n)
+        out[bits.astype(bool)] = depth
+
+    def match_depths(self, blocks: Sequence[int],
+                     out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-instance cached-prefix depth (in blocks) for ``blocks``."""
+        if out is None:
+            out = np.zeros(self.n, dtype=np.int64)
+        else:
+            out[:] = 0
+        mask = self._full
+        node = self.root
+        d = 0
+        for b in blocks:
+            child = node.children.get(b)
+            if child is None:
+                break
+            nm = mask & child.mask
+            if nm != mask:
+                self._scatter(mask & ~nm, d, out)
+                mask = nm
+                if not mask:
+                    return out
+            node = child
+            d += 1
+        self._scatter(mask, d, out)
+        return out
+
+
 class InstanceState:
-    def __init__(self, iid: int, kv_capacity_tokens: int = 1 << 62,
-                 block_size: int = 64, exact_only: bool = False):
+    """Per-instance view over one column of the factory's arrays.
+
+    Scalar indicator attributes (``r_bs`` …) read and write the shared
+    numpy arrays in place, so per-instance hooks and direct attribute
+    pokes stay coherent with the vectorized scoring path.
+    """
+
+    __slots__ = ("iid", "_f", "kv", "routed_log")
+
+    def __init__(self, iid: int, factory: "IndicatorFactory",
+                 kv: RadixKVIndex):
         self.iid = iid
-        self.r_bs = 0
-        self.q_bs = 0
-        self.queued_prefill_tokens = 0
-        self.total_tokens = 0          # context tokens of resident requests
-        self.kv = RadixKVIndex(block_size=block_size,
-                               capacity_tokens=kv_capacity_tokens,
-                               exact_only=exact_only)
+        self._f = factory
+        self.kv = kv
         # rolling accounting for monitoring / Preble windows
         self.routed_log: List = []     # (time, p_tokens) of routed requests
 
-    # ---- indicator reads -------------------------------------------------
+    # ---- indicator reads/writes (array-backed) ---------------------------
+    @property
+    def r_bs(self) -> int:
+        return int(self._f.r_bs[self.iid])
+
+    @r_bs.setter
+    def r_bs(self, v: int):
+        self._f.r_bs[self.iid] = v
+
+    @property
+    def q_bs(self) -> int:
+        return int(self._f.q_bs[self.iid])
+
+    @q_bs.setter
+    def q_bs(self, v: int):
+        self._f.q_bs[self.iid] = v
+
+    @property
+    def queued_prefill_tokens(self) -> int:
+        return int(self._f.queued_prefill_tokens[self.iid])
+
+    @queued_prefill_tokens.setter
+    def queued_prefill_tokens(self, v: int):
+        self._f.queued_prefill_tokens[self.iid] = v
+
+    @property
+    def total_tokens(self) -> int:
+        return int(self._f.total_tokens[self.iid])
+
+    @total_tokens.setter
+    def total_tokens(self, v: int):
+        self._f.total_tokens[self.iid] = v
+
     @property
     def bs(self) -> int:
         return self.r_bs + self.q_bs
@@ -53,26 +233,32 @@ class InstanceState:
 
     # ---- update hooks (called by router / engine / simulator) ------------
     def on_route(self, req: Request, now: float, hit: int):
-        self.q_bs += 1
-        self.queued_prefill_tokens += req.prompt_len - hit
-        self.total_tokens += req.prompt_len
+        f, i = self._f, self.iid
+        f.q_bs[i] += 1
+        f.queued_prefill_tokens[i] += req.prompt_len - hit
+        f.total_tokens[i] += req.prompt_len
         self.routed_log.append((now, req.prompt_len - hit))
 
     def on_prefill_progress(self, n_tokens: int):
-        self.queued_prefill_tokens = max(
-            0, self.queued_prefill_tokens - n_tokens)
+        f, i = self._f, self.iid
+        left = f.queued_prefill_tokens[i] - n_tokens
+        f.queued_prefill_tokens[i] = left if left > 0 else 0
 
     def on_start_running(self, req: Request):
-        self.q_bs = max(0, self.q_bs - 1)
-        self.r_bs += 1
+        f, i = self._f, self.iid
+        if f.q_bs[i] > 0:
+            f.q_bs[i] -= 1
+        f.r_bs[i] += 1
 
     def on_decode_token(self):
-        self.total_tokens += 1
+        self._f.total_tokens[self.iid] += 1
 
     def on_finish(self, req: Request):
-        self.r_bs = max(0, self.r_bs - 1)
-        self.total_tokens = max(
-            0, self.total_tokens - req.prompt_len - req.output_len)
+        f, i = self._f, self.iid
+        if f.r_bs[i] > 0:
+            f.r_bs[i] -= 1
+        left = f.total_tokens[i] - req.prompt_len - req.output_len
+        f.total_tokens[i] = left if left > 0 else 0
 
     def trim_log(self, now: float, window: float):
         log = self.routed_log
@@ -87,12 +273,33 @@ class InstanceState:
 class IndicatorFactory:
     def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
                  block_size: int = 64, exact_only: bool = False):
-        self.instances = [
-            InstanceState(i, kv_capacity_tokens, block_size, exact_only)
-            for i in range(n_instances)]
+        self.n = n_instances
+        self.block_size = block_size
+        self.exact_only = exact_only
+        # --- the array contract (see module docstring) -------------------
+        self.r_bs = np.zeros(n_instances, dtype=np.int64)
+        self.q_bs = np.zeros(n_instances, dtype=np.int64)
+        self.queued_prefill_tokens = np.zeros(n_instances, dtype=np.int64)
+        self.total_tokens = np.zeros(n_instances, dtype=np.int64)
+        self._hit_depths = np.zeros(n_instances, dtype=np.int64)
+        # exact_only hit semantics (deepest snapshot boundary) cannot be
+        # read off chain membership alone -> scalar per-instance fallback
+        self._agg = None if exact_only else AggregatedPrefixIndex(n_instances)
+        self.instances = []
+        for i in range(n_instances):
+            kv = RadixKVIndex(block_size=block_size,
+                              capacity_tokens=kv_capacity_tokens,
+                              exact_only=exact_only)
+            if self._agg is not None:
+                kv.on_insert = (lambda blocks, _i=i:
+                                self._agg.add(_i, blocks))
+                kv.on_evict = (lambda path, _i=i:
+                               self._agg.remove_leaf(_i, path))
+                kv.on_clear = (lambda _i=i: self._agg.remove_instance(_i))
+            self.instances.append(InstanceState(i, self, kv))
 
     def __len__(self):
-        return len(self.instances)
+        return self.n
 
     def __iter__(self):
         return iter(self.instances)
@@ -100,16 +307,33 @@ class IndicatorFactory:
     def __getitem__(self, i) -> InstanceState:
         return self.instances[i]
 
-    def hits_for(self, req: Request) -> List[int]:
-        return [inst.kv_hit(req) for inst in self.instances]
+    # ---- vectorized reads ------------------------------------------------
+    def bs_vector(self) -> np.ndarray:
+        return self.r_bs + self.q_bs
+
+    def hits_for(self, req: Request) -> np.ndarray:
+        """Per-instance KV$ hit tokens (capped at the prompt length)."""
+        if self._agg is not None:
+            depths = self._agg.match_depths(req.blocks, out=self._hit_depths)
+            hits = depths * self.block_size
+            np.minimum(hits, req.prompt_len, out=hits)
+            return hits
+        return np.array([inst.kv_hit(req) for inst in self.instances],
+                        dtype=np.int64)
+
+    def p_tokens_for(self, req: Request,
+                     hits: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized Fig. 17(b) P-token: queued prefill + new tokens."""
+        if hits is None:
+            hits = self.hits_for(req)
+        return self.queued_prefill_tokens + (req.prompt_len - hits)
 
     def snapshot(self) -> Dict[str, List]:
         return {
-            "r_bs": [i.r_bs for i in self.instances],
-            "q_bs": [i.q_bs for i in self.instances],
-            "bs": [i.bs for i in self.instances],
-            "queued_prefill_tokens":
-                [i.queued_prefill_tokens for i in self.instances],
-            "total_tokens": [i.total_tokens for i in self.instances],
+            "r_bs": self.r_bs.tolist(),
+            "q_bs": self.q_bs.tolist(),
+            "bs": self.bs_vector().tolist(),
+            "queued_prefill_tokens": self.queued_prefill_tokens.tolist(),
+            "total_tokens": self.total_tokens.tolist(),
             "kv_tokens": [i.kv.tokens_stored for i in self.instances],
         }

@@ -26,6 +26,8 @@ import dataclasses
 import math
 from typing import Optional
 
+import numpy as np
+
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s / chip
 
@@ -82,6 +84,16 @@ class LatencyModel:
         # lognormal-ish multiplicative error
         return math.exp((u - 0.5) * 2.0 * self.error_std)
 
+    def noise_draws(self, n: int):
+        """``n`` successive noise draws as an array (1.0 when disabled).
+
+        Advances the LCG exactly as ``n`` scalar ``_noise()`` calls would,
+        so vectorized policies stay bit-compatible with the scalar path.
+        """
+        if not self.error_std:
+            return 1.0
+        return np.array([self._noise() for _ in range(n)])
+
     # ---------------------------------------------------------------------
     def step_time(self, prefill_tokens: int, decode_bs: int,
                   context_tokens: int) -> float:
@@ -114,3 +126,44 @@ class LatencyModel:
         t = self.step_time(int(prefill_share * s.chunk_tokens),
                            decode_bs + 1, context_tokens)
         return t * self._noise()
+
+    # ---- vectorized twins (bit-compatible with the scalar path) ---------
+    # Each *_batch method evaluates the scalar formula elementwise with the
+    # identical operation order, so results match the per-instance loop to
+    # the last float bit; noise draws are taken in instance order (pass
+    # ``noise`` to control interleaving, e.g. PolyServe's ttft/tpot pairs).
+
+    def step_time_batch(self, prefill_tokens, decode_bs,
+                        context_tokens) -> np.ndarray:
+        s = self.spec
+        decode_bs = np.asarray(decode_bs)
+        return (s.step_overhead
+                + s.c_flops * (prefill_tokens + decode_bs)
+                + s.c_attn * context_tokens * (decode_bs != 0)
+                + s.c_attn * prefill_tokens * 0.25)
+
+    def predict_ttft_batch(self, queued_prefill_tokens, new_tokens,
+                           decode_bs, context_tokens,
+                           noise=None) -> np.ndarray:
+        s = self.spec
+        todo = np.asarray(queued_prefill_tokens) + new_tokens
+        steps = np.maximum(1, np.ceil(todo / s.chunk_tokens))
+        per_step = self.step_time_batch(np.minimum(todo, s.chunk_tokens),
+                                        decode_bs, context_tokens)
+        if noise is None:
+            noise = self.noise_draws(len(per_step))
+        return steps * per_step * noise
+
+    def predict_tpot_batch(self, decode_bs, context_tokens,
+                           queued_prefill_tokens=0,
+                           noise=None) -> np.ndarray:
+        s = self.spec
+        decode_bs = np.asarray(decode_bs)
+        prefill_share = np.minimum(
+            1.0, np.asarray(queued_prefill_tokens) / (4 * s.chunk_tokens))
+        t = self.step_time_batch(
+            (prefill_share * s.chunk_tokens).astype(np.int64),
+            decode_bs + 1, context_tokens)
+        if noise is None:
+            noise = self.noise_draws(len(t))
+        return t * noise

@@ -13,6 +13,16 @@ their published pseudocode:
   PolyServePolicy    SLO/utilization packing     (Fig. 33)
   LMetricPolicy      THE PAPER: P-token × BS     (Fig. 17b)
 
+Scoring is fully vectorized over the factory's indicator arrays
+(``r_bs`` / ``q_bs`` / ``queued_prefill_tokens`` / ``total_tokens`` and
+the ``hits_for`` hit vector) — a routing decision is a handful of numpy
+expressions regardless of cluster size, which is what lets the router
+scale to 1000-instance clusters (see ``benchmarks.figures.
+bench_router_scale``).  Every formula keeps the exact operation order of
+the original per-instance loop, so decisions are bit-compatible with the
+frozen scalar reference in ``repro.core.scalar_ref`` (enforced by the
+differential test).
+
 LMetricPolicy exposes the §5.1 ablations via ``kv_indicator``
 ("ptoken" | "one_minus_hit") and ``load_indicator`` ("bs" | "tokens")
 and hosts the §5.2 two-phase hotspot detector.
@@ -20,10 +30,11 @@ and hosts the §5.2 two-phase hotspot detector.
 from __future__ import annotations
 
 import itertools
-import math
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-from .indicators import IndicatorFactory, InstanceState
+import numpy as np
+
+from .indicators import IndicatorFactory
 from .latency_model import LatencyModel
 from .types import Request
 
@@ -37,12 +48,23 @@ class Policy:
     def __init__(self):
         self._tie = itertools.count()
 
-    def _select_min(self, scores: Sequence[float],
-                    allowed: Optional[Sequence[int]] = None) -> int:
-        idx = range(len(scores)) if allowed is None else allowed
-        best = min(scores[i] for i in idx)
-        ties = [i for i in idx if scores[i] <= best + _EPS]
-        return ties[next(self._tie) % len(ties)]
+    def _select_min(self, scores, allowed=None) -> int:
+        """Vectorized argmin with epsilon-tie round-robin.
+
+        Semantics identical to the scalar reference: minimum over the
+        allowed indices, ties within ``_EPS``, round-robin among ties via
+        the per-policy counter.
+        """
+        s = np.asarray(scores)
+        if allowed is None:
+            best = s.min()
+            ties = np.flatnonzero(s <= best + _EPS)
+        else:
+            a = np.asarray(allowed)
+            sub = s[a]
+            best = sub.min()
+            ties = a[sub <= best + _EPS]
+        return int(ties[next(self._tie) % len(ties)])
 
     def route(self, req: Request, factory: IndicatorFactory,
               now: float) -> int:
@@ -59,7 +81,7 @@ class JSQPolicy(Policy):
     requires_kv = False
 
     def route(self, req, factory, now):
-        scores = [4.0 * i.q_bs + i.r_bs for i in factory]
+        scores = 4.0 * factory.q_bs + factory.r_bs
         return self._select_min(scores)
 
 
@@ -75,11 +97,11 @@ class LinearKVPolicy(Policy):
 
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
-        max_bs = max(max(i.bs for i in factory), 1)
+        bs = factory.bs_vector()
+        max_bs = max(int(bs.max()), 1)
         L = max(req.prompt_len, 1)
-        scores = [self.lam * (1.0 - hits[k] / L)
-                  + (1.0 - self.lam) * (inst.bs / max_bs)
-                  for k, inst in enumerate(factory)]
+        scores = self.lam * (1.0 - hits / L) \
+            + (1.0 - self.lam) * (bs / max_bs)
         return self._select_min(scores)
 
 
@@ -94,12 +116,10 @@ class DynamoPolicy(Policy):
         self.name = f"dynamo(λ={lam})"
 
     def route(self, req, factory, now):
-        hits = factory.hits_for(req)
-        pt = [inst.p_token(req, hits[k]) for k, inst in enumerate(factory)]
-        tt = [inst.total_tokens for inst in factory]
-        mp, mt = max(max(pt), 1), max(max(tt), 1)
-        scores = [self.lam * pt[k] / mp + (1 - self.lam) * tt[k] / mt
-                  for k in range(len(factory))]
+        pt = factory.p_tokens_for(req)
+        tt = factory.total_tokens
+        mp, mt = max(int(pt.max()), 1), max(int(tt.max()), 1)
+        scores = self.lam * pt / mp + (1 - self.lam) * tt / mt
         return self._select_min(scores)
 
 
@@ -114,12 +134,11 @@ class FilterKVPolicy(Policy):
         self.name = f"filter(range={bs_range})"
 
     def route(self, req, factory, now):
-        bss = [i.bs for i in factory]
-        if max(bss) - min(bss) > self.bs_range:            # load balance
+        bss = factory.bs_vector()
+        if int(bss.max()) - int(bss.min()) > self.bs_range:  # load balance
             return self._select_min(bss)
-        hits = factory.hits_for(req)                       # KV$-awareness
-        best = max(hits)
-        cand = [k for k, h in enumerate(hits) if h >= best]
+        hits = factory.hits_for(req)                         # KV$-awareness
+        cand = np.flatnonzero(hits >= hits.max())
         return self._select_min(bss, allowed=cand)
 
 
@@ -135,13 +154,11 @@ class SimulationPolicy(Policy):
         self.name = "llm-d" + ("" if kv_aware else "-nokv")
 
     def route(self, req, factory, now):
-        hits = factory.hits_for(req) if self.kv_aware else [0] * len(factory)
-        scores = []
-        for k, inst in enumerate(factory):
-            new = req.prompt_len - hits[k]
-            scores.append(self.model.predict_ttft(
-                inst.queued_prefill_tokens, new, inst.r_bs,
-                inst.total_tokens))
+        hits = factory.hits_for(req) if self.kv_aware else 0
+        new = req.prompt_len - hits
+        scores = self.model.predict_ttft_batch(
+            factory.queued_prefill_tokens, new, factory.r_bs,
+            factory.total_tokens)
         return self._select_min(scores)
 
 
@@ -164,20 +181,23 @@ class PreblePolicy(Policy):
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
         L = max(req.prompt_len, 1)
-        best = max(hits) / L
+        ratios = hits / L
+        best = ratios.max()
         if best > self.T:
             self.branch_counts["kv"] += 1
-            cand = [k for k, h in enumerate(hits) if h / L >= best - _EPS]
-            pts = [factory[k].p_token(req, hits[k]) for k in range(
-                len(factory))]
+            cand = np.flatnonzero(ratios >= best - _EPS)
+            pts = factory.p_tokens_for(req, hits)
             return self._select_min(pts, allowed=cand)
         self.branch_counts["fallback"] += 1
-        scores = []
-        for inst in factory:
+        # window bookkeeping lives in per-instance Python logs (rare path,
+        # bounded by the 3-minute window); vectorizing would mean keeping
+        # per-instance ring buffers in arrays — not worth it yet.
+        scores = np.empty(len(factory))
+        for k, inst in enumerate(factory):
             inst.trim_log(now, self.window)
             sum_pt = sum(p for _, p in inst.routed_log)
             n = len(inst.routed_log)
-            scores.append(self.alpha * sum_pt + self.beta * n)
+            scores[k] = self.alpha * sum_pt + self.beta * n
         return self._select_min(scores)
 
 
@@ -197,21 +217,26 @@ class PolyServePolicy(Policy):
 
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
-        ttfts, tpots = [], []
-        for k, inst in enumerate(factory):
-            new = req.prompt_len - hits[k]
-            ttfts.append(self.model.predict_ttft(
-                inst.queued_prefill_tokens, new, inst.r_bs,
-                inst.total_tokens))
-            tpots.append(self.model.predict_tpot(
-                inst.r_bs, inst.total_tokens, inst.queued_prefill_tokens))
-        feasible = [k for k in range(len(factory))
-                    if ttfts[k] <= self.slo_ttft and tpots[k] <= self.slo_tpot]
-        if not feasible:                         # load-balancing branch
+        new = req.prompt_len - hits
+        n = len(factory)
+        # scalar path drew noise as ttft0,tpot0,ttft1,tpot1,… — deal the
+        # same stream out interleaved to stay bit-compatible
+        draws = self.model.noise_draws(2 * n)
+        tn = pn = 1.0
+        if isinstance(draws, np.ndarray):
+            tn, pn = draws[0::2], draws[1::2]
+        ttfts = self.model.predict_ttft_batch(
+            factory.queued_prefill_tokens, new, factory.r_bs,
+            factory.total_tokens, noise=tn)
+        tpots = self.model.predict_tpot_batch(
+            factory.r_bs, factory.total_tokens,
+            factory.queued_prefill_tokens, noise=pn)
+        feasible = np.flatnonzero((ttfts <= self.slo_ttft)
+                                  & (tpots <= self.slo_tpot))
+        if feasible.size == 0:                   # load-balancing branch
             return self._select_min(tpots)
         # utilization branch: MOST loaded feasible instance
-        neg = [-tpots[k] for k in range(len(factory))]
-        return self._select_min(neg, allowed=feasible)
+        return self._select_min(-tpots, allowed=feasible)
 
 
 # ---------------------------------------------------------------------------
@@ -247,23 +272,21 @@ class LMetricPolicy(Policy):
             self.name = f"lmetric[{kv_indicator}×{load_indicator}]"
 
     def scores(self, req, factory, hits):
+        hits = np.asarray(hits)
         L = max(req.prompt_len, 1)
-        out = []
-        for k, inst in enumerate(factory):
-            if self.kv_indicator == "ptoken":
-                a = inst.p_token(req, hits[k]) + 1.0
-            else:
-                a = 1.0 - hits[k] / L + 1e-3
-            if self.load_indicator == "bs":
-                b = inst.bs + 1.0
-            elif self.load_indicator == "cost":
-                # physical decode-step cost at this instance's load
-                b = self.latency_model.step_time(
-                    0, inst.bs + 1, inst.total_tokens) * 1e3
-            else:
-                b = inst.total_tokens + 1.0
-            out.append(a * b)
-        return out
+        if self.kv_indicator == "ptoken":
+            a = factory.p_tokens_for(req, hits) + 1.0
+        else:
+            a = 1.0 - hits / L + 1e-3
+        if self.load_indicator == "bs":
+            b = factory.bs_vector() + 1.0
+        elif self.load_indicator == "cost":
+            # physical decode-step cost at this instance's load
+            b = self.latency_model.step_time_batch(
+                0, factory.bs_vector() + 1, factory.total_tokens) * 1e3
+        else:
+            b = factory.total_tokens + 1.0
+        return a * b
 
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
@@ -271,14 +294,13 @@ class LMetricPolicy(Policy):
         excluded = set()
         if self.detector is not None:
             excluded = self.detector.observe(req, factory, hits, scores, now)
-        allowed = [k for k in range(len(factory)) if k not in excluded]
-        if not allowed:
-            allowed = list(range(len(factory)))
         if excluded:
+            allowed = [k for k in range(len(factory)) if k not in excluded]
+            if not allowed:
+                allowed = list(range(len(factory)))
             # mitigation: fall back to load-balance-only over remainder
-            bss = [factory[k].bs for k in range(len(factory))]
-            return self._select_min(bss, allowed=allowed)
-        return self._select_min(scores, allowed=allowed)
+            return self._select_min(factory.bs_vector(), allowed=allowed)
+        return self._select_min(scores)
 
 
 def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
@@ -301,5 +323,7 @@ def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
         assert latency_model is not None
         return PolyServePolicy(latency_model, **kw)
     if name == "lmetric":
+        if latency_model is not None:
+            kw.setdefault("latency_model", latency_model)
         return LMetricPolicy(**kw)
     raise KeyError(name)

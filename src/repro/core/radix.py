@@ -14,6 +14,12 @@ finite per-instance KV$ space.  ``exact_only`` supports the recurrent
 families (DESIGN.md §Arch-applicability): a recurrent-state snapshot is
 reusable only on an exact full-prefix boundary, so partial prefix credit
 is disallowed.
+
+Coherence callbacks: ``on_insert(blocks)`` fires after every ``insert``
+and ``on_evict(path)`` after every leaf eviction (``path`` is the full
+root→leaf key chain).  ``IndicatorFactory`` uses them to keep its
+aggregated cross-instance prefix index in sync, so any caller may mutate
+``inst.kv`` directly without desynchronising vectorized hit lookups.
 """
 from __future__ import annotations
 
@@ -54,6 +60,10 @@ class RadixKVIndex:
         self.root = _Node(None, None)
         self._clock = itertools.count(1)
         self._n_blocks = 0
+        # coherence hooks (see module docstring); None = disabled
+        self.on_insert = None
+        self.on_evict = None
+        self.on_clear = None
 
     # ------------------------------------------------------------------
     def match(self, blocks: Sequence[int], prompt_len: Optional[int] = None,
@@ -103,6 +113,8 @@ class RadixKVIndex:
             node = child
         if node is not self.root:
             node.terminal = True    # snapshot saved at this boundary
+        if self.on_insert is not None and blocks:
+            self.on_insert(blocks)
         if added and self.tokens_stored > self.capacity_tokens:
             self._evict_to_capacity()
         return added * self.block_size
@@ -124,6 +136,13 @@ class RadixKVIndex:
             if leaf.children or leaf.parent is None:
                 continue  # stale entry
             parent = leaf.parent
+            if self.on_evict is not None:
+                path, n = [], leaf
+                while n.parent is not None:
+                    path.append(n.key)
+                    n = n.parent
+                path.reverse()
+                self.on_evict(path)
             del parent.children[leaf.key]
             leaf.parent = None
             self._n_blocks -= 1
@@ -149,3 +168,5 @@ class RadixKVIndex:
     def clear(self):
         self.root = _Node(None, None)
         self._n_blocks = 0
+        if self.on_clear is not None:
+            self.on_clear()

@@ -1,0 +1,267 @@
+"""Frozen scalar reference for the vectorized scoring path.
+
+This module preserves, verbatim in structure and operation order, the
+original per-instance Python-loop implementation of every policy that
+``repro.core.policies`` now evaluates as numpy array expressions.  It
+exists for two reasons:
+
+1. **Differential testing** — ``tests/test_vectorized_diff.py`` routes
+   identical traces through both paths and asserts every decision
+   matches, which proves the refactor changed the data model but not a
+   single routing outcome.
+2. **Benchmarking** — ``benchmarks.figures.bench_router_scale`` measures
+   per-decision latency of this path vs the vectorized one at 16 / 256 /
+   1024 instances.
+
+Do not "improve" this file: its value is being the pre-refactor scalar
+behaviour, bit for bit.  Hits are computed with the per-instance radix
+walk (not the aggregated index), so the differential test also verifies
+the aggregated index agrees with per-instance tree state.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence
+
+from .indicators import IndicatorFactory
+from .latency_model import LatencyModel
+from .types import Request
+
+_EPS = 1e-9
+
+
+def hits_for_scalar(factory: IndicatorFactory, req: Request) -> List[int]:
+    """Original O(n) per-instance radix-walk hit vector."""
+    return [inst.kv_hit(req) for inst in factory]
+
+
+class ScalarPolicy:
+    name = "base"
+
+    def __init__(self):
+        self._tie = itertools.count()
+
+    def _select_min(self, scores: Sequence[float],
+                    allowed: Optional[Sequence[int]] = None) -> int:
+        idx = range(len(scores)) if allowed is None else allowed
+        best = min(scores[i] for i in idx)
+        ties = [i for i in idx if scores[i] <= best + _EPS]
+        return ties[next(self._tie) % len(ties)]
+
+    def route(self, req: Request, factory: IndicatorFactory,
+              now: float) -> int:
+        raise NotImplementedError
+
+
+class ScalarJSQPolicy(ScalarPolicy):
+    name = "vllm"
+
+    def route(self, req, factory, now):
+        scores = [4.0 * i.q_bs + i.r_bs for i in factory]
+        return self._select_min(scores)
+
+
+class ScalarLinearKVPolicy(ScalarPolicy):
+    name = "linear"
+
+    def __init__(self, lam: float = 0.7):
+        super().__init__()
+        self.lam = lam
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        max_bs = max(max(i.bs for i in factory), 1)
+        L = max(req.prompt_len, 1)
+        scores = [self.lam * (1.0 - hits[k] / L)
+                  + (1.0 - self.lam) * (inst.bs / max_bs)
+                  for k, inst in enumerate(factory)]
+        return self._select_min(scores)
+
+
+class ScalarDynamoPolicy(ScalarPolicy):
+    name = "dynamo"
+
+    def __init__(self, lam: float = 0.5):
+        super().__init__()
+        self.lam = lam
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        pt = [inst.p_token(req, hits[k]) for k, inst in enumerate(factory)]
+        tt = [inst.total_tokens for inst in factory]
+        mp, mt = max(max(pt), 1), max(max(tt), 1)
+        scores = [self.lam * pt[k] / mp + (1 - self.lam) * tt[k] / mt
+                  for k in range(len(factory))]
+        return self._select_min(scores)
+
+
+class ScalarFilterKVPolicy(ScalarPolicy):
+    name = "filter"
+
+    def __init__(self, bs_range: int = 8):
+        super().__init__()
+        self.bs_range = bs_range
+
+    def route(self, req, factory, now):
+        bss = [i.bs for i in factory]
+        if max(bss) - min(bss) > self.bs_range:            # load balance
+            return self._select_min(bss)
+        hits = hits_for_scalar(factory, req)               # KV$-awareness
+        best = max(hits)
+        cand = [k for k, h in enumerate(hits) if h >= best]
+        return self._select_min(bss, allowed=cand)
+
+
+class ScalarSimulationPolicy(ScalarPolicy):
+    name = "llm-d"
+
+    def __init__(self, model: LatencyModel, kv_aware: bool = True):
+        super().__init__()
+        self.model = model
+        self.kv_aware = kv_aware
+
+    def route(self, req, factory, now):
+        hits = (hits_for_scalar(factory, req) if self.kv_aware
+                else [0] * len(factory))
+        scores = []
+        for k, inst in enumerate(factory):
+            new = req.prompt_len - hits[k]
+            scores.append(self.model.predict_ttft(
+                inst.queued_prefill_tokens, new, inst.r_bs,
+                inst.total_tokens))
+        return self._select_min(scores)
+
+
+class ScalarPreblePolicy(ScalarPolicy):
+    name = "preble"
+
+    def __init__(self, T: float = 0.5, alpha: float = 1.0,
+                 beta: float = 100.0, window: float = 180.0):
+        super().__init__()
+        self.T = T
+        self.alpha = alpha
+        self.beta = beta
+        self.window = window
+        self.branch_counts = {"kv": 0, "fallback": 0}
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        L = max(req.prompt_len, 1)
+        best = max(hits) / L
+        if best > self.T:
+            self.branch_counts["kv"] += 1
+            cand = [k for k, h in enumerate(hits) if h / L >= best - _EPS]
+            pts = [factory[k].p_token(req, hits[k]) for k in range(
+                len(factory))]
+            return self._select_min(pts, allowed=cand)
+        self.branch_counts["fallback"] += 1
+        scores = []
+        for inst in factory:
+            inst.trim_log(now, self.window)
+            sum_pt = sum(p for _, p in inst.routed_log)
+            n = len(inst.routed_log)
+            scores.append(self.alpha * sum_pt + self.beta * n)
+        return self._select_min(scores)
+
+
+class ScalarPolyServePolicy(ScalarPolicy):
+    name = "polyserve"
+
+    def __init__(self, model: LatencyModel, slo_ttft: float = 2.0,
+                 slo_tpot: float = 0.020):
+        super().__init__()
+        self.model = model
+        self.slo_ttft = slo_ttft
+        self.slo_tpot = slo_tpot
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        ttfts, tpots = [], []
+        for k, inst in enumerate(factory):
+            new = req.prompt_len - hits[k]
+            ttfts.append(self.model.predict_ttft(
+                inst.queued_prefill_tokens, new, inst.r_bs,
+                inst.total_tokens))
+            tpots.append(self.model.predict_tpot(
+                inst.r_bs, inst.total_tokens, inst.queued_prefill_tokens))
+        feasible = [k for k in range(len(factory))
+                    if ttfts[k] <= self.slo_ttft and tpots[k] <= self.slo_tpot]
+        if not feasible:                         # load-balancing branch
+            return self._select_min(tpots)
+        neg = [-tpots[k] for k in range(len(factory))]
+        return self._select_min(neg, allowed=feasible)
+
+
+class ScalarLMetricPolicy(ScalarPolicy):
+    name = "lmetric"
+
+    def __init__(self, kv_indicator: str = "ptoken",
+                 load_indicator: str = "bs", detector=None,
+                 latency_model: Optional[LatencyModel] = None):
+        super().__init__()
+        assert kv_indicator in ("ptoken", "one_minus_hit")
+        assert load_indicator in ("bs", "tokens", "cost")
+        self.kv_indicator = kv_indicator
+        self.load_indicator = load_indicator
+        self.latency_model = latency_model
+        self.detector = detector
+
+    def scores(self, req, factory, hits):
+        L = max(req.prompt_len, 1)
+        out = []
+        for k, inst in enumerate(factory):
+            if self.kv_indicator == "ptoken":
+                a = inst.p_token(req, hits[k]) + 1.0
+            else:
+                a = 1.0 - hits[k] / L + 1e-3
+            if self.load_indicator == "bs":
+                b = inst.bs + 1.0
+            elif self.load_indicator == "cost":
+                b = self.latency_model.step_time(
+                    0, inst.bs + 1, inst.total_tokens) * 1e3
+            else:
+                b = inst.total_tokens + 1.0
+            out.append(a * b)
+        return out
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        scores = self.scores(req, factory, hits)
+        excluded = set()
+        if self.detector is not None:
+            excluded = self.detector.observe(req, factory, hits, scores, now)
+        allowed = [k for k in range(len(factory)) if k not in excluded]
+        if not allowed:
+            allowed = list(range(len(factory)))
+        if excluded:
+            bss = [factory[k].bs for k in range(len(factory))]
+            return self._select_min(bss, allowed=allowed)
+        return self._select_min(scores, allowed=allowed)
+
+
+def make_scalar_policy(name: str,
+                       latency_model: Optional[LatencyModel] = None,
+                       **kw) -> ScalarPolicy:
+    """Mirror of ``policies.make_policy`` over the frozen scalar classes."""
+    name = name.lower()
+    if name in ("vllm", "jsq"):
+        return ScalarJSQPolicy()
+    if name in ("linear", "bailian"):
+        return ScalarLinearKVPolicy(**kw)
+    if name == "dynamo":
+        return ScalarDynamoPolicy(**kw)
+    if name in ("filter", "aibrix"):
+        return ScalarFilterKVPolicy(**kw)
+    if name in ("llm-d", "simulation"):
+        assert latency_model is not None
+        return ScalarSimulationPolicy(latency_model, **kw)
+    if name == "preble":
+        return ScalarPreblePolicy(**kw)
+    if name == "polyserve":
+        assert latency_model is not None
+        return ScalarPolyServePolicy(latency_model, **kw)
+    if name == "lmetric":
+        if latency_model is not None:
+            kw.setdefault("latency_model", latency_model)
+        return ScalarLMetricPolicy(**kw)
+    raise KeyError(name)

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import zlib
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -87,7 +88,11 @@ def make_trace(name: str, qps: float, duration: float,
     if name == "hotspot":
         return make_hotspot_trace(qps, duration, seed)
     fam = FAMILIES[name]
-    rng = np.random.RandomState(seed ^ hash(name) % (2 ** 31))
+    # stable digest, NOT hash(): Python string hashing is salted per
+    # process (PYTHONHASHSEED), which silently made traces irreproducible
+    # across runs
+    rng = np.random.RandomState(seed ^ (zlib.crc32(name.encode("utf-8"))
+                                        & 0x7FFFFFFF))
     block_ids = itertools.count(1)
     rid = itertools.count(0)
 

@@ -1,4 +1,9 @@
 """Latency model sanity + monotonicity properties."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); property tests only")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

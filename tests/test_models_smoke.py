@@ -131,12 +131,20 @@ def test_decode_matches_prefill(built, arch):
     assert (a.argmax(-1) == b.argmax(-1)).all()
 
 
-def test_moe_chunked_prefill_close_up_to_capacity_drops(built):
+def test_moe_chunked_prefill_matches_full_without_capacity_drops(built):
     """Capacity-based MoE routing legitimately differs between chunk
-    granularities (cap = ceil(S·K/E·cf) depends on S), so chunked vs full
-    prefill agree only approximately — most logits match, a minority may
-    shift where token drops differ (DESIGN.md §Arch-applicability)."""
-    cfg, m, params = built("granite_moe_3b_a800m")
+    granularities (cap = ceil(S·K/E·cf) depends on S), so how much
+    chunked vs full prefill diverge is drop-noise — a function of random
+    init, not correctness — and thresholding on it is flaky.  Raising the
+    capacity factor to E guarantees no expert ever drops a token at
+    either granularity, which turns this into a sharp test of the
+    chunked-prefill cache path itself: logits must match exactly."""
+    import dataclasses
+
+    cfg, _, _ = built("granite_moe_3b_a800m")
+    cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
     B, S = 2, 16
     rng = np.random.RandomState(1)
     toks = jnp.asarray(rng.randint(1, cfg.vocab_size, (B, S)), jnp.int32)
@@ -152,5 +160,5 @@ def test_moe_chunked_prefill_close_up_to_capacity_drops(built):
                                                       jnp.int32))
     a = np.asarray(full_logits[:, -1], np.float32)
     b = np.asarray(l2[:, -1], np.float32)
-    close = np.isclose(a, b, atol=0.75, rtol=0.08).mean()
-    assert close > 0.85, f"only {close:.0%} of logits close"
+    np.testing.assert_allclose(a, b, atol=0.75, rtol=0.08)
+    assert (a.argmax(-1) == b.argmax(-1)).all()

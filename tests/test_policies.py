@@ -1,8 +1,12 @@
 """Policy behaviour tests + the paper's key algebraic property: the
 multiplicative score's ranking is invariant to per-indicator rescaling
 (the 'hyperparameters cancel out' claim of §5)."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); property tests only")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (IndicatorFactory, JSQPolicy, LinearKVPolicy,

@@ -2,6 +2,11 @@
 invariants of the cluster simulator and router under random workloads."""
 import copy
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); property tests only")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

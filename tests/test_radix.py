@@ -1,4 +1,9 @@
 """Unit + property tests for the block-granular radix KV$ index."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dep (requirements-dev.txt); property tests only")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -64,8 +64,10 @@ for arch in sys.argv[1:]:
         lowered = jax.jit(step, in_shardings=(pshard, None, bshard)) \
             .lower(pshape, oshape, batch)
         compiled = lowered.compile()
-    out[arch] = {"ok": True,
-                 "flops": float(compiled.cost_analysis().get("flops", 0))}
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # older jax: list of dicts
+        ca = ca[0] if ca else {}
+    out[arch] = {"ok": True, "flops": float((ca or {}).get("flops", 0))}
 print(json.dumps(out))
 """
 

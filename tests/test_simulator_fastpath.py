@@ -1,0 +1,121 @@
+"""Regression test for the simulator waiting-queue fast path.
+
+The old simulator removed prefill-complete requests with
+``deque.remove`` — an O(queue) scan per completion.  The new path keys
+the waiting queue by rid.  This test freezes the old behaviour (deque +
+scan + per-step defaultdict telemetry) as a reference simulator and
+asserts a ~5k-request run produces *identical* finished output —
+same routing, same timestamps, to the last float bit.
+"""
+import collections
+import copy
+
+import pytest
+
+from repro.cluster.simulator import WINDOW, ClusterSim, _SimInstance
+from repro.configs import get_config
+from repro.core import LatencyModel, LMetricPolicy, Router, spec_from_config
+from repro.workloads.traces import make_trace
+
+
+class _RefSimInstance(_SimInstance):
+    """Pre-fastpath instance: deque waiting queue, defaultdict telemetry."""
+
+    def __init__(self, iid, spec, model):
+        super().__init__(iid, spec, model)
+        self.waiting = collections.deque()
+
+    def account_step(self, now, dt, prefill_frac):
+        w = int(now / WINDOW)
+        self.prefill_seconds[w] += dt * prefill_frac
+        self.busy_seconds[w] += dt
+
+    def flush_telemetry(self):
+        pass
+
+    def form_batch(self):
+        decode_bs = len(self.running)
+        budget = max(0, self.spec.chunk_tokens - decode_bs)
+        allocs = []
+        for req in self.waiting:
+            if budget <= 0:
+                break
+            if len(self.running) + len(allocs) >= self.spec.max_batch:
+                break
+            left = self.prefill_left[req.rid]
+            take = min(left, budget)
+            allocs.append((req, take))
+            budget -= take
+        ctx = sum(r.prompt_len + self.generated[r.rid] for r in self.running)
+        return allocs, decode_bs, ctx
+
+
+class _RefClusterSim(ClusterSim):
+    def __init__(self, router, spec, model=None):
+        super().__init__(router, spec, model)
+        self.instances = [_RefSimInstance(i, spec, self.model)
+                          for i in range(len(router.factory))]
+
+    def _on_arrival(self, req):
+        iid = self.router.route(req, self.now)
+        inst = self.instances[iid]
+        inst.waiting.append(req)
+        inst.prefill_left[req.rid] = max(req.new_tokens, 1)
+        if not inst.busy:
+            self._start_step(inst)
+
+    def _on_step_end(self, payload):
+        iid, allocs, decode_bs = payload
+        inst = self.instances[iid]
+        for req, tokens in allocs:
+            inst.prefill_left[req.rid] -= tokens
+            self.router.on_prefill_progress(iid, tokens)
+            if inst.prefill_left[req.rid] <= 0:
+                req.t_first_token = self.now
+                inst.waiting.remove(req)             # the old O(n) scan
+                del inst.prefill_left[req.rid]
+                self.router.on_start_running(iid, req)
+                if req.output_len <= 1:
+                    self._finish(inst, req)
+                else:
+                    inst.running.append(req)
+                    inst.generated[req.rid] = 1
+        done = []
+        for req in list(inst.running):
+            if inst.generated.get(req.rid) is None:
+                continue
+            if req.t_first_token == self.now:
+                continue
+            inst.generated[req.rid] += 1
+            self.router.on_decode_token(iid)
+            if inst.generated[req.rid] >= req.output_len:
+                done.append(req)
+        for req in done:
+            inst.running.remove(req)
+            del inst.generated[req.rid]
+            self._finish(inst, req)
+        if inst.has_work():
+            self._start_step(inst)
+        else:
+            inst.busy = False
+
+
+def _run(sim_cls, trace, spec):
+    router = Router(LMetricPolicy(), 8, kv_capacity_tokens=250_000)
+    sim = sim_cls(router, spec, LatencyModel(spec))
+    done = sim.run(copy.deepcopy(trace))
+    return [(r.rid, r.sched_to, r.hit_tokens, r.t_first_token, r.t_finish)
+            for r in done], sim
+
+
+@pytest.mark.slow
+def test_fastpath_identical_finished_output_5k():
+    spec = spec_from_config(get_config("qwen2_7b"), chips=1)
+    trace = make_trace("chatbot", qps=42.0, duration=190.0, seed=11)
+    assert len(trace) >= 5000, f"want a 5k-request run, got {len(trace)}"
+    fast, fast_sim = _run(ClusterSim, trace, spec)
+    ref, ref_sim = _run(_RefClusterSim, trace, spec)
+    assert len(fast) == len(trace)
+    assert fast == ref
+    # telemetry channels agree too (same windows, same seconds)
+    assert fast_sim.imbalance_profile() == ref_sim.imbalance_profile()

@@ -1,0 +1,121 @@
+"""Differential test: the vectorized scoring core routes every request to
+exactly the same instance as the frozen pre-refactor scalar path.
+
+Two identical factories evolve side by side over a ~2k-request hotspot
+trace (shared-prefix burst + agent background — the most adversarial mix
+of KV$ hits and load skew).  A deterministic partial-drain schedule keeps
+every indicator (q_bs, r_bs, queued_prefill_tokens, total_tokens, caches)
+nonzero and varying, so every branch of every score formula is exercised.
+On top of decision equality, the scalar path's per-instance radix-walk
+hit vector must match the aggregated bitmask index the vectorized path
+reads.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import EngineSpec, LatencyModel, make_policy
+from repro.core.indicators import IndicatorFactory
+from repro.core.scalar_ref import hits_for_scalar, make_scalar_policy
+from repro.workloads.traces import make_hotspot_trace
+
+SPEC = EngineSpec(name="diff", active_params=3e9, n_layers=16,
+                  kv_bytes_per_token=4096)
+N_INST = 16
+
+POLICY_SPECS = [
+    ("vllm", {}, False),
+    ("linear", {}, False),
+    ("dynamo", {}, False),
+    ("filter", {}, False),
+    ("llm-d", {}, True),
+    ("preble", {}, False),
+    ("polyserve", dict(slo_ttft=0.5, slo_tpot=0.030), True),
+    ("lmetric", {}, False),
+    # §5.1 ablation variants of the paper policy ride along for free
+    ("lmetric", dict(kv_indicator="one_minus_hit"), False),
+    ("lmetric", dict(load_indicator="tokens"), False),
+    # beyond-paper cost indicator: the only branch through step_time_batch
+    ("lmetric", dict(load_indicator="cost"), True),
+    ("llm-d", dict(kv_aware=False), True),
+]
+
+
+@pytest.fixture(scope="module")
+def trace():
+    reqs = make_hotspot_trace(qps=14.0, duration=150.0, seed=5,
+                              burst_start=40.0, burst_len=60.0)
+    assert len(reqs) >= 1500, f"trace too small: {len(reqs)}"
+    return reqs[:2000]
+
+
+def _drive(policy, trace):
+    """Route the trace, mutating indicator state deterministically.
+
+    Returns the per-request decision list.  The drain schedule below is a
+    pure function of the request index, so both paths see identical
+    factory states as long as their decisions agree.
+    """
+    f = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    outstanding = collections.deque()
+    decisions = []
+    for i, req in enumerate(trace):
+        iid = policy.route(req, f, req.arrival)
+        decisions.append(iid)
+        inst = f[iid]
+        hit = inst.kv_hit(req, touch=True)
+        inst.on_route(req, req.arrival, hit)
+        inst.kv.insert(req.blocks)
+        outstanding.append((iid, req, req.prompt_len - hit))
+        # partial prefill progress on the routed instance every request,
+        # full drain of the oldest outstanding request every third one
+        inst.on_prefill_progress(256)
+        if i % 3 == 0 and outstanding:
+            did, dreq, dnew = outstanding.popleft()
+            dinst = f[did]
+            dinst.on_prefill_progress(dnew)
+            dinst.on_start_running(dreq)
+            for _ in range(dreq.output_len % 7):
+                dinst.on_decode_token()
+            dinst.on_finish(dreq)
+    return decisions
+
+
+def _build(name, kw, needs_model, scalar):
+    maker = make_scalar_policy if scalar else make_policy
+    if needs_model:
+        # same seed on both sides: the vectorized path must consume the
+        # predictor's noise stream in the same order as the scalar loop
+        return maker(name, latency_model=LatencyModel(
+            SPEC, error_std=0.15, seed=7), **kw)
+    return maker(name, **kw)
+
+
+@pytest.mark.parametrize("name,kw,needs_model", POLICY_SPECS,
+                         ids=[f"{n}-{i}" for i, (n, _, __) in
+                              enumerate(POLICY_SPECS)])
+def test_vectorized_routes_identically_to_scalar(name, kw, needs_model,
+                                                 trace):
+    vec = _build(name, kw, needs_model, scalar=False)
+    ref = _build(name, kw, needs_model, scalar=True)
+    got = _drive(vec, trace)
+    want = _drive(ref, trace)
+    mismatches = [(i, a, b) for i, (a, b) in enumerate(zip(got, want))
+                  if a != b]
+    assert not mismatches, (
+        f"{name}{kw}: {len(mismatches)} diverging decisions, "
+        f"first at request {mismatches[0]}")
+
+
+def test_aggregated_hits_match_per_instance_walk(trace):
+    """The bitmask aggregate must agree with the per-instance radix trees
+    even under finite-capacity eviction."""
+    f = IndicatorFactory(N_INST, kv_capacity_tokens=60_000)
+    rr = 0
+    for req in trace[:600]:
+        fast = f.hits_for(req)
+        slow = np.asarray(hits_for_scalar(f, req))
+        assert (fast == slow).all(), req.rid
+        f[rr % N_INST].kv.insert(req.blocks)
+        rr += 1
