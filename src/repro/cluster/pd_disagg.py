@@ -59,20 +59,53 @@ class PDDisaggSim:
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             self.now = t
-            getattr(self, "_on_" + kind)(payload)
+            if kind == "arrival":
+                # coalesce consecutive same-timestamp arrivals through
+                # the batched prefill-pool routing path
+                wave = [payload]
+                while (self._events and self._events[0][0] == t
+                       and self._events[0][2] == "arrival"):
+                    wave.append(heapq.heappop(self._events)[3])
+                self._on_arrivals(wave)
+            else:
+                getattr(self, "_on_" + kind)(payload)
         return self.finished
 
     # ---- prefill pool -------------------------------------------------
+    def _on_arrivals(self, reqs: List[Request]):
+        if len(reqs) > 1 and self.pf._agg is not None:
+            # §7 unified indicator scored as one device wave ("ptoken"
+            # kind: raw P-token, np.argmin first-min selection); commit
+            # under the shared mid-wave eviction guard
+            from repro.core.router import commit_wave_plan
+            from repro.kernels import route_score
+            depth, lcp, plen = self.pf.wave_inputs(reqs)
+            rbs, qbs, qpt, tt = self.pf.device_view()
+            sel, hits = route_score.route_wave(
+                "ptoken", (), self.pf.block_size, rbs, qbs, qpt, tt,
+                depth, lcp, plen, 0)
+            commit_wave_plan(
+                self.pf, reqs,
+                lambda j, req: self._admit_prefill(req, int(sel[j]),
+                                                   int(hits[j])),
+                self._on_arrival)
+        else:
+            for req in reqs:
+                self._on_arrival(req)
+
     def _on_arrival(self, req: Request):
         # §7: unified indicator = P-token (new tokens after hit + queue)
         hits = self.pf.hits_for(req)
         scores = self.pf.p_tokens_for(req, hits)
         iid = int(np.argmin(scores))
+        self._admit_prefill(req, iid, int(hits[iid]))
+
+    def _admit_prefill(self, req: Request, iid: int, hit: int):
         inst = self.pf[iid]
         req.sched_to = iid
-        req.hit_tokens = int(hits[iid])
+        req.hit_tokens = hit
         req.t_sched = self.now
-        inst.on_route(req, self.now, hits[iid])
+        inst.on_route(req, self.now, hit)
         inst.kv.insert(req.blocks)
         self.p_wait[iid].append(req)
         self.p_left[req.rid] = max(req.new_tokens, 1)

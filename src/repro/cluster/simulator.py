@@ -15,7 +15,9 @@ timelines (Fig. 28).
 Fast path: the per-instance waiting queue is an insertion-ordered dict
 keyed by rid (O(1) removal on prefill completion instead of a deque
 scan), and window telemetry accumulates in plain attributes that flush
-once per 10-second window roll.
+once per 10-second window roll.  Same-timestamp arrival waves coalesce
+through ``Router.route_batch`` (one fused device scoring pass per wave,
+bit-identical to sequential routing).
 """
 from __future__ import annotations
 
@@ -116,14 +118,32 @@ class ClusterSim:
                 break
             self.now = t
             if kind == "arrival":
-                self._on_arrival(payload)
+                # coalesce the same-timestamp arrival wave through the
+                # batched routing path; only *consecutive* events are
+                # merged (equal-time ordering is by sequence number, so
+                # a step_end interleaved between two arrivals keeps its
+                # place and event order is exactly the sequential one)
+                wave = [payload]
+                while (self._events and self._events[0][0] == t
+                       and self._events[0][2] == "arrival"):
+                    wave.append(heapq.heappop(self._events)[3])
+                self._on_arrivals(wave)
             else:
                 self._on_step_end(payload)
         return self.finished
 
     # ------------------------------------------------------------------
+    def _on_arrivals(self, reqs: List[Request]):
+        iids = self.router.route_batch(reqs, self.now)
+        # per-request enqueue + step start in arrival order — identical
+        # to interleaved handling (step starts never mutate indicators)
+        for req, iid in zip(reqs, iids):
+            self._enqueue(req, iid)
+
     def _on_arrival(self, req: Request):
-        iid = self.router.route(req, self.now)
+        self._enqueue(req, self.router.route(req, self.now))
+
+    def _enqueue(self, req: Request, iid: int):
         inst = self.instances[iid]
         inst.waiting[req.rid] = req
         inst.prefill_left[req.rid] = max(req.new_tokens, 1)

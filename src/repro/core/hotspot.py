@@ -21,11 +21,24 @@ again in a later window.
 
 To bound overhead only the ``top_k`` classes by recent KV$-hit tokens are
 tracked (paper: "we only track requests with the highest KV$ hit rates").
+
+``observe`` is vectorized: per-class counters live in grow-doubling
+numpy arrays (row per class, insertion-ordered, so the stable-sort
+top-k matches the original Python ``sorted`` tie order bit for bit),
+and the hot-set/score logic is mask arithmetic over the hit vector —
+attaching a detector no longer serializes the routing hot path with a
+per-decision Python scan over instances and classes.  ``_observe_py``
+preserves the original per-decision Python implementation verbatim as
+the frozen differential reference (``tests/test_hotspot.py``) and the
+before/after microbenchmark baseline; a detector instance must use one
+path exclusively (each maintains its own counters).
 """
 from __future__ import annotations
 
 import collections
 from typing import Dict, List, Sequence, Set
+
+import numpy as np
 
 from .indicators import IndicatorFactory
 from .types import Request
@@ -43,6 +56,8 @@ class _ClassStats:
 
 
 class HotspotDetector:
+    _CAP0 = 64   # initial class-array capacity (doubles on demand)
+
     def __init__(self, window: float = 60.0, top_k: int = 8,
                  min_requests: int = 20):
         self.window = window
@@ -50,6 +65,14 @@ class HotspotDetector:
         self.min_requests = min_requests
         self._win_start = 0.0
         self._total = 0
+        # vectorized per-class counters: row per class in first-seen order
+        self._row: Dict[int, int] = {}
+        self._counts = np.zeros(self._CAP0, dtype=np.int64)
+        self._ht = np.zeros(self._CAP0, dtype=np.int64)
+        self._alarmed = np.zeros(self._CAP0, dtype=np.int8)
+        self._consec = np.zeros(self._CAP0, dtype=np.int64)
+        self._active = np.zeros(self._CAP0, dtype=np.int8)
+        # frozen-reference per-class state (_observe_py only)
         self._stats: Dict[int, _ClassStats] = collections.defaultdict(
             _ClassStats)
         # telemetry for the Fig. 20/21 benchmarks
@@ -63,15 +86,116 @@ class HotspotDetector:
         # snapshot top classes for telemetry before resetting
         self._win_start = now
         self._total = 0
+        self._counts[:] = 0
+        self._ht[:] = 0
         for st in self._stats.values():
             st.count = 0
             st.hit_tokens = 0
+
+    def _row_of(self, c: int) -> int:
+        r = self._row.get(c)
+        if r is None:
+            r = len(self._row)
+            self._row[c] = r
+            if r >= self._counts.shape[0]:
+                for name in ("_counts", "_ht", "_alarmed", "_consec",
+                             "_active"):
+                    old = getattr(self, name)
+                    grown = np.zeros(2 * old.shape[0], dtype=old.dtype)
+                    grown[: old.shape[0]] = old
+                    setattr(self, name, grown)
+        return r
+
+    @staticmethod
+    def _mset(mask: np.ndarray) -> Set[int]:
+        return set(np.flatnonzero(mask).tolist())
 
     # ------------------------------------------------------------------
     def observe(self, req: Request, factory: IndicatorFactory,
                 hits: Sequence[int], scores: Sequence[float],
                 now: float) -> Set[int]:
-        """Called on every scheduling decision; returns instances to filter."""
+        """Called on every scheduling decision; returns instances to filter.
+
+        Array-vectorized; decision-for-decision identical to the frozen
+        ``_observe_py`` reference (same events, history, and returned
+        filter sets).
+        """
+        self._roll_window(now)
+        self._total += 1
+        hits = np.asarray(hits)
+        scores = np.asarray(scores)
+        c = req.class_id
+        r = self._row_of(c)
+        self._counts[r] += 1
+        self._ht[r] += int(hits.max()) if hits.size else 0
+
+        # only track the hottest classes: stable argsort on the
+        # insertion-ordered rows == the reference's python sorted() on
+        # dict items, ties and all
+        nc = len(self._row)
+        if nc > self.top_k:
+            hot = np.argsort(-self._ht[:nc], kind="stable")[: self.top_k]
+            if not (hot == r).any():
+                return set()
+
+        N = len(factory)
+        mask = hits > 0
+        nM = int(mask.sum())
+        if nM == 0 or nM == N or self._total < self.min_requests:
+            self._alarmed[r] = 0
+            self._consec[r] = 0
+            if self._active[r] and nM == 0:
+                self._active[r] = 0
+            return self._mset(mask) if self._active[r] else set()
+
+        x = int(self._counts[r]) / self._total
+        xbar = max(1.0 - x, 1e-9)
+        cover = nM / (N - nM)
+        eq2_holds = (x / xbar) <= cover
+        self.history.append({"t": now, "class": c, "x_ratio": x / xbar,
+                             "coverage": cover, "eq2": eq2_holds})
+
+        if eq2_holds:
+            self._alarmed[r] = 0
+            self._consec[r] = 0
+            if self._active[r]:
+                self._active[r] = 0
+                self.events.append({"t": now, "class": c, "event": "clear"})
+            return set()
+
+        # ---- phase 1: alarm raised -----------------------------------
+        if not self._alarmed[r]:
+            self._alarmed[r] = 1
+            self._consec[r] = 0
+            self.events.append({"t": now, "class": c, "event": "alarm"})
+
+        if self._active[r]:
+            return self._mset(mask)
+
+        # ---- phase 2: confirm via 2|M| consecutive score wins ---------
+        best_m = scores[mask].min()
+        best_other = scores[~mask].min()
+        if best_m <= best_other:
+            self._consec[r] += 1
+        else:
+            self._consec[r] = 0
+        if self._consec[r] >= 2 * nM:
+            self._active[r] = 1
+            self.events.append({"t": now, "class": c, "event": "activate",
+                                "M": np.flatnonzero(mask).tolist()})
+            return self._mset(mask)
+        return set()
+
+    # ------------------------------------------------------------------
+    def _observe_py(self, req: Request, factory: IndicatorFactory,
+                    hits: Sequence[int], scores: Sequence[float],
+                    now: float) -> Set[int]:
+        """FROZEN pre-vectorization implementation — do not "improve".
+
+        Kept verbatim as the differential reference for ``observe`` and
+        the before/after microbenchmark baseline
+        (``benchmarks.figures.bench_detector_observe``).
+        """
         self._roll_window(now)
         self._total += 1
         c = req.class_id

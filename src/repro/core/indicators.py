@@ -44,6 +44,53 @@ the aggregate coherent through the ``RadixKVIndex`` on_insert/on_evict
 callbacks.  ``exact_only`` factories (recurrent-state semantics) fall
 back to the per-instance scalar walk, which the aggregate cannot model.
 
+Device mirror & dirty-flag sync contract
+----------------------------------------
+Batch routing (``Router.route_batch``) scores whole arrival waves on
+device.  The factory therefore keeps a **device mirror** of the four
+scalar indicator arrays:
+
+* ``device_view()`` returns ``(r_bs, q_bs, queued_prefill_tokens,
+  total_tokens)`` as jax arrays (int64 — created under
+  ``jax.experimental.enable_x64()``), re-uploaded **only when the dirty
+  flag is set** and cached otherwise.
+* Every built-in mutation path — the ``InstanceState`` update hooks and
+  its property setters — stays an in-place numpy write and flips the
+  flag via ``mark_dirty()``.  Code that writes ``factory.r_bs[...]``
+  (or the siblings) directly MUST call ``factory.mark_dirty()``
+  afterwards; that is the entire synchronization contract, and it is
+  what every future on-device scheduling feature builds on.
+* The mirror is read-only: device code never writes indicators back.
+  Decisions return to the host and are committed through the same
+  hooks, so the numpy arrays remain the single source of truth.
+
+``evictions`` counts per-instance KV$ leaf evictions (and full clears).
+The batched routing plan models intra-wave cache growth exactly but
+cannot model mid-wave *eviction*; ``Router.route_batch`` snapshots this
+counter and falls back to sequential host routing the moment it moves —
+this is also when ``route_batch`` falls back entirely: ``exact_only``
+factories (no aggregated index), policies without a device kind
+(simulator-based llm-d/PolyServe, Dynamo's normalised blend, Preble's
+windowed fallback), an attached hotspot detector, the "cost" load
+indicator, or a router with ``insert_on_route=False`` (the intra-wave
+LCP credit models inserts that would never happen) all take the
+documented host path instead.
+
+Wave inputs (``wave_inputs``) are the host-side half of the batch path:
+one aggregated-index walk per *unique* prompt in the wave (duplicates
+share a row) plus the pairwise longest-common-prefix matrix that lets
+the device credit intra-wave inserts.
+
+Preble window bookkeeping
+-------------------------
+Per-instance routed-request windows (Preble's 3-minute fallback) live in
+fixed-size numpy ring buffers on the factory (``_log_t``/``_log_p`` with
+per-instance start/length cursors, doubling on overflow).  The
+``InstanceState.routed_log`` list API and ``trim_log`` keep their exact
+pre-ring semantics (drop the *leading* run older than the window), so
+the frozen scalar reference reads them unchanged; ``window_stats``
+exposes the vectorized trim+sum+count the Preble fallback scores with.
+
 Updates are piggybacked on instance responses in a real deployment; the
 cluster simulator and the in-process JAX engine call the same hooks.
 """
@@ -166,6 +213,111 @@ class AggregatedPrefixIndex:
         self._scatter(mask, d, out)
         return out
 
+    def match_depths_many(self, chains: Sequence[Sequence[int]]
+                          ) -> np.ndarray:
+        """``match_depths`` for a whole wave of chains at once.
+
+        The walks collect (row, mask, depth) segments and one batched
+        unpackbits scatters them all — the per-walk numpy small-op
+        overhead (the dominant cost of per-request walks) is paid once
+        per wave.  Segments within a row are disjoint bitmasks, so the
+        additive scatter equals per-segment assignment.
+        """
+        rows: List[int] = []
+        masks: List[int] = []
+        depths: List[int] = []
+        for r, blocks in enumerate(chains):
+            mask = self._full
+            node = self.root
+            d = 0
+            for b in blocks:
+                child = node.children.get(b)
+                if child is None:
+                    break
+                nm = mask & child.mask
+                if nm != mask:
+                    if d:
+                        rows.append(r)
+                        masks.append(mask & ~nm)
+                        depths.append(d)
+                    mask = nm
+                    if not mask:
+                        break
+                node = child
+                d += 1
+            if mask and d:
+                rows.append(r)
+                masks.append(mask)
+                depths.append(d)
+        out = np.zeros((len(chains), self.n), dtype=np.int64)
+        if rows:
+            buf = np.empty((len(masks), self._nbytes), dtype=np.uint8)
+            nb = self._nbytes
+            for i, m in enumerate(masks):
+                buf[i] = np.frombuffer(m.to_bytes(nb, "little"), np.uint8)
+            bits = np.unpackbits(buf, axis=1, bitorder="little",
+                                 count=self.n).astype(bool)
+            # a handful of segments per chain: masked row assignment
+            # (disjoint masks) beats ufunc.at by ~10x
+            for i, r in enumerate(rows):
+                out[r][bits[i]] = depths[i]
+        return out
+
+
+def _lcp_block(chains: Sequence[Sequence[int]], out: np.ndarray,
+               idxs: Sequence[int], max_elems: int = 4_000_000):
+    """Vectorized pairwise LCP of ``chains[idxs]`` scattered into
+    ``out``: pad to (g, L), compare all pairs, count the leading run of
+    equal positions.  Row-tiled so the (rows, g, L) temporary stays
+    under ``max_elems`` int8 even for a single huge shared-first-block
+    group."""
+    g = len(idxs)
+    lens = np.fromiter((len(chains[i]) for i in idxs), np.int64, g)
+    L = int(lens.max())
+    B = np.zeros((g, L), dtype=np.int64)
+    for row, i in enumerate(idxs):
+        B[row, : len(chains[i])] = chains[i]
+    has = np.arange(L)[None, :] < lens[:, None]
+    idxs = np.asarray(idxs)
+    step = max(1, max_elems // max(g * L, 1))
+    for r0 in range(0, g, step):
+        r1 = min(r0 + step, g)
+        eq = (B[r0:r1, None, :] == B[None, :, :]) \
+            & has[r0:r1, None, :] & has[None, :, :]
+        out[np.ix_(idxs[r0:r1], idxs)] = np.cumprod(
+            eq, axis=2, dtype=np.int8).sum(axis=2, dtype=np.int64)
+
+
+def _pairwise_lcp(chains: Sequence[Sequence[int]]) -> np.ndarray:
+    """Pairwise longest-common-prefix (in blocks) of block-id chains.
+
+    Small waves compare everything at once (one vectorized pass beats
+    per-group Python overhead); big ones group by first block first
+    (cross-group LCP is 0 by definition), bounding the (g, g, L)
+    temporary.
+    """
+    u = len(chains)
+    out = np.zeros((u, u), dtype=np.int64)
+    if u == 0:
+        return out
+    nonempty = [i for i, c in enumerate(chains) if len(c)]
+    if not nonempty:
+        return out
+    max_l = max(len(chains[i]) for i in nonempty)
+    if u * u * max_l <= 2_000_000:
+        _lcp_block(chains, out, nonempty)
+        return out
+    groups: Dict[int, List[int]] = {}
+    for i in nonempty:
+        groups.setdefault(chains[i][0], []).append(i)
+    for idxs in groups.values():
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i, i] = len(chains[i])
+        else:
+            _lcp_block(chains, out, idxs)
+    return out
+
 
 class InstanceState:
     """Per-instance view over one column of the factory's arrays.
@@ -175,15 +327,13 @@ class InstanceState:
     pokes stay coherent with the vectorized scoring path.
     """
 
-    __slots__ = ("iid", "_f", "kv", "routed_log")
+    __slots__ = ("iid", "_f", "kv")
 
     def __init__(self, iid: int, factory: "IndicatorFactory",
                  kv: RadixKVIndex):
         self.iid = iid
         self._f = factory
         self.kv = kv
-        # rolling accounting for monitoring / Preble windows
-        self.routed_log: List = []     # (time, p_tokens) of routed requests
 
     # ---- indicator reads/writes (array-backed) ---------------------------
     @property
@@ -193,6 +343,7 @@ class InstanceState:
     @r_bs.setter
     def r_bs(self, v: int):
         self._f.r_bs[self.iid] = v
+        self._f.mark_dirty()
 
     @property
     def q_bs(self) -> int:
@@ -201,6 +352,7 @@ class InstanceState:
     @q_bs.setter
     def q_bs(self, v: int):
         self._f.q_bs[self.iid] = v
+        self._f.mark_dirty()
 
     @property
     def queued_prefill_tokens(self) -> int:
@@ -209,6 +361,7 @@ class InstanceState:
     @queued_prefill_tokens.setter
     def queued_prefill_tokens(self, v: int):
         self._f.queued_prefill_tokens[self.iid] = v
+        self._f.mark_dirty()
 
     @property
     def total_tokens(self) -> int:
@@ -217,6 +370,16 @@ class InstanceState:
     @total_tokens.setter
     def total_tokens(self, v: int):
         self._f.total_tokens[self.iid] = v
+        self._f.mark_dirty()
+
+    @property
+    def routed_log(self) -> List:
+        """(time, p_tokens) of windowed routed requests, oldest first.
+
+        Reconstructed from the factory ring buffer; list semantics (and
+        the frozen scalar reference that iterates it) are unchanged.
+        """
+        return self._f.routed_window(self.iid)
 
     @property
     def bs(self) -> int:
@@ -237,21 +400,26 @@ class InstanceState:
         f.q_bs[i] += 1
         f.queued_prefill_tokens[i] += req.prompt_len - hit
         f.total_tokens[i] += req.prompt_len
-        self.routed_log.append((now, req.prompt_len - hit))
+        f.mark_dirty()
+        f.log_routed(i, now, req.prompt_len - hit)
 
     def on_prefill_progress(self, n_tokens: int):
         f, i = self._f, self.iid
         left = f.queued_prefill_tokens[i] - n_tokens
         f.queued_prefill_tokens[i] = left if left > 0 else 0
+        f.mark_dirty()
 
     def on_start_running(self, req: Request):
         f, i = self._f, self.iid
         if f.q_bs[i] > 0:
             f.q_bs[i] -= 1
         f.r_bs[i] += 1
+        f.mark_dirty()
 
     def on_decode_token(self):
-        self._f.total_tokens[self.iid] += 1
+        f = self._f
+        f.total_tokens[self.iid] += 1
+        f.mark_dirty()
 
     def on_finish(self, req: Request):
         f, i = self._f, self.iid
@@ -259,18 +427,15 @@ class InstanceState:
             f.r_bs[i] -= 1
         left = f.total_tokens[i] - req.prompt_len - req.output_len
         f.total_tokens[i] = left if left > 0 else 0
+        f.mark_dirty()
 
     def trim_log(self, now: float, window: float):
-        log = self.routed_log
-        cut = now - window
-        k = 0
-        while k < len(log) and log[k][0] < cut:
-            k += 1
-        if k:
-            del log[:k]
+        self._f.trim_routed(self.iid, now - window)
 
 
 class IndicatorFactory:
+    _LOG_CAP0 = 256   # initial per-instance routed-window ring capacity
+
     def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
                  block_size: int = 64, exact_only: bool = False):
         self.n = n_instances
@@ -282,6 +447,17 @@ class IndicatorFactory:
         self.queued_prefill_tokens = np.zeros(n_instances, dtype=np.int64)
         self.total_tokens = np.zeros(n_instances, dtype=np.int64)
         self._hit_depths = np.zeros(n_instances, dtype=np.int64)
+        # device mirror (see docstring): re-uploaded when dirty
+        self._dirty = True
+        self._dev = None
+        # mid-wave plan invalidation signal for Router.route_batch
+        self.evictions = 0
+        # Preble routed-window ring buffers (time, p_tokens), per instance
+        cap = self._LOG_CAP0
+        self._log_t = np.zeros((n_instances, cap), dtype=np.float64)
+        self._log_p = np.zeros((n_instances, cap), dtype=np.int64)
+        self._log_start = np.zeros(n_instances, dtype=np.int64)
+        self._log_len = np.zeros(n_instances, dtype=np.int64)
         # exact_only hit semantics (deepest snapshot boundary) cannot be
         # read off chain membership alone -> scalar per-instance fallback
         self._agg = None if exact_only else AggregatedPrefixIndex(n_instances)
@@ -294,9 +470,17 @@ class IndicatorFactory:
                 kv.on_insert = (lambda blocks, _i=i:
                                 self._agg.add(_i, blocks))
                 kv.on_evict = (lambda path, _i=i:
-                               self._agg.remove_leaf(_i, path))
-                kv.on_clear = (lambda _i=i: self._agg.remove_instance(_i))
+                               self._on_evict(_i, path))
+                kv.on_clear = (lambda _i=i: self._on_clear(_i))
             self.instances.append(InstanceState(i, self, kv))
+
+    def _on_evict(self, iid: int, path):
+        self.evictions += 1
+        self._agg.remove_leaf(iid, path)
+
+    def _on_clear(self, iid: int):
+        self.evictions += 1
+        self._agg.remove_instance(iid)
 
     def __len__(self):
         return self.n
@@ -327,6 +511,126 @@ class IndicatorFactory:
         if hits is None:
             hits = self.hits_for(req)
         return self.queued_prefill_tokens + (req.prompt_len - hits)
+
+    # ---- device mirror (dirty-flag sync contract, see docstring) ---------
+    def mark_dirty(self):
+        self._dirty = True
+
+    def device_view(self):
+        """(r_bs, q_bs, queued_prefill_tokens, total_tokens) as int64 jax
+        arrays, re-uploaded only when an indicator mutated since the last
+        call."""
+        if self._dirty or self._dev is None:
+            import jax
+            import jax.numpy as jnp
+            with jax.experimental.enable_x64():  # keep the mirror int64
+                self._dev = (jnp.asarray(self.r_bs),
+                             jnp.asarray(self.q_bs),
+                             jnp.asarray(self.queued_prefill_tokens),
+                             jnp.asarray(self.total_tokens))
+            self._dirty = False
+        return self._dev
+
+    # ---- wave inputs (host half of the batch routing path) ---------------
+    def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
+        """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.
+
+        One aggregated-index walk per *unique* prompt (waves are bursty —
+        duplicates and shared classes are the common case), plus the
+        pairwise block-chain LCP matrix the device loop needs to credit
+        intra-wave inserts.  Requires the aggregated index."""
+        k = len(reqs)
+        uid = np.empty(k, dtype=np.int64)
+        uniq: Dict[tuple, int] = {}
+        for j, r in enumerate(reqs):
+            u = uniq.setdefault(r.blocks, len(uniq))
+            uid[j] = u
+        chains = [None] * len(uniq)
+        for blocks, u in uniq.items():
+            chains[u] = blocks
+        depth_u = self._agg.match_depths_many(chains)
+        lcp = (_pairwise_lcp(chains)[np.ix_(uid, uid)] if with_lcp
+               else None)
+        plen = np.fromiter((r.prompt_len for r in reqs), np.int64, k)
+        return depth_u[uid], lcp, plen
+
+    # ---- Preble routed-window ring buffers -------------------------------
+    #: entries older than this are expendable when a ring fills: every
+    #: windowed consumer (Preble's 3-minute fallback) looks back far
+    #: less, and horizon-trimming a full row beats doubling the whole
+    #: (n, cap) matrix for one hot instance under skewed load
+    LOG_HORIZON_S = 3600.0
+
+    def log_routed(self, iid: int, t: float, p_tokens: int):
+        if self._log_len[iid] == self._log_t.shape[1]:
+            self.trim_routed(iid, t - self.LOG_HORIZON_S)
+        if self._log_len[iid] == self._log_t.shape[1]:
+            self._grow_log()
+        cap = self._log_t.shape[1]
+        idx = (self._log_start[iid] + self._log_len[iid]) % cap
+        self._log_t[iid, idx] = t
+        self._log_p[iid, idx] = p_tokens
+        self._log_len[iid] += 1
+
+    def _grow_log(self):
+        cap = self._log_t.shape[1]
+        nt = np.zeros((self.n, 2 * cap), dtype=np.float64)
+        npv = np.zeros((self.n, 2 * cap), dtype=np.int64)
+        idx = (self._log_start[:, None] + np.arange(cap)[None, :]) % cap
+        rows = np.arange(self.n)[:, None]
+        nt[:, :cap] = self._log_t[rows, idx]
+        npv[:, :cap] = self._log_p[rows, idx]
+        self._log_t, self._log_p = nt, npv
+        self._log_start[:] = 0
+
+    def _log_view(self):
+        """(times, ptokens, valid) in logical (oldest-first) order."""
+        cap = self._log_t.shape[1]
+        idx = (self._log_start[:, None] + np.arange(cap)[None, :]) % cap
+        rows = np.arange(self.n)[:, None]
+        valid = np.arange(cap)[None, :] < self._log_len[:, None]
+        return self._log_t[rows, idx], self._log_p[rows, idx], valid
+
+    def trim_routed(self, iid: int, cut: float):
+        """Drop the leading run of entries older than ``cut`` (exact
+        pre-ring ``trim_log`` semantics: only the front is scanned)."""
+        cap = self._log_t.shape[1]
+        start, ln = int(self._log_start[iid]), int(self._log_len[iid])
+        k = 0
+        while k < ln and self._log_t[iid, (start + k) % cap] < cut:
+            k += 1
+        if k:
+            self._log_start[iid] = (start + k) % cap
+            self._log_len[iid] = ln - k
+
+    def routed_window(self, iid: int) -> List:
+        cap = self._log_t.shape[1]
+        start, ln = int(self._log_start[iid]), int(self._log_len[iid])
+        idx = (start + np.arange(ln)) % cap
+        return [(float(t), int(p)) for t, p in
+                zip(self._log_t[iid, idx], self._log_p[iid, idx])]
+
+    def window_stats(self, now: float, window: float,
+                     trim: bool = True):
+        """Vectorized trim + (sum p_tokens, count) over every instance's
+        window — the Preble fallback in one shot instead of n Python
+        log walks.  ``trim=False`` computes the same stats without
+        advancing the ring cursors (side-effect-free inspection, e.g.
+        ``scores_batch``)."""
+        cut = now - window
+        times, pts, valid = self._log_view()
+        drop = np.cumprod(valid & (times < cut), axis=1).sum(axis=1)
+        if drop.any():
+            if trim:
+                cap = self._log_t.shape[1]
+                self._log_start[:] = (self._log_start + drop) % cap
+                self._log_len[:] = self._log_len - drop
+            keep = valid & (np.arange(times.shape[1])[None, :]
+                            >= drop[:, None])
+        else:
+            keep = valid
+        return (np.where(keep, pts, 0).sum(axis=1),
+                keep.sum(axis=1).astype(np.int64))
 
     def snapshot(self) -> Dict[str, List]:
         return {

@@ -26,10 +26,31 @@ differential test).
 LMetricPolicy exposes the §5.1 ablations via ``kv_indicator``
 ("ptoken" | "one_minus_hit") and ``load_indicator`` ("bs" | "tokens")
 and hosts the §5.2 two-phase hotspot detector.
+
+Batch routing
+-------------
+Two batch APIs sit next to ``route``:
+
+* ``scores_batch(reqs, factory, now)`` — the (k, n) score matrix of a
+  whole arrival wave against the *current* (frozen) indicator state, for
+  analysis and monitoring.  No feedback between rows, no side effects:
+  simulator-based policies evaluate with their predictor's noise stream
+  untouched, and Preble scores its primary (KV$) branch per row with the
+  windowed fallback vector substituted where the branch condition fails.
+  ``route_batch`` is the decision path, not this.
+* ``plan_batch(reqs, factory, now)`` — the device half of
+  ``Router.route_batch``: plans the wave's assignments with the fused
+  sequential-argmin-with-feedback loop in ``repro.kernels.route_score``
+  (Pallas kernel for LMETRIC, jitted jax for JSQ/linear/filter).
+  Returns None when the policy (or factory) needs the host path:
+  simulator-based policies (llm-d, PolyServe — predictor noise is a
+  host-side stream), Dynamo (per-request max-normalisation), Preble
+  (windowed fallback state), an attached hotspot detector, the "cost"
+  load indicator, or an ``exact_only`` factory.  The router then simply
+  routes the wave sequentially — same decisions, same state.
 """
 from __future__ import annotations
 
-import itertools
 from typing import Optional, Sequence
 
 import numpy as np
@@ -44,9 +65,23 @@ _EPS = 1e-9
 class Policy:
     name = "base"
     requires_kv = True
+    #: route_score kind for device batch planning; None = host fallback
+    batch_kind: Optional[str] = None
+    #: whether the device kind scores KV$ hits (False skips the wave's
+    #: aggregated-index walks and LCP matrix entirely)
+    batch_needs_kv = True
 
     def __init__(self):
-        self._tie = itertools.count()
+        # round-robin tie counter: a plain int so plan_batch can *peek*
+        # (device plans consume one value per committed decision, and a
+        # mid-wave fallback must resume exactly where sequential routing
+        # would be); semantics identical to the old itertools.count
+        self._tie_n = 0
+
+    def _next_tie(self) -> int:
+        r = self._tie_n
+        self._tie_n = r + 1
+        return r
 
     def _select_min(self, scores, allowed=None) -> int:
         """Vectorized argmin with epsilon-tie round-robin.
@@ -64,11 +99,63 @@ class Policy:
             sub = s[a]
             best = sub.min()
             ties = a[sub <= best + _EPS]
-        return int(ties[next(self._tie) % len(ties)])
+        return int(ties[self._next_tie() % len(ties)])
 
     def route(self, req: Request, factory: IndicatorFactory,
               now: float) -> int:
         raise NotImplementedError
+
+    # ---- batch APIs ------------------------------------------------------
+    def _batch_params(self) -> tuple:
+        """Static parameters for the device wave loop (hashable)."""
+        return ()
+
+    def plan_batch(self, reqs: Sequence[Request],
+                   factory: IndicatorFactory, now: float):
+        """Plan a wave's assignments on device; None => host fallback.
+
+        Returns (decisions (k,), predicted hit tokens (k,)) computed by
+        the fused feedback loop, bit-identical to k sequential ``route``
+        calls as long as no KV$ eviction fires mid-wave (the router
+        checks ``factory.evictions`` while committing).  The tie counter
+        is only *read* here — the router consumes one value per
+        committed decision via ``_next_tie``.
+        """
+        if self.batch_kind is None or factory._agg is None:
+            return None
+        from repro.kernels import route_score
+        if self.batch_needs_kv:
+            depth, lcp, plen = factory.wave_inputs(reqs)
+        else:
+            # KV$-unaware kind: the kernel statically ignores hits —
+            # skip the walks and the LCP matrix
+            k = len(reqs)
+            depth = np.zeros((k, factory.n), dtype=np.int64)
+            lcp = np.zeros((k, k), dtype=np.int64)
+            plen = self._plens(reqs)
+        rbs, qbs, qpt, tt = factory.device_view()
+        return route_score.route_wave(
+            self.batch_kind, self._batch_params(), factory.block_size,
+            rbs, qbs, qpt, tt, depth, lcp, plen, self._tie_n)
+
+    def scores_batch(self, reqs: Sequence[Request],
+                     factory: IndicatorFactory, now: float) -> np.ndarray:
+        """(k, n) score matrix against the current frozen state."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _hits_matrix(reqs, factory) -> np.ndarray:
+        """(k, n) hit-token matrix (one aggregated walk per unique
+        prompt; per-instance walks on exact_only factories)."""
+        if factory._agg is not None:
+            depth, _, plen = factory.wave_inputs(reqs, with_lcp=False)
+            return np.minimum(depth * factory.block_size, plen[:, None])
+        return np.stack([factory.hits_for(r) for r in reqs])
+
+    @staticmethod
+    def _plens(reqs) -> np.ndarray:
+        return np.fromiter((r.prompt_len for r in reqs), np.int64,
+                           len(reqs))
 
     def describe(self) -> str:
         return self.name
@@ -79,21 +166,31 @@ class JSQPolicy(Policy):
     """vLLM-v1: score = 4*Q-BS + R-BS (Fig. 6a). KV$-unaware."""
     name = "vllm"
     requires_kv = False
+    batch_kind = "jsq"
+    batch_needs_kv = False
 
     def route(self, req, factory, now):
         scores = 4.0 * factory.q_bs + factory.r_bs
         return self._select_min(scores)
+
+    def scores_batch(self, reqs, factory, now):
+        # request-independent: every wave row sees the same queue state
+        return np.tile(4.0 * factory.q_bs + factory.r_bs, (len(reqs), 1))
 
 
 # ---------------------------------------------------------------------------
 class LinearKVPolicy(Policy):
     """BAILIAN: λ·(1 − kv_hit_ratio) + (1−λ)·norm(BS) (Fig. 6b)."""
     name = "linear"
+    batch_kind = "linear"
 
     def __init__(self, lam: float = 0.7):
         super().__init__()
         self.lam = lam
         self.name = f"linear(λ={lam})"
+
+    def _batch_params(self):
+        return (self.lam,)
 
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
@@ -103,6 +200,14 @@ class LinearKVPolicy(Policy):
         scores = self.lam * (1.0 - hits / L) \
             + (1.0 - self.lam) * (bs / max_bs)
         return self._select_min(scores)
+
+    def scores_batch(self, reqs, factory, now):
+        hits = self._hits_matrix(reqs, factory)
+        bs = factory.bs_vector()
+        max_bs = max(int(bs.max()), 1)
+        L = np.maximum(self._plens(reqs), 1)[:, None]
+        return self.lam * (1.0 - hits / L) \
+            + (1.0 - self.lam) * (bs / max_bs)
 
 
 # ---------------------------------------------------------------------------
@@ -122,16 +227,31 @@ class DynamoPolicy(Policy):
         scores = self.lam * pt / mp + (1 - self.lam) * tt / mt
         return self._select_min(scores)
 
+    def scores_batch(self, reqs, factory, now):
+        # host-only batch path: the per-request max-normalisation couples
+        # every score to that request's own P-token spread
+        hits = self._hits_matrix(reqs, factory)
+        pt = factory.queued_prefill_tokens \
+            + (self._plens(reqs)[:, None] - hits)
+        tt = factory.total_tokens
+        mp = np.maximum(pt.max(axis=1), 1)[:, None]
+        mt = max(int(tt.max()), 1)
+        return self.lam * pt / mp + (1 - self.lam) * tt / mt
+
 
 # ---------------------------------------------------------------------------
 class FilterKVPolicy(Policy):
     """AIBrix prefix-cache policy (Fig. 13)."""
     name = "filter"
+    batch_kind = "filter"
 
     def __init__(self, bs_range: int = 8):
         super().__init__()
         self.bs_range = bs_range
         self.name = f"filter(range={bs_range})"
+
+    def _batch_params(self):
+        return (self.bs_range,)
 
     def route(self, req, factory, now):
         bss = factory.bs_vector()
@@ -140,6 +260,12 @@ class FilterKVPolicy(Policy):
         hits = factory.hits_for(req)                         # KV$-awareness
         cand = np.flatnonzero(hits >= hits.max())
         return self._select_min(bss, allowed=cand)
+
+    def scores_batch(self, reqs, factory, now):
+        # both branches minimise BS (the KV$ branch just restricts the
+        # candidates); the monitoring matrix is the BS row per request
+        return np.tile(factory.bs_vector().astype(float),
+                       (len(reqs), 1))
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +287,17 @@ class SimulationPolicy(Policy):
             factory.total_tokens)
         return self._select_min(scores)
 
+    def scores_batch(self, reqs, factory, now):
+        # documented host fallback: simulator-based scoring draws from a
+        # host-side noise stream; this inspection matrix is noise-free
+        # (the stream is left untouched for route())
+        hits = (self._hits_matrix(reqs, factory) if self.kv_aware
+                else np.zeros((len(reqs), len(factory)), np.int64))
+        new = self._plens(reqs)[:, None] - hits
+        return self.model.predict_ttft_batch(
+            factory.queued_prefill_tokens, new, factory.r_bs,
+            factory.total_tokens, noise=1.0)
+
 
 # ---------------------------------------------------------------------------
 class PreblePolicy(Policy):
@@ -178,6 +315,12 @@ class PreblePolicy(Policy):
         self.name = f"preble(T={T})"
         self.branch_counts = {"kv": 0, "fallback": 0}
 
+    def _fallback_scores(self, factory, now, trim=True):
+        # windowed linear fallback over the factory's ring buffers: one
+        # vectorized trim+sum+count instead of n Python log walks
+        sum_pt, cnt = factory.window_stats(now, self.window, trim=trim)
+        return self.alpha * sum_pt + self.beta * cnt
+
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
         L = max(req.prompt_len, 1)
@@ -189,16 +332,21 @@ class PreblePolicy(Policy):
             pts = factory.p_tokens_for(req, hits)
             return self._select_min(pts, allowed=cand)
         self.branch_counts["fallback"] += 1
-        # window bookkeeping lives in per-instance Python logs (rare path,
-        # bounded by the 3-minute window); vectorizing would mean keeping
-        # per-instance ring buffers in arrays — not worth it yet.
-        scores = np.empty(len(factory))
-        for k, inst in enumerate(factory):
-            inst.trim_log(now, self.window)
-            sum_pt = sum(p for _, p in inst.routed_log)
-            n = len(inst.routed_log)
-            scores[k] = self.alpha * sum_pt + self.beta * n
-        return self._select_min(scores)
+        return self._select_min(self._fallback_scores(factory, now))
+
+    def scores_batch(self, reqs, factory, now):
+        # primary-branch rows: the P-token vector the KV$ branch
+        # minimises; rows failing the hit-ratio threshold get the
+        # windowed fallback score (computed without trimming — this is
+        # the side-effect-free inspection API)
+        hits = self._hits_matrix(reqs, factory)
+        plens = self._plens(reqs)
+        L = np.maximum(plens, 1)[:, None]
+        kv_rows = factory.queued_prefill_tokens \
+            + (plens[:, None] - hits)
+        best = (hits / L).max(axis=1)
+        fb = self._fallback_scores(factory, now, trim=False)
+        return np.where((best > self.T)[:, None], kv_rows, fb[None, :])
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +386,15 @@ class PolyServePolicy(Policy):
         # utilization branch: MOST loaded feasible instance
         return self._select_min(-tpots, allowed=feasible)
 
+    def scores_batch(self, reqs, factory, now):
+        # documented host fallback (noise-free inspection matrix, stream
+        # untouched): predicted TPOT — the quantity both branches rank —
+        # is request-independent, so every wave row is the same vector
+        tpots = self.model.predict_tpot_batch(
+            factory.r_bs, factory.total_tokens,
+            factory.queued_prefill_tokens, noise=1.0)
+        return np.tile(np.asarray(tpots), (len(reqs), 1))
+
 
 # ---------------------------------------------------------------------------
 class LMetricPolicy(Policy):
@@ -251,8 +408,14 @@ class LMetricPolicy(Policy):
     detector: optional two-phase KV$-hotspot detector (§5.2); when it
     fires, suspected instances are filtered and the policy degrades to
     load-balance-only over the remainder, per the paper's retrofit.
+
+    Batch planning runs the route_score Pallas kernel for the
+    "ptoken"/"one_minus_hit" × "bs"/"tokens" grid; the "cost" load
+    indicator (latency-model arithmetic) and an attached detector
+    (stateful per-decision Python phase machine) take the host fallback.
     """
     name = "lmetric"
+    batch_kind = "lmetric"
 
     def __init__(self, kv_indicator: str = "ptoken",
                  load_indicator: str = "bs", detector=None,
@@ -288,6 +451,32 @@ class LMetricPolicy(Policy):
             b = factory.total_tokens + 1.0
         return a * b
 
+    def _batch_params(self):
+        return (self.kv_indicator, self.load_indicator)
+
+    def plan_batch(self, reqs, factory, now):
+        if self.detector is not None or self.load_indicator == "cost":
+            return None                      # documented host fallback
+        return super().plan_batch(reqs, factory, now)
+
+    def scores_batch(self, reqs, factory, now):
+        hits = self._hits_matrix(reqs, factory)
+        plens = self._plens(reqs)
+        L = np.maximum(plens, 1)[:, None]
+        if self.kv_indicator == "ptoken":
+            a = (factory.queued_prefill_tokens
+                 + (plens[:, None] - hits)) + 1.0
+        else:
+            a = 1.0 - hits / L + 1e-3
+        if self.load_indicator == "bs":
+            b = factory.bs_vector() + 1.0
+        elif self.load_indicator == "cost":
+            b = self.latency_model.step_time_batch(
+                0, factory.bs_vector() + 1, factory.total_tokens) * 1e3
+        else:
+            b = factory.total_tokens + 1.0
+        return a * b
+
     def route(self, req, factory, now):
         hits = factory.hits_for(req)
         scores = self.scores(req, factory, hits)
@@ -295,9 +484,11 @@ class LMetricPolicy(Policy):
         if self.detector is not None:
             excluded = self.detector.observe(req, factory, hits, scores, now)
         if excluded:
-            allowed = [k for k in range(len(factory)) if k not in excluded]
-            if not allowed:
-                allowed = list(range(len(factory)))
+            allowed = np.setdiff1d(np.arange(len(factory)),
+                                   np.fromiter(excluded, np.int64,
+                                               len(excluded)))
+            if allowed.size == 0:
+                allowed = np.arange(len(factory))
             # mitigation: fall back to load-balance-only over remainder
             return self._select_min(factory.bs_vector(), allowed=allowed)
         return self._select_min(scores)

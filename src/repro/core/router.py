@@ -4,15 +4,48 @@ The router owns the indicator factory and a policy; instance engines
 (simulated or real) push state updates through the factory hooks —
 piggybacked on responses in a real deployment.  Per-decision latency is
 recorded (the paper's §3 highlights router-implementation overhead).
+
+``route_batch`` coalesces an arrival wave: the policy plans every
+assignment in one fused device computation (see
+``repro.kernels.route_score``) and the router commits the plan through
+the exact per-request hook sequence ``route`` performs — so the batch is
+bit-identical to k sequential ``route`` calls.  The one effect the
+device plan cannot model is a KV$ eviction fired by a mid-wave insert;
+the factory's eviction counter detects that and the remaining requests
+re-route sequentially (the tie counter is consumed per *committed*
+decision, so the fallback resumes exactly where sequential routing
+would be).
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from .indicators import IndicatorFactory
 from .policies import Policy
 from .types import Request
+
+
+def commit_wave_plan(factory: IndicatorFactory, reqs: Sequence[Request],
+                     commit, fallback) -> List:
+    """Commit a device wave plan with the mid-wave eviction guard.
+
+    The plan's hit model is exact *unless* a commit's KV$ insert evicts
+    (caches only grow otherwise): snapshot the factory's eviction
+    counter first, re-check it before every commit, and hand the rest of
+    the wave to ``fallback`` (sequential routing) the moment it moves.
+    This ordering is the bit-identity invariant shared by
+    ``Router.route_batch`` and ``PDDisaggSim._on_arrivals`` — keep it in
+    one place.
+    """
+    ev0 = factory.evictions
+    out: List = []
+    for j, req in enumerate(reqs):
+        if factory.evictions != ev0:
+            out.extend(fallback(r) for r in reqs[j:])
+            return out
+        out.append(commit(j, req))
+    return out
 
 
 class Router:
@@ -45,6 +78,46 @@ class Router:
             inst.kv.insert(req.blocks)
         self.routed += 1
         return iid
+
+    # ------------------------------------------------------------------
+    def route_batch(self, reqs: Sequence[Request],
+                    now: float) -> List[int]:
+        """Route a coalesced arrival wave; bit-identical to sequential
+        ``route`` calls.  k <= 1 and host-fallback policies degenerate to
+        the scalar path; a mid-wave eviction aborts the remaining plan.
+
+        ``decision_ns`` telemetry records the plan cost amortized over
+        the wave (the same policy-decision cost ``route`` records)."""
+        if not reqs:
+            return []
+        if len(reqs) == 1 or not self.insert_on_route:
+            # without insert-on-route the plan's intra-wave LCP credit
+            # would model KV$ inserts that never happen — host path
+            return [self.route(r, now) for r in reqs]
+        t0 = time.perf_counter_ns()
+        plan = self.policy.plan_batch(reqs, self.factory, now)
+        if plan is None:
+            return [self.route(r, now) for r in reqs]
+        sel, _ = plan
+        per_req_ns = (time.perf_counter_ns() - t0) // len(reqs)
+
+        def commit(j, req):
+            iid = int(sel[j])
+            self.policy._next_tie()      # one tie value per commit
+            self.decision_ns.append(per_req_ns)
+            inst = self.factory[iid]
+            hit = inst.kv_hit(req, touch=True)
+            req.sched_to = iid
+            req.hit_tokens = hit
+            req.t_sched = now
+            inst.on_route(req, now, hit)
+            if self.insert_on_route:
+                inst.kv.insert(req.blocks)
+            self.routed += 1
+            return iid
+
+        return commit_wave_plan(self.factory, reqs, commit,
+                                lambda r: self.route(r, now))
 
     # ---- response piggyback hooks ------------------------------------
     def on_prefill_progress(self, iid: int, n_tokens: int):

@@ -1,0 +1,316 @@
+"""Differential tests for the fused batch-routing path.
+
+``Router.route_batch`` must be **bit-identical** to k sequential
+``route`` calls for every policy: the device plan replays the same
+score → select → feedback sequence (including intra-wave KV$ inserts via
+the LCP credit) and the router commits it through the identical hook
+calls.  We prove it three ways over a ~2k-request hotspot trace:
+
+1. batch vs sequential ``route`` on the *vectorized numpy* policies,
+2. batch vs the frozen scalar reference (``repro.core.scalar_ref``),
+3. the Pallas kernel vs the pure-jnp wave loop on random state.
+
+A deterministic partial-drain schedule keeps every indicator nonzero and
+varying; finite KV$ capacity makes mid-wave evictions happen, so the
+eviction-guard fallback is exercised by the same test that proves
+identity.
+"""
+import collections
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineSpec, HotspotDetector, LatencyModel,
+                        LMetricPolicy, Router, make_policy)
+from repro.core.scalar_ref import make_scalar_policy
+from repro.workloads.traces import make_hotspot_trace
+
+SPEC = EngineSpec(name="diff", active_params=3e9, n_layers=16,
+                  kv_bytes_per_token=4096)
+N_INST = 16
+
+POLICY_SPECS = [
+    ("vllm", {}, False),
+    ("linear", {}, False),
+    ("dynamo", {}, False),
+    ("filter", {}, False),
+    ("llm-d", {}, True),
+    ("preble", {}, False),
+    ("polyserve", dict(slo_ttft=0.5, slo_tpot=0.030), True),
+    ("lmetric", {}, False),
+    # §5.1 ablations exercise the other kernel score modes
+    ("lmetric", dict(kv_indicator="one_minus_hit"), False),
+    ("lmetric", dict(load_indicator="tokens"), False),
+]
+
+
+@pytest.fixture(scope="module")
+def trace():
+    reqs = make_hotspot_trace(qps=14.0, duration=160.0, seed=5,
+                              burst_start=40.0, burst_len=70.0)
+    assert len(reqs) >= 2000, f"trace too small: {len(reqs)}"
+    return reqs[:2000]
+
+
+def _mk(name, kw, needs_model, maker=make_policy):
+    if needs_model:
+        return maker(name, latency_model=LatencyModel(
+            SPEC, error_std=0.15, seed=7), **kw)
+    return maker(name, **kw)
+
+
+def _drive(router, reqs, batch, use_batch):
+    """Route the trace in waves of ``batch``; the wave either goes
+    through ``route_batch`` or through sequential ``route`` calls with
+    the identical per-wave ``now``.  The drain schedule is a pure
+    function of the request index, so factory states agree as long as
+    decisions do."""
+    decisions = []
+    outstanding = collections.deque()
+    reqs = copy.deepcopy(reqs)
+    for i in range(0, len(reqs), batch):
+        wave = reqs[i:i + batch]
+        now = wave[0].arrival
+        if use_batch:
+            iids = router.route_batch(wave, now)
+        else:
+            iids = [router.route(r, now) for r in wave]
+        decisions.extend(iids)
+        for r, iid in zip(wave, iids):
+            outstanding.append((iid, r, r.new_tokens))
+            router.factory[iid].on_prefill_progress(256)
+        for _ in range(len(wave)):
+            if len(outstanding) > 2:
+                did, dreq, dnew = outstanding.popleft()
+                di = router.factory[did]
+                di.on_prefill_progress(dnew)
+                di.on_start_running(dreq)
+                for _ in range(dreq.output_len % 7):
+                    di.on_decode_token()
+                di.on_finish(dreq)
+    return decisions
+
+
+def _router(policy, **kw):
+    return Router(policy, N_INST, kv_capacity_tokens=150_000, **kw)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("batch", [1, 8, 64])
+@pytest.mark.parametrize("name,kw,needs_model", POLICY_SPECS,
+                         ids=[f"{n}-{i}" for i, (n, _, __) in
+                              enumerate(POLICY_SPECS)])
+def test_batch_identical_to_sequential_and_scalar(name, kw, needs_model,
+                                                  batch, trace):
+    got = _drive(_router(_mk(name, kw, needs_model)), trace, batch, True)
+    seq = _drive(_router(_mk(name, kw, needs_model)), trace, batch, False)
+    assert got == seq, (
+        f"{name}{kw} b={batch}: batch diverges from sequential route() "
+        f"at {next(i for i, (a, b) in enumerate(zip(got, seq)) if a != b)}")
+    ref = _drive(_router(_mk(name, kw, needs_model,
+                             maker=make_scalar_policy)),
+                 trace, batch, False)
+    assert got == ref, f"{name}{kw} b={batch}: diverges from scalar_ref"
+
+
+def test_batch_identical_quick(trace):
+    """Non-slow smoke: the paper policy + the KV$-unaware baseline."""
+    sub = trace[:600]
+    for name in ("lmetric", "vllm"):
+        got = _drive(_router(make_policy(name)), sub, 8, True)
+        seq = _drive(_router(make_policy(name)), sub, 8, False)
+        assert got == seq, name
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+def test_empty_batch():
+    router = _router(make_policy("lmetric"))
+    assert router.route_batch([], 0.0) == []
+    assert router.decision_ns == []
+
+
+def test_k1_degenerates_to_scalar_path(trace):
+    """A single-request wave must take the plain route() path (same
+    decisions, same per-decision telemetry semantics)."""
+    a = _router(make_policy("lmetric"))
+    b = _router(make_policy("lmetric"))
+    for req in copy.deepcopy(trace[:200]):
+        (iid,) = a.route_batch([req], req.arrival)
+        want = b.route(copy.deepcopy(req), req.arrival)
+        assert iid == want
+    assert a.routed == b.routed == 200
+
+
+def test_exact_only_factory_falls_back(trace):
+    """exact_only factories have no aggregated index: plan_batch must
+    return None and route_batch must still match sequential routing."""
+    pol = make_policy("lmetric")
+    router = Router(pol, N_INST, exact_only=True)
+    wave = copy.deepcopy(trace[:32])
+    assert pol.plan_batch(wave, router.factory, 0.0) is None
+    got = _drive(Router(make_policy("lmetric"), N_INST, exact_only=True),
+                 trace[:600], 16, True)
+    seq = _drive(Router(make_policy("lmetric"), N_INST, exact_only=True),
+                 trace[:600], 16, False)
+    assert got == seq
+
+
+def test_detector_forces_host_fallback_and_matches(trace):
+    """Hotspot mitigation mutates per-decision state the device loop
+    cannot replay: with a detector attached the wave must take the host
+    path, and mid-batch indicator updates (mitigation flipping between
+    waves) must still match sequential routing exactly."""
+    def mk():
+        return LMetricPolicy(detector=HotspotDetector(window=600.0,
+                                                      min_requests=5))
+    pol = mk()
+    router = _router(pol)
+    wave = copy.deepcopy(trace[:16])
+    assert pol.plan_batch(wave, router.factory, 0.0) is None
+    got_pol, seq_pol = mk(), mk()
+    got = _drive(_router(got_pol), trace[:1200], 8, True)
+    seq = _drive(_router(seq_pol), trace[:1200], 8, False)
+    assert got == seq
+    assert got_pol.detector.events == seq_pol.detector.events
+    # the hotspot trace must actually trip the detector for this test
+    # to mean anything
+    assert any(e["event"] == "alarm" for e in got_pol.detector.events)
+
+
+def test_no_insert_on_route_falls_back(trace):
+    """With insert_on_route=False the plan's intra-wave LCP credit would
+    model KV$ inserts that never happen — route_batch must take the host
+    path and stay sequential-identical (identical-prompt waves are the
+    adversarial case: phantom credit would pile them onto one
+    instance)."""
+    reqs = copy.deepcopy(trace[:12])
+    for r in reqs[:6]:
+        r.blocks = reqs[0].blocks
+        r.prompt_len = reqs[0].prompt_len
+    a = Router(make_policy("lmetric"), N_INST, insert_on_route=False)
+    b = Router(make_policy("lmetric"), N_INST, insert_on_route=False)
+    got = a.route_batch(copy.deepcopy(reqs), 0.0)
+    seq = [b.route(r, 0.0) for r in copy.deepcopy(reqs)]
+    assert got == seq
+
+
+def test_lcp_tiling_matches_untiled():
+    """A single huge shared-first-block group must tile without changing
+    results."""
+    from repro.core.indicators import _pairwise_lcp
+    rng = np.random.RandomState(2)
+    chains = [tuple([7] + rng.randint(0, 3, rng.randint(1, 40)).tolist())
+              for _ in range(120)]
+    full = _pairwise_lcp(chains)
+    import repro.core.indicators as ind
+    out = np.zeros((len(chains), len(chains)), dtype=np.int64)
+    ind._lcp_block(chains, out, list(range(len(chains))), max_elems=512)
+    assert (out == full).all()
+
+
+def test_eviction_mid_batch_falls_back(trace):
+    """Tiny KV$ capacity: inserts evict mid-wave, invalidating the
+    plan's hit model — the router must detect it (eviction counter) and
+    still produce sequential-identical decisions."""
+    a = Router(make_policy("lmetric"), N_INST, kv_capacity_tokens=6_000)
+    b = Router(make_policy("lmetric"), N_INST, kv_capacity_tokens=6_000)
+    got = _drive(a, trace[:600], 32, True)
+    seq = _drive(b, trace[:600], 32, False)
+    assert a.factory.evictions > 0, "capacity too large to exercise guard"
+    assert got == seq
+
+
+# ---------------------------------------------------------------------------
+# kernel vs pure-jnp reference on random state
+# ---------------------------------------------------------------------------
+def test_route_kernel_matches_jnp_ref():
+    from repro.kernels import route_score as rs
+    rng = np.random.RandomState(3)
+    n, k, bs = 32, 24, 64
+    args = (rng.randint(0, 6, n).astype(np.int64),
+            rng.randint(0, 6, n).astype(np.int64),
+            rng.randint(0, 4000, n).astype(np.int64),
+            rng.randint(0, 9000, n).astype(np.int64),
+            rng.randint(0, 8, (k, n)).astype(np.int64),
+            np.minimum.outer(np.arange(k), np.arange(k)).astype(np.int64)
+            % 5,
+            (rng.randint(4, 10, k) * bs).astype(np.int64))
+    for kind, params in (("lmetric", ("ptoken", "bs")),
+                         ("lmetric", ("one_minus_hit", "tokens")),
+                         ("ptoken", ())):
+        sel_k, hit_k = rs.route_wave(kind, params, bs, *args, 5,
+                                     use_pallas=True)
+        sel_r, hit_r = rs.route_wave_ref(kind, params, bs, *args, 5)
+        assert (sel_k == sel_r).all() and (hit_k == hit_r).all(), kind
+
+
+def test_wave_inputs_match_per_request_walks(trace):
+    from repro.core.indicators import IndicatorFactory, _pairwise_lcp
+    f = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    reqs = copy.deepcopy(trace[:300])
+    for i, r in enumerate(reqs):
+        f[i % N_INST].kv.insert(r.blocks)
+    wave = reqs[100:180]
+    depth, lcp, plen = f.wave_inputs(wave)
+    for j, r in enumerate(wave):
+        hits = np.minimum(depth[j] * f.block_size, r.prompt_len)
+        assert (hits == f.hits_for(r)).all(), j
+        assert plen[j] == r.prompt_len
+    # brute-force LCP
+    for j in range(0, len(wave), 7):
+        for jj in range(0, len(wave), 11):
+            a, b = wave[j].blocks, wave[jj].blocks
+            d = 0
+            while d < min(len(a), len(b)) and a[d] == b[d]:
+                d += 1
+            assert lcp[j, jj] == d, (j, jj)
+
+
+def test_pd_disagg_wave_coalescing_bit_identical(trace):
+    """PDDisaggSim coalesces same-timestamp arrivals through the batched
+    P-token path; the full simulation must match per-request routing."""
+    from repro.cluster.pd_disagg import PDDisaggSim
+
+    class Sequential(PDDisaggSim):
+        def _on_arrivals(self, reqs):
+            for r in reqs:
+                self._on_arrival(r)
+
+    spec = EngineSpec(name="pd", active_params=3e9, n_layers=16,
+                      kv_bytes_per_token=4096)
+    reqs = copy.deepcopy(trace[:400])
+    for r in reqs:                       # quantize so waves actually form
+        r.arrival = round(r.arrival)
+    reqs.sort(key=lambda r: r.arrival)
+
+    done_a = PDDisaggSim(4, 6, spec).run(copy.deepcopy(reqs))
+    done_b = Sequential(4, 6, spec).run(copy.deepcopy(reqs))
+    key = lambda rs: [(r.rid, r.sched_to, r.hit_tokens, r.t_sched,
+                       r.t_first_token, r.t_finish) for r in rs]
+    assert key(done_a) == key(done_b)
+
+
+def test_scores_batch_shapes_and_values(trace):
+    """scores_batch covers all 8 policies; spot-check the closed-form
+    rows against the route() scoring expressions."""
+    f_router = _router(make_policy("lmetric"))
+    _drive(f_router, trace[:300], 8, True)
+    f = f_router.factory
+    wave = copy.deepcopy(trace[300:316])
+    lm = LatencyModel(SPEC, error_std=0.15, seed=7)
+    for name, kw, needs in POLICY_SPECS[:8]:
+        pol = _mk(name, kw, needs)
+        m = pol.scores_batch(wave, f, wave[0].arrival)
+        assert m.shape == (len(wave), N_INST), name
+    jsq = make_policy("vllm").scores_batch(wave, f, 0.0)
+    assert (jsq[0] == 4.0 * f.q_bs + f.r_bs).all()
+    lmet = make_policy("lmetric")
+    m = lmet.scores_batch(wave, f, 0.0)
+    for j in (0, 5, 15):
+        hits = f.hits_for(wave[j])
+        want = lmet.scores(wave[j], f, hits)
+        assert np.array_equal(m[j], want), j

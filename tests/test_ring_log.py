@@ -1,0 +1,122 @@
+"""Preble routed-window ring buffers: bit-compatibility with the old
+per-instance Python list bookkeeping (append / trim_log / routed_log),
+including ring growth and the leading-run trim semantics."""
+import numpy as np
+
+from repro.core.indicators import IndicatorFactory
+from repro.core.types import Request
+
+
+def _req(rid, plen=256):
+    return Request(rid=rid, arrival=0.0, blocks=(rid,), prompt_len=plen,
+                   output_len=4)
+
+
+class _ListModel:
+    """The pre-ring semantics, verbatim."""
+
+    def __init__(self, n):
+        self.logs = [[] for _ in range(n)]
+
+    def append(self, i, t, p):
+        self.logs[i].append((t, p))
+
+    def trim(self, i, now, window):
+        log, cut, k = self.logs[i], now - window, 0
+        while k < len(log) and log[k][0] < cut:
+            k += 1
+        if k:
+            del log[:k]
+
+
+def test_ring_matches_list_model_randomized():
+    rng = np.random.RandomState(7)
+    n = 4
+    f = IndicatorFactory(n)
+    model = _ListModel(n)
+    t = 0.0
+    for step in range(3000):   # > _LOG_CAP0 per instance forces growth
+        i = int(rng.randint(n))
+        op = rng.rand()
+        if op < 0.8:
+            t += float(rng.rand())
+            p = int(rng.randint(1000))
+            f.log_routed(i, t, p)
+            model.append(i, t, p)
+        else:
+            w = float(rng.rand() * 50)
+            f[i].trim_log(t, w)
+            model.trim(i, t, w)
+        if step % 97 == 0:
+            for j in range(n):
+                assert f[j].routed_log == model.logs[j], (step, j)
+    for j in range(n):
+        assert f[j].routed_log == model.logs[j]
+
+
+def test_trim_leading_run_only():
+    """An out-of-order newer entry shields older entries behind it —
+    exactly the old list trim's front-scan behaviour."""
+    f = IndicatorFactory(1)
+    f.log_routed(0, 1.0, 10)
+    f.log_routed(0, 9.0, 20)
+    f.log_routed(0, 2.0, 30)   # older than the cut, but behind 9.0
+    f[0].trim_log(5.0 + 100.0, 100.0)   # cut = 5.0
+    assert f[0].routed_log == [(9.0, 20), (2.0, 30)]
+
+
+def test_window_stats_matches_per_instance_trim():
+    rng = np.random.RandomState(1)
+    n = 8
+    f = IndicatorFactory(n)
+    g = IndicatorFactory(n)
+    for _ in range(500):
+        i = int(rng.randint(n))
+        t = float(rng.rand() * 100)
+        p = int(rng.randint(500))
+        f.log_routed(i, t, p)
+        g.log_routed(i, t, p)
+    now, window = 130.0, 60.0
+    sum_pt, cnt = f.window_stats(now, window)
+    for i in range(n):
+        g[i].trim_log(now, window)
+        log = g[i].routed_log
+        assert cnt[i] == len(log)
+        assert sum_pt[i] == sum(p for _, p in log)
+    # both factories end in the same trimmed state
+    for i in range(n):
+        assert f[i].routed_log == g[i].routed_log
+
+
+def test_full_ring_trims_horizon_before_growing():
+    """A hot instance whose window entries are older than LOG_HORIZON_S
+    recycles its ring instead of doubling the whole (n, cap) matrix."""
+    f = IndicatorFactory(4)
+    cap0 = f._log_t.shape[1]
+    # 20s apart: a full ring spans cap0*20s >> the 1h horizon, so every
+    # fill can recycle stale entries instead of growing
+    for i in range(10 * cap0):
+        f.log_routed(0, i * 20.0, i)
+    assert f._log_t.shape[1] == cap0, "should horizon-trim, not grow"
+    assert f._log_len[0] <= cap0
+    # recent entries (inside any realistic policy window) are retained
+    assert f[0].routed_log[-1] == ((10 * cap0 - 1) * 20.0, 10 * cap0 - 1)
+    # trims happen at fill time, so retained entries are at most
+    # horizon-plus-one-ring-span old
+    horizon = IndicatorFactory.LOG_HORIZON_S
+    newest = (10 * cap0 - 1) * 20.0
+    oldest = f[0].routed_log[0][0]
+    assert oldest >= newest - (horizon + cap0 * 20.0)
+    # entries genuinely inside the horizon still force growth
+    g = IndicatorFactory(2)
+    for i in range(cap0 + 10):
+        g.log_routed(1, i * 0.001, i)   # all within the horizon
+    assert g._log_t.shape[1] == 2 * cap0
+    assert len(g[1].routed_log) == cap0 + 10
+
+
+def test_on_route_feeds_ring():
+    f = IndicatorFactory(2)
+    f[1].on_route(_req(0, plen=300), 5.0, 44)
+    assert f[1].routed_log == [(5.0, 256)]
+    assert f[0].routed_log == []

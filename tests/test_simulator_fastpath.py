@@ -56,6 +56,12 @@ class _RefClusterSim(ClusterSim):
         self.instances = [_RefSimInstance(i, spec, self.model)
                           for i in range(len(router.factory))]
 
+    def _on_arrivals(self, reqs):
+        # the pre-fastpath simulator had no wave coalescing: route each
+        # arrival individually (route_batch must match this bit for bit)
+        for req in reqs:
+            self._on_arrival(req)
+
     def _on_arrival(self, req):
         iid = self.router.route(req, self.now)
         inst = self.instances[iid]
