@@ -330,6 +330,98 @@ def bench_fig28_load_gradient(force=False):
 
 
 # ---------------------------------------------------------------------------
+def bench_closed_loop(force=False):
+    """Closed-loop coding-agent scenario (the paper's workloads as they
+    actually behave): 2k sessions whose next turn only arrives after the
+    previous one completes, per-session KV$ lineage, SLO abandonment.
+
+    Two grids share one cache:
+      * ``grid`` — every policy (all 8 baselines + the SMetric-style
+        session-affinity baseline) at 0.75× capacity: TTFT / TPOT /
+        SLO-goodput / abandonment per policy under feedback.
+      * ``sweep`` — offered session-start rate × a policy subset
+        (paper-style load sweep, Fig. 23 analogue under feedback).
+
+    REPRO_BENCH_SMALL=1 shrinks to a CI-friendly 200-session smoke.
+    """
+    import os
+
+    from repro.cluster.closed_loop import ClosedLoopSim
+    from repro.cluster.metrics import summarize
+    from repro.core import LatencyModel, Router
+    from repro.workloads.sessions import (SESSIONS, make_sessions,
+                                          session_stats)
+    from .common import (N_INSTANCES, capacity_qps, cluster_spec)
+
+    small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+    n_sessions = 200 if small else 2000
+    pols = ["vllm", "linear", "dynamo", "filter", "llm-d", "preble",
+            "polyserve", "lmetric", "session-affinity"]
+    sweep_pols = ["vllm", "linear", "lmetric", "session-affinity"]
+    base_frac = 0.75
+    fracs = (base_frac,) if small else (0.45, base_frac, 1.05)
+    spec = cluster_spec()
+    cap_rate = capacity_qps("coder") / SESSIONS["coder"].expected_requests()
+
+    def run_one(pol_name, frac):
+        sessions = make_sessions("coder", n_sessions, seed=3,
+                                 start_rate=cap_rate * frac)
+        router = Router(build_policy(pol_name), N_INSTANCES,
+                        kv_capacity_tokens=KV_CAPACITY)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec))
+        done = sim.run_sessions(sessions)
+        s = summarize(done)
+        s.pop("families", None)          # single-family scenario
+        s.update(session_stats(sessions))
+        s["sched_us"] = router.mean_decision_us()
+        s["offered_frac"] = frac
+        s["policy"] = pol_name
+        return s
+
+    def go():
+        out = {"n_sessions": n_sessions, "offered_base": base_frac,
+               "grid": {}, "sweep": {}}
+        for p in pols:
+            out["grid"][p] = run_one(p, base_frac)
+        for f in fracs:
+            out["sweep"][str(f)] = {
+                p: (out["grid"][p] if f == base_frac else run_one(p, f))
+                for p in sweep_pols}
+        return out
+
+    r = cached("closed_loop", go, force)
+    rows = []
+    for p, s in r["grid"].items():
+        rows.append(csv_row(
+            f"closed_loop.{p}", s["sched_us"],
+            f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+            f"tpot={s['tpot_mean'] * 1e3:.2f}ms "
+            f"goodput={s['goodput_rps']:.2f}/s "
+            f"slo={s['slo_attainment'] * 100:.1f}% "
+            f"abandon={s['abandon_rate'] * 100:.1f}%"))
+    for f, by_pol in r["sweep"].items():
+        for p, s in by_pol.items():
+            if float(f) == r["offered_base"]:
+                continue
+            rows.append(csv_row(
+                f"closed_loop.load{f}.{p}", s["sched_us"],
+                f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+                f"goodput={s['goodput_rps']:.2f}/s"))
+    g = r["grid"]
+    dt = 1 - g["lmetric"]["ttft_mean"] / g["vllm"]["ttft_mean"]
+    dp = 1 - g["lmetric"]["tpot_mean"] / g["vllm"]["tpot_mean"]
+    gg = g["lmetric"]["goodput_rps"] / max(g["vllm"]["goodput_rps"], 1e-9)
+    aff = g["session-affinity"]
+    return rows, (f"closed loop (coder, {r['n_sessions']} sessions): "
+                  f"lmetric TTFT -{dt * 100:.0f}% TPOT -{dp * 100:.0f}% "
+                  f"goodput {gg:.2f}x vs vllm under feedback; "
+                  f"session-affinity hit="
+                  f"{aff['kv_hit_ratio'] * 100:.0f}% vs lmetric "
+                  f"{g['lmetric']['kv_hit_ratio'] * 100:.0f}% "
+                  f"(paper claims TTFT -92%/-52% on open-loop replay)")
+
+
+# ---------------------------------------------------------------------------
 def bench_router_scale(force=False):
     """Vectorized scoring core vs the frozen scalar reference: mean
     per-decision latency of the paper's LMETRIC policy at 16 / 256 / 1024
@@ -621,6 +713,7 @@ ALL_BENCHES = [
     bench_fig26_research_baselines,
     bench_fig27_preble_branches,
     bench_fig28_load_gradient,
+    bench_closed_loop,
     bench_router_scale,
     bench_batch_routing,
     bench_detector_observe,

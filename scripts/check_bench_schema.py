@@ -1,0 +1,111 @@
+#!/usr/bin/env python
+"""Validate results/bench/*.json artifacts stay machine-comparable.
+
+CI uploads the bench JSONs as a per-PR perf-trajectory artifact; this
+check keeps them diffable across PRs:
+
+* every file parses as JSON with a dict top level,
+* every leaf is a JSON scalar (no stringified objects, NaNs as numbers,
+  or numpy types that ``json.dump(default=str)`` silently flattened),
+* known bench files carry their required record fields — e.g. every
+  ``closed_loop.json`` policy record must expose the TTFT/TPOT/goodput
+  trio the closed-loop comparison is built on.
+
+Usage:  python scripts/check_bench_schema.py [results/bench]
+Exit 0 = all artifacts valid; 1 = violations (printed per file).
+"""
+import json
+import math
+import os
+import sys
+
+#: required keys per policy record in closed_loop.json (grid and sweep)
+CLOSED_LOOP_RECORD = (
+    "n", "ttft_mean", "ttft_p95", "tpot_mean", "tpot_p99",
+    "ttft_slo_attainment", "tpot_slo_attainment", "slo_attainment",
+    "goodput_rps", "abandon_rate", "n_sessions", "sched_us",
+    "offered_frac", "policy",
+)
+#: summary records emitted by run_sim-based benches
+SUMMARY_RECORD = ("n", "ttft_mean", "tpot_mean", "kv_hit_ratio")
+
+SCALARS = (str, int, float, bool, type(None))
+
+
+def _leaves_ok(node, path, errors):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if not isinstance(k, str):
+                errors.append(f"{path}: non-string key {k!r}")
+            _leaves_ok(v, f"{path}.{k}", errors)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _leaves_ok(v, f"{path}[{i}]", errors)
+    elif not isinstance(node, SCALARS):
+        errors.append(f"{path}: non-JSON-scalar leaf {type(node).__name__}")
+    elif isinstance(node, float) and not math.isfinite(node):
+        # json.dump writes NaN/Infinity literals that strict-JSON
+        # consumers (jq, most non-Python tooling) reject
+        errors.append(f"{path}: non-finite value {node}")
+
+
+def _check_record(rec, required, path, errors):
+    if not isinstance(rec, dict):
+        errors.append(f"{path}: expected record dict, got "
+                      f"{type(rec).__name__}")
+        return
+    missing = [k for k in required if k not in rec]
+    if missing:
+        errors.append(f"{path}: missing fields {missing}")
+
+
+def check_file(path):
+    errors = []
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"{name}: unparseable ({e})"]
+    if not isinstance(data, dict):
+        return [f"{name}: top level must be a dict"]
+    _leaves_ok(data, name, errors)
+    if name == "closed_loop.json":
+        for key in ("n_sessions", "grid", "sweep"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for p, rec in data.get("grid", {}).items():
+            _check_record(rec, CLOSED_LOOP_RECORD, f"{name}.grid.{p}",
+                          errors)
+        for frac, by_pol in data.get("sweep", {}).items():
+            for p, rec in by_pol.items():
+                _check_record(rec, CLOSED_LOOP_RECORD,
+                              f"{name}.sweep.{frac}.{p}", errors)
+    elif name == "fig22.json":
+        for t, by_pol in data.items():
+            for p, rec in by_pol.items():
+                _check_record(rec, SUMMARY_RECORD, f"{name}.{t}.{p}",
+                              errors)
+    return errors
+
+
+def main():
+    bench_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "results", "bench")
+    files = sorted(f for f in os.listdir(bench_dir) if f.endswith(".json"))
+    if not files:
+        print(f"no bench artifacts under {bench_dir}", file=sys.stderr)
+        return 1
+    failures = 0
+    for f in files:
+        errors = check_file(os.path.join(bench_dir, f))
+        status = "ok" if not errors else "FAIL"
+        print(f"{f:28s} {status}")
+        for e in errors:
+            print(f"  {e}")
+        failures += bool(errors)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

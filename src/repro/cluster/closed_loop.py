@@ -1,0 +1,95 @@
+"""Closed-loop cluster drivers: session completion → next arrival.
+
+``ClosedLoopSim`` extends ``ClusterSim`` with the feedback edge the
+open-loop simulator cannot express: when a request finishes, its session
+state machine (``repro.workloads.sessions``) is advanced and the next
+turn's request(s) are pushed as *future arrival events* stamped relative
+to the observed finish time.  Scheduling quality therefore throttles (or
+releases) offered load, per-session KV$ lineage accumulates on whatever
+instance the router keeps choosing, and sessions abandon on sustained
+SLO breach — the three effects the paper's "real-world workloads" have
+that pre-stamped traces do not.
+
+Determinism: the event heap is ordered by ``(t, seq)``; session content
+is a pure function of ``(family, seed, sid)`` (per-session RNG); request
+ids are assigned in push order.  Two runs of the same scenario produce
+bit-identical request logs (``tests/test_closed_loop.py``), and
+feedback-generated same-timestamp waves (API fan-out) coalesce through
+``Router.route_batch`` exactly like pre-stamped waves — the batch path
+stays bit-identical to sequential routing.
+
+``ClosedLoopPDSim`` drives the PD-disaggregated simulator through the
+same session feedback: its arrival coalescing already accepts
+dynamically pushed waves (events enter the shared heap before it
+drains), so the closed loop is just the ``_finish`` hook plus rid
+assignment.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.cluster.pd_disagg import PDDisaggSim
+from repro.cluster.simulator import ClusterSim, _SimInstance
+from repro.core.types import Request
+from repro.workloads.sessions import Session
+
+
+class _SessionFeedback:
+    """Shared closed-loop machinery for the simulator backends.
+
+    Owns the session registry and the rid counter; ``_session_feedback``
+    is called by the backend's ``_finish`` override and pushes the next
+    arrivals into the backend's event heap (``self._push``), where the
+    existing same-timestamp coalescing picks them up as waves.
+    """
+
+    def _attach_sessions(self, sessions: List[Session]):
+        self.sessions = sessions
+        self._by_sid: Dict[int, Session] = {s.sid: s for s in sessions}
+        self._rid = itertools.count()
+
+    def _push_request(self, req: Request):
+        req.rid = next(self._rid)
+        self._push(req.arrival, "arrival", req)
+
+    def _seed_arrivals(self):
+        for sess in self.sessions:
+            for req in sess.start():
+                self._push_request(req)
+
+    def _session_feedback(self, req: Request):
+        sess = self._by_sid.get(req.session_id)
+        if sess is None:
+            return
+        for nxt in sess.on_complete(req, req.t_finish):
+            self._push_request(nxt)
+
+
+class ClosedLoopSim(_SessionFeedback, ClusterSim):
+    """``ClusterSim`` with the session-completion → next-arrival edge."""
+
+    def run_sessions(self, sessions: List[Session],
+                     until: Optional[float] = None) -> List[Request]:
+        """Drive ``sessions`` to completion (or ``until``); returns the
+        finished-request log in completion order."""
+        self._attach_sessions(sessions)
+        self._seed_arrivals()
+        return self.run([], until=until)
+
+    def _finish(self, inst: _SimInstance, req: Request):
+        super()._finish(inst, req)
+        self._session_feedback(req)
+
+
+class ClosedLoopPDSim(_SessionFeedback, PDDisaggSim):
+    """PD-disaggregated backend under the same closed loop."""
+
+    def run_sessions(self, sessions: List[Session]) -> List[Request]:
+        self._attach_sessions(sessions)
+        self._seed_arrivals()
+        return self.run([])
+
+    def _finish(self, did: int, req: Request):
+        super()._finish(did, req)
+        self._session_feedback(req)

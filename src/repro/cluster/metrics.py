@@ -1,12 +1,19 @@
-"""Serving-quality metrics: TTFT / TPOT summaries, CDFs, imbalance."""
+"""Serving-quality metrics: TTFT / TPOT summaries, SLO attainment,
+goodput, per-family breakdowns, CDFs, imbalance."""
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.types import Request
+from repro.core.types import DEFAULT_SLO, Request, SLO
+
+#: default per-request SLOs (seconds) — ``core.types.DEFAULT_SLO``, the
+#: same predicate closed-loop sessions abandon on; override per call for
+#: stricter/looser studies
+SLO_TTFT = DEFAULT_SLO.ttft
+SLO_TPOT = DEFAULT_SLO.tpot
 
 
 def pct(xs: Sequence[float], q: float) -> float:
@@ -15,13 +22,34 @@ def pct(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q))
 
 
-def summarize(requests: List[Request]) -> Dict[str, float]:
+def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
+              slo_tpot: float = SLO_TPOT,
+              by_family: bool = True) -> Dict[str, float]:
+    """Latency + SLO summary of a finished-request log.
+
+    Besides the TTFT/TPOT percentiles, reports
+
+    * ``ttft_slo_attainment`` / ``tpot_slo_attainment`` — fraction of
+      completed requests meeting each SLO (single-token requests have no
+      TPOT and count as meeting it),
+    * ``slo_attainment`` — both at once,
+    * ``goodput_rps`` — within-SLO completions per second of makespan
+      (the paper-style "useful throughput" a closed-loop client sees),
+    * ``families`` — the same summary per workload-family tag, present
+      when any request carries one (mixed traces, hotspot bursts,
+      closed-loop scenarios).
+    """
     done = [r for r in requests if r.t_finish > 0.0]
     ttft = [r.ttft for r in done]
     tpot = [r.tpot for r in done if r.output_len > 1]
     hits = sum(r.hit_tokens for r in done)
     toks = sum(r.prompt_len for r in done)
-    return {
+    makespan = max((r.t_finish for r in done), default=0.0)
+    slo = SLO(ttft=slo_ttft, tpot=slo_tpot)
+    ttft_ok = [slo.ttft_met(r) for r in done]
+    tpot_ok = [slo.tpot_met(r) for r in done]
+    both_ok = sum(1 for a, b in zip(ttft_ok, tpot_ok) if a and b)
+    out = {
         "n": len(done),
         "ttft_mean": float(np.mean(ttft)) if ttft else math.nan,
         "ttft_p50": pct(ttft, 50), "ttft_p95": pct(ttft, 95),
@@ -30,8 +58,22 @@ def summarize(requests: List[Request]) -> Dict[str, float]:
         "tpot_p50": pct(tpot, 50), "tpot_p95": pct(tpot, 95),
         "tpot_p99": pct(tpot, 99),
         "kv_hit_ratio": hits / max(toks, 1),
-        "makespan": max((r.t_finish for r in done), default=0.0),
+        "makespan": makespan,
+        "ttft_slo_attainment": (sum(ttft_ok) / len(done)) if done
+        else math.nan,
+        "tpot_slo_attainment": (sum(tpot_ok) / len(done)) if done
+        else math.nan,
+        "slo_attainment": (both_ok / len(done)) if done else math.nan,
+        "goodput_rps": both_ok / max(makespan, 1e-9),
     }
+    if by_family and any(r.family for r in done):
+        fams: Dict[str, List[Request]] = {}
+        for r in done:
+            fams.setdefault(r.family or "untagged", []).append(r)
+        out["families"] = {
+            fam: summarize(rs, slo_ttft, slo_tpot, by_family=False)
+            for fam, rs in sorted(fams.items())}
+    return out
 
 
 def cdf(xs: Sequence[float], n_points: int = 50):
@@ -57,10 +99,14 @@ def imbalance_stats(profile: Dict[int, List[float]]) -> Dict[str, float]:
 
 
 def fmt_row(name: str, s: Dict[str, float]) -> str:
-    return (f"{name:28s} n={s['n']:6d} "
-            f"TTFT mean={s['ttft_mean'] * 1e3:9.1f}ms "
-            f"p50={s['ttft_p50'] * 1e3:8.1f} p95={s['ttft_p95'] * 1e3:9.1f} "
-            f"p99={s['ttft_p99'] * 1e3:9.1f} | "
-            f"TPOT mean={s['tpot_mean'] * 1e3:7.2f}ms "
-            f"p99={s['tpot_p99'] * 1e3:7.2f} | "
-            f"hit={s['kv_hit_ratio'] * 100:5.1f}%")
+    row = (f"{name:28s} n={s['n']:6d} "
+           f"TTFT mean={s['ttft_mean'] * 1e3:9.1f}ms "
+           f"p50={s['ttft_p50'] * 1e3:8.1f} p95={s['ttft_p95'] * 1e3:9.1f} "
+           f"p99={s['ttft_p99'] * 1e3:9.1f} | "
+           f"TPOT mean={s['tpot_mean'] * 1e3:7.2f}ms "
+           f"p99={s['tpot_p99'] * 1e3:7.2f} | "
+           f"hit={s['kv_hit_ratio'] * 100:5.1f}%")
+    if "slo_attainment" in s:
+        row += (f" | slo={s['slo_attainment'] * 100:5.1f}% "
+                f"good={s['goodput_rps']:6.2f}/s")
+    return row

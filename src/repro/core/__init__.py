@@ -1,18 +1,21 @@
-from .types import Request
+from .types import DEFAULT_SLO, Request, SLO
 from .radix import RadixKVIndex, tokens_to_blocks
 from .indicators import IndicatorFactory, InstanceState
 from .latency_model import EngineSpec, LatencyModel, spec_from_config
 from .policies import (DynamoPolicy, FilterKVPolicy, JSQPolicy,
                        LinearKVPolicy, LMetricPolicy, Policy,
-                       PolyServePolicy, PreblePolicy, SimulationPolicy,
+                       PolyServePolicy, PreblePolicy,
+                       SessionAffinityPolicy, SimulationPolicy,
                        make_policy)
 from .hotspot import HotspotDetector
 from .router import Router
 
 __all__ = [
-    "Request", "RadixKVIndex", "tokens_to_blocks", "IndicatorFactory",
+    "Request", "SLO", "DEFAULT_SLO", "RadixKVIndex", "tokens_to_blocks",
+    "IndicatorFactory",
     "InstanceState", "EngineSpec", "LatencyModel", "spec_from_config",
     "Policy", "JSQPolicy", "LinearKVPolicy", "DynamoPolicy",
     "FilterKVPolicy", "SimulationPolicy", "PreblePolicy", "PolyServePolicy",
-    "LMetricPolicy", "make_policy", "HotspotDetector", "Router",
+    "LMetricPolicy", "SessionAffinityPolicy", "make_policy",
+    "HotspotDetector", "Router",
 ]

@@ -12,6 +12,9 @@ their published pseudocode:
   PreblePolicy       hybrid filter + linear      (Fig. 30)
   PolyServePolicy    SLO/utilization packing     (Fig. 33)
   LMetricPolicy      THE PAPER: P-token × BS     (Fig. 17b)
+  SessionAffinityPolicy  SMetric-style session-centric baseline
+                         (arXiv 2607.08565): sticky session → instance
+                         pins with a load-spread escape valve
 
 Scoring is fully vectorized over the factory's indicator arrays
 (``r_bs`` / ``q_bs`` / ``queued_prefill_tokens`` / ``total_tokens`` and
@@ -142,6 +145,15 @@ class Policy:
                      factory: IndicatorFactory, now: float) -> np.ndarray:
         """(k, n) score matrix against the current frozen state."""
         raise NotImplementedError
+
+    def on_finish(self, iid: int, req: Request):
+        """Response-piggyback hook (``Router.on_finish`` fans in here):
+        stateful policies observe completions without new plumbing."""
+
+    def session_pin(self, session_id: int) -> Optional[int]:
+        """Which instance holds this session's KV$ lineage, if the
+        policy tracks pins (None otherwise / for unknown sessions)."""
+        return None
 
     @staticmethod
     def _hits_matrix(reqs, factory) -> np.ndarray:
@@ -397,6 +409,77 @@ class PolyServePolicy(Policy):
 
 
 # ---------------------------------------------------------------------------
+class SessionAffinityPolicy(Policy):
+    """Session-centric baseline (SMetric, arXiv 2607.08565): keep every
+    turn of a session on the instance that served it before.
+
+    Agent serving is session-, not request-centric: a session's KV$
+    lineage (system prompt + transcript + embedded tool output) lives on
+    whichever instance served the prior turns, so stickiness maximises
+    reuse without consulting the prefix index at all.  The escape valve
+    is load spread: the pin only holds while the pinned instance is
+    within ``spread`` batch slots of the least-loaded one.
+
+    Score form (vectorized over the factory arrays, same ``scores_batch``
+    contract as every other policy):
+
+        score_i = BS_i − (spread + ε) · 1[i == pin(session)]
+
+    so select_min keeps the pin until some instance undercuts it by more
+    than ``spread`` (the ε keeps the pin ahead of the round-robin
+    tie-break at the exact boundary), then re-pins to the winner.
+    Sessionless requests
+    (``session_id == -1``) fall back to ``class_id`` keys — conversation
+    groups in the open-loop traces get the same stickiness.
+
+    Batch planning takes the documented host fallback
+    (``batch_kind=None``): the pin map mutates per decision, which the
+    frozen-state device plan cannot model.  ``Router.route_batch``
+    therefore routes waves sequentially — same decisions, same state.
+    """
+    name = "session-affinity"
+    requires_kv = False
+    batch_kind = None
+
+    def __init__(self, spread: int = 4):
+        super().__init__()
+        self.spread = spread
+        self.pins: dict = {}
+        self.name = f"session-affinity(spread={spread})"
+
+    @staticmethod
+    def _key(req: Request):
+        return (("s", req.session_id) if req.session_id >= 0
+                else ("c", req.class_id))
+
+    _PIN_EPS = 1e-6
+
+    def route(self, req, factory, now):
+        scores = factory.bs_vector().astype(np.float64)
+        key = self._key(req)
+        pin = self.pins.get(key)
+        if pin is not None:
+            scores[pin] -= self.spread + self._PIN_EPS
+        iid = self._select_min(scores)
+        self.pins[key] = iid
+        return iid
+
+    def scores_batch(self, reqs, factory, now):
+        # frozen-state inspection matrix: per-row pin bonus, no re-pin
+        # side effects (route() is the decision path)
+        scores = np.tile(factory.bs_vector().astype(np.float64),
+                         (len(reqs), 1))
+        for j, r in enumerate(reqs):
+            pin = self.pins.get(self._key(r))
+            if pin is not None:
+                scores[j, pin] -= self.spread + self._PIN_EPS
+        return scores
+
+    def session_pin(self, session_id):
+        return self.pins.get(("s", session_id))
+
+
+# ---------------------------------------------------------------------------
 class LMetricPolicy(Policy):
     """THE PAPER (Fig. 17b):  route to argmin  P-token_i × (BS_i + 1).
 
@@ -517,4 +600,6 @@ def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
         if latency_model is not None:
             kw.setdefault("latency_model", latency_model)
         return LMetricPolicy(**kw)
+    if name in ("session-affinity", "smetric", "affinity"):
+        return SessionAffinityPolicy(**kw)
     raise KeyError(name)

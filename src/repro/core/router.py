@@ -131,6 +131,15 @@ class Router:
 
     def on_finish(self, iid: int, req: Request):
         self.factory[iid].on_finish(req)
+        self.policy.on_finish(iid, req)
+
+    # ------------------------------------------------------------------
+    def session_pin(self, session_id: int) -> Optional[int]:
+        """Session-affinity hint: the instance holding this session's
+        KV$ lineage, if the policy tracks pins (None otherwise).  Lets
+        drivers and demos surface where a session lives without reaching
+        into policy internals."""
+        return self.policy.session_pin(session_id)
 
     # ------------------------------------------------------------------
     def mean_decision_us(self) -> float:

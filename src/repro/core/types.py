@@ -13,6 +13,8 @@ class Request:
     prompt_len: int                # true prompt length in tokens
     output_len: int                # decode tokens to generate
     class_id: int = -1             # request class (shared-prefix group)
+    session_id: int = -1           # closed-loop session (-1: open-loop)
+    family: str = ""               # workload family tag (metrics breakdown)
 
     # ---- runtime bookkeeping (filled by sim/engine) ----
     sched_to: int = -1
@@ -34,3 +36,30 @@ class Request:
         if self.output_len <= 1:
             return 0.0
         return (self.t_finish - self.t_first_token) / (self.output_len - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """Per-request service-level objective (seconds).
+
+    The single source of truth for the SLO predicate: closed-loop
+    sessions abandon on it (``workloads.sessions``) and
+    ``cluster.metrics`` reports attainment/goodput against it — keep
+    them agreeing by construction.
+    """
+    ttft: float = 2.0
+    tpot: float = 0.020
+
+    def ttft_met(self, req: Request) -> bool:
+        return req.ttft <= self.ttft
+
+    def tpot_met(self, req: Request) -> bool:
+        # single-token requests have no TPOT and count as meeting it
+        return req.output_len <= 1 or req.tpot <= self.tpot
+
+    def met(self, req: Request) -> bool:
+        return req.t_finish > 0.0 and self.ttft_met(req) \
+            and self.tpot_met(req)
+
+
+DEFAULT_SLO = SLO()

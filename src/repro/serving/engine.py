@@ -279,28 +279,48 @@ class EngineCluster:
         self.block_size = block_size
 
     def run(self, arrivals: List[Tuple[float, np.ndarray, int]],
-            verbose: bool = False) -> List[Request]:
-        """arrivals: (time, prompt_tokens, max_new_tokens)."""
+            verbose: bool = False, feedback=None) -> List[Request]:
+        """arrivals: (time, prompt_tokens, max_new_tokens[, session_id]).
+
+        ``feedback(req, now)`` (optional) closes the loop: called on
+        every finish with the completed request and its virtual finish
+        time, it returns follow-up arrival tuples (same shape) that are
+        pushed into the live event heap — the real-engine analogue of
+        ``repro.cluster.closed_loop``.
+        """
         for e in self.engines:
             e.warmup()
         finished: List[Request] = []
         heap: List = []
         seqno = itertools.count()
-        for rid, (t, toks, out) in enumerate(arrivals):
+        rids = itertools.count()
+
+        def push(t, toks, out, sid=-1):
+            toks = np.asarray(toks)
             blocks = tuple(tokens_to_blocks(list(toks), self.block_size))
-            req = Request(rid=rid, arrival=t, blocks=blocks,
-                          prompt_len=len(toks), output_len=out)
+            req = Request(rid=next(rids), arrival=t, blocks=blocks,
+                          prompt_len=len(toks), output_len=out,
+                          session_id=sid)
             heapq.heappush(heap, (t, next(seqno), "arrival", (req, toks)))
+
+        for entry in arrivals:
+            push(*entry)
         engine_time = [0.0] * len(self.engines)
         while heap:
             t, _, kind, payload = heapq.heappop(heap)
             if kind == "arrival":
                 req, toks = payload
                 iid = self.router.route(req, t)
-                self.engines[iid].submit(req, np.asarray(toks))
-                if engine_time[iid] <= t:
-                    engine_time[iid] = t
-                    heapq.heappush(heap, (t, next(seqno), "step", iid))
+                eng = self.engines[iid]
+                was_idle = not eng.has_work()
+                eng.submit(req, np.asarray(toks))
+                if was_idle:
+                    # an idle engine has no pending step event; resume it
+                    # at max(arrival, its virtual clock) — feedback
+                    # arrivals can land behind an engine that ran ahead
+                    engine_time[iid] = max(engine_time[iid], t)
+                    heapq.heappush(heap, (engine_time[iid], next(seqno),
+                                          "step", iid))
             else:
                 iid = payload
                 eng = self.engines[iid]
@@ -322,6 +342,9 @@ class EngineCluster:
                     seq.req.t_finish = now
                     self.router.on_finish(iid, seq.req)
                     finished.append(seq.req)
+                    if feedback is not None:
+                        for entry in feedback(seq.req, now):
+                            push(*entry)
                     if verbose:
                         print(f"[{now:8.3f}] inst{iid} rid={seq.req.rid} "
                               f"hit={seq.req.hit_tokens} "

@@ -15,6 +15,23 @@ turn by turn (exactly how real prefix caches observe chat/agent traffic).
 
 ``make_trace(name, ...)`` is the public entry; ``TRACES`` lists the four
 paper families plus the §5.2 adversarial hotspot workload.
+
+OPEN-LOOP HAZARD
+----------------
+These generators pre-compute every timestamp at *generation* time: turn
+``t+1`` of a conversation arrives on schedule even if turn ``t`` is
+still stuck in a queue.  That is an open-loop workload — a well-known
+evaluation pitfall (see e.g. "closed-loop vs open-loop load generation"
+in the serving literature) that flatters bad schedulers, because
+queueing delay never throttles offered load and tail latency cannot
+compound through a session.  The real workloads the paper claims
+(chatbots, API callers, coding agents) are closed-loop: a client only
+issues the next turn after the previous one completes.  Use
+``make_trace(..., closed_loop=True)`` to get deterministic session state
+machines instead of pre-stamped requests, and drive them with
+``repro.cluster.closed_loop.ClosedLoopSim`` — scheduling quality then
+feeds back into the arrival process, which is where LMetric-vs-baseline
+gaps actually live.
 """
 from __future__ import annotations
 
@@ -84,7 +101,30 @@ TRACES = tuple(FAMILIES) + ("hotspot",)
 
 # ---------------------------------------------------------------------------
 def make_trace(name: str, qps: float, duration: float,
-               seed: int = 0) -> List[Request]:
+               seed: int = 0, closed_loop: bool = False):
+    """Open-loop request list, or (``closed_loop=True``) session seeds.
+
+    The closed-loop escape hatch returns ``workloads.sessions.Session``
+    state machines whose *start* rate matches this family's
+    conversation-start rate at the requested ``qps`` — per-session
+    content is deterministic in ``seed``, but later-turn arrival times
+    are decided by the driver's feedback loop, not stamped here.  Old
+    callers (``closed_loop=False``, the default) are unchanged.
+    """
+    if closed_loop:
+        from repro.workloads.sessions import SESSIONS, make_sessions
+        if name == "hotspot":
+            raise ValueError("hotspot is an open-loop adversarial trace; "
+                             "closed-loop families: " +
+                             "/".join(SESSIONS))
+        # convert offered request qps to a session-start rate using the
+        # SESSION spec's own turn count *and* fan-out (the api family
+        # issues fan_mean sub-calls per turn — dividing by the open-loop
+        # turns_mean alone would offer ~4x the requested load)
+        conv_rate = qps / SESSIONS[name].expected_requests()
+        return make_sessions(name, n_sessions=max(1, int(conv_rate
+                                                         * duration)),
+                             seed=seed, start_rate=conv_rate)
     if name == "hotspot":
         return make_hotspot_trace(qps, duration, seed)
     fam = FAMILIES[name]
@@ -134,7 +174,8 @@ def make_trace(name: str, qps: float, duration: float,
             requests.append(Request(
                 rid=next(rid), arrival=turn_t, blocks=prompt,
                 prompt_len=len(prompt) * BLOCK, output_len=out,
-                class_id=cid if fam.turns_mean > 2.5 else app))
+                class_id=cid if fam.turns_mean > 2.5 else app,
+                family=name))
             # answer becomes part of the cached context of the next turn
             history.extend(next(block_ids)
                            for _ in range(max(1, out // BLOCK)))
@@ -174,7 +215,8 @@ def make_hotspot_trace(qps: float, duration: float, seed: int = 0,
         hot.append(Request(rid=next(rid), arrival=t,
                            blocks=hot_prefix + suffix,
                            prompt_len=(len(hot_prefix) + 2) * BLOCK,
-                           output_len=out, class_id=999_999))
+                           output_len=out, class_id=999_999,
+                           family="hotspot"))
     reqs = sorted(base + hot, key=lambda r: r.arrival)
     for i, r in enumerate(reqs):
         r.rid = i
