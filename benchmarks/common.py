@@ -92,6 +92,16 @@ def run_sim(policy, trace_name: str, rate_frac: float = 0.5,
     return out
 
 
+def save_result(name: str, res):
+    """Write one bench artifact (the single definition of the on-disk
+    format — ``cached`` and any incremental-section backfill must both
+    come through here so results/bench/*.json stay uniform)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+
+
 def cached(name: str, fn, force: bool = False):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, name + ".json")
@@ -99,8 +109,7 @@ def cached(name: str, fn, force: bool = False):
         with open(path) as f:
             return json.load(f)
     res = fn()
-    with open(path, "w") as f:
-        json.dump(res, f, indent=1, default=str)
+    save_result(name, res)
     return res
 
 

@@ -335,12 +335,18 @@ def bench_closed_loop(force=False):
     actually behave): 2k sessions whose next turn only arrives after the
     previous one completes, per-session KV$ lineage, SLO abandonment.
 
-    Two grids share one cache:
+    Three sections share one cache:
       * ``grid`` — every policy (all 8 baselines + the SMetric-style
         session-affinity baseline) at 0.75× capacity: TTFT / TPOT /
         SLO-goodput / abandonment per policy under feedback.
       * ``sweep`` — offered session-start rate × a policy subset
-        (paper-style load sweep, Fig. 23 analogue under feedback).
+        (paper-style load sweep, Fig. 23 analogue under feedback;
+        ``bench_capacity_knee`` derives the goodput knee from it).
+      * ``mixed`` — chat + API-fan-out + coder families co-resident on
+        one cluster (40/30/30 session split, per-family offered load
+        scaled to each family's capacity share), with the per-family
+        metrics breakdown kept in every record.  Computed additively:
+        an existing cache without ``mixed`` gains just that section.
 
     REPRO_BENCH_SMALL=1 shrinks to a CI-friendly 200-session smoke.
     """
@@ -349,9 +355,10 @@ def bench_closed_loop(force=False):
     from repro.cluster.closed_loop import ClosedLoopSim
     from repro.cluster.metrics import summarize
     from repro.core import LatencyModel, Router
-    from repro.workloads.sessions import (SESSIONS, make_sessions,
-                                          session_stats)
-    from .common import (N_INSTANCES, capacity_qps, cluster_spec)
+    from repro.workloads.sessions import (SESSIONS, make_mixed_sessions,
+                                          make_sessions, session_stats)
+    from .common import (N_INSTANCES, capacity_qps, cluster_spec,
+                         save_result)
 
     small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
     n_sessions = 200 if small else 2000
@@ -378,18 +385,53 @@ def bench_closed_loop(force=False):
         s["policy"] = pol_name
         return s
 
+    mixed_pols = ["vllm", "lmetric", "session-affinity"]
+    mix_shares = {"chatbot": 0.4, "agent": 0.3, "coder": 0.3}
+
+    def run_mixed(pol_name, total=n_sessions):
+        mix, acc = {}, 0
+        for fam in sorted(mix_shares):
+            mix[fam] = int(total * mix_shares[fam])
+            acc += mix[fam]
+        mix["coder"] += total - acc           # exact total
+        rates = {
+            fam: base_frac * mix_shares[fam] * capacity_qps(fam)
+            / SESSIONS[fam].expected_requests()
+            for fam in mix}
+        sessions = make_mixed_sessions(mix, seed=11, start_rates=rates)
+        router = Router(build_policy(pol_name), N_INSTANCES,
+                        kv_capacity_tokens=KV_CAPACITY)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec))
+        done = sim.run_sessions(sessions)
+        s = summarize(done)                   # keeps 'families'
+        s.update(session_stats(sessions))
+        s["sched_us"] = router.mean_decision_us()
+        s["offered_frac"] = base_frac
+        s["policy"] = pol_name
+        return s
+
     def go():
         out = {"n_sessions": n_sessions, "offered_base": base_frac,
-               "grid": {}, "sweep": {}}
+               "grid": {}, "sweep": {}, "mixed": {}}
         for p in pols:
             out["grid"][p] = run_one(p, base_frac)
         for f in fracs:
             out["sweep"][str(f)] = {
                 p: (out["grid"][p] if f == base_frac else run_one(p, f))
                 for p in sweep_pols}
+        for p in mixed_pols:
+            out["mixed"][p] = run_mixed(p)
         return out
 
     r = cached("closed_loop", go, force)
+    if "mixed" not in r:
+        # additive section: an older cached grid/sweep gains mixed
+        # without rerunning the (expensive) single-family sections —
+        # computed at the ARTIFACT's session count (not the current
+        # env's), so one JSON never silently mixes scales
+        r["mixed"] = {p: run_mixed(p, int(r["n_sessions"]))
+                      for p in mixed_pols}
+        save_result("closed_loop", r)
     rows = []
     for p, s in r["grid"].items():
         rows.append(csv_row(
@@ -407,28 +449,176 @@ def bench_closed_loop(force=False):
                 f"closed_loop.load{f}.{p}", s["sched_us"],
                 f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
                 f"goodput={s['goodput_rps']:.2f}/s"))
+    for p, s in r.get("mixed", {}).items():
+        fams = s.get("families", {})
+        per_fam = " ".join(
+            f"{fam}:ttft={fs['ttft_mean'] * 1e3:.0f}ms,"
+            f"slo={fs['slo_attainment'] * 100:.0f}%"
+            for fam, fs in sorted(fams.items()))
+        rows.append(csv_row(
+            f"closed_loop.mixed.{p}", s["sched_us"],
+            f"goodput={s['goodput_rps']:.2f}/s "
+            f"abandon={s['abandon_rate'] * 100:.1f}% {per_fam}"))
     g = r["grid"]
     dt = 1 - g["lmetric"]["ttft_mean"] / g["vllm"]["ttft_mean"]
     dp = 1 - g["lmetric"]["tpot_mean"] / g["vllm"]["tpot_mean"]
     gg = g["lmetric"]["goodput_rps"] / max(g["vllm"]["goodput_rps"], 1e-9)
     aff = g["session-affinity"]
+    mixed_note = ""
+    if r.get("mixed"):
+        mg = r["mixed"]
+        best = max(mg, key=lambda p: mg[p]["goodput_rps"])
+        mixed_note = (f"; mixed chat+api+coder cluster: best goodput "
+                      f"{best} {mg[best]['goodput_rps']:.2f}/s vs vllm "
+                      f"{mg['vllm']['goodput_rps']:.2f}/s")
     return rows, (f"closed loop (coder, {r['n_sessions']} sessions): "
                   f"lmetric TTFT -{dt * 100:.0f}% TPOT -{dp * 100:.0f}% "
                   f"goodput {gg:.2f}x vs vllm under feedback; "
                   f"session-affinity hit="
                   f"{aff['kv_hit_ratio'] * 100:.0f}% vs lmetric "
                   f"{g['lmetric']['kv_hit_ratio'] * 100:.0f}% "
-                  f"(paper claims TTFT -92%/-52% on open-loop replay)")
+                  f"(paper claims TTFT -92%/-52% on open-loop replay)"
+                  + mixed_note)
+
+
+# ---------------------------------------------------------------------------
+def bench_capacity_knee(force=False):
+    """Abandonment-aware capacity planning: the goodput-vs-offered-load
+    knee per policy, derived from ``bench_closed_loop``'s sweep data
+    (``results/bench/closed_loop.json``).
+
+    Under feedback, offered load beyond a policy's knee stops buying
+    goodput — queueing pushes turns over SLO, sessions abandon, and
+    delivered within-SLO throughput saturates (or falls).  The knee is
+    the largest offered fraction whose marginal goodput per unit of
+    offered load is still >= 50% of the lowest-load efficiency; a
+    single-point sweep (CI small mode) degenerates to that point and is
+    flagged.  Writes ``results/figures/capacity_knee.png`` when
+    matplotlib is available.
+    """
+    import json
+    import os
+
+    from .common import RESULTS_DIR
+
+    path = os.path.join(RESULTS_DIR, "closed_loop.json")
+    if not os.path.exists(path):
+        bench_closed_loop(force=False)        # populate the dependency
+    with open(path) as fh:
+        cl = json.load(fh)
+    sweep = cl["sweep"]
+    fracs = sorted(float(f) for f in sweep)
+    pols = sorted(next(iter(sweep.values())))
+
+    def go():
+        out = {"offered_fracs": fracs, "n_sessions": cl["n_sessions"],
+               "degenerate": len(fracs) < 2, "policies": {}}
+        for p in pols:
+            good = [sweep[str(f)][p]["goodput_rps"] for f in fracs]
+            aband = [sweep[str(f)][p]["abandon_rate"] for f in fracs]
+            knee = fracs[0]
+            if len(fracs) >= 2:
+                eff0 = good[0] / max(fracs[0], 1e-9)
+                for i in range(1, len(fracs)):
+                    slope = (good[i] - good[i - 1]) \
+                        / max(fracs[i] - fracs[i - 1], 1e-9)
+                    if slope >= 0.5 * eff0:
+                        knee = fracs[i]
+                    else:
+                        break
+            out["policies"][p] = {
+                "goodput_rps": good, "abandon_rate": aband,
+                "knee_frac": knee, "sat_goodput_rps": max(good)}
+        fig = _plot_capacity_knee(out)
+        if fig:
+            out["figure"] = fig
+        return out
+
+    r = cached("capacity_knee", go, force)
+    rows = []
+    for p, rec in r["policies"].items():
+        rows.append(csv_row(
+            f"capacity_knee.{p}", 0.0,
+            f"knee={rec['knee_frac']:.2f}x "
+            f"sat_goodput={rec['sat_goodput_rps']:.2f}/s "
+            f"abandon@max={rec['abandon_rate'][-1] * 100:.0f}%"))
+    if r["degenerate"]:
+        # report strictly from the cached record so the note can never
+        # disagree with the rows when the sweep artifact has since
+        # been regenerated at a different size
+        note = (f"single-point sweep (small mode): knee undefined, "
+                f"goodput at {r['offered_fracs'][0]}x recorded for "
+                f"{len(r['policies'])} policies")
+    else:
+        knees = {p: rec["knee_frac"] for p, rec in r["policies"].items()}
+        best = max(knees, key=lambda p: (
+            knees[p], r["policies"][p]["sat_goodput_rps"]))
+        note = (f"capacity knees: " + " ".join(
+            f"{p}={knees[p]:.2f}x" for p in sorted(knees))
+            + f"; best knee+saturated-goodput: {best} "
+              f"({r['policies'][best]['sat_goodput_rps']:.2f}/s at "
+              f"{knees[best]:.2f}x offered)")
+    return rows, note
+
+
+def _plot_capacity_knee(data):
+    """Goodput-vs-offered-load knee figure (PNG artifact); returns the
+    written path or None when matplotlib is unavailable.  Single axis,
+    fixed categorical hue order (validated palette), direct knee
+    markers, recessive grid."""
+    import os
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return None
+    fracs = data["offered_fracs"]
+    if len(fracs) < 2:
+        return None
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "capacity_knee.png")
+    palette = ["#2a78d6", "#eb6834", "#1baf7a", "#eda100",
+               "#e87ba4", "#008300", "#4a3aa7", "#e34948"]
+    fig, ax = plt.subplots(figsize=(6.4, 4.0), dpi=120)
+    for i, (p, rec) in enumerate(sorted(data["policies"].items())):
+        c = palette[i % len(palette)]
+        ax.plot(fracs, rec["goodput_rps"], color=c, linewidth=2,
+                marker="o", markersize=4, label=p)
+        k = rec["knee_frac"]
+        gi = rec["goodput_rps"][fracs.index(k)]
+        ax.scatter([k], [gi], s=64, facecolors="none", edgecolors=c,
+                   linewidths=2, zorder=5)
+    ax.set_xlabel("offered load (fraction of open-loop capacity)")
+    ax.set_ylabel("goodput (within-SLO completions / s)")
+    ax.set_title("Closed-loop capacity knees by policy "
+                 "(ring = knee)", fontsize=11)
+    ax.grid(True, color="#e6e4dd", linewidth=0.8)
+    ax.set_axisbelow(True)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    ax.legend(frameon=False, fontsize=9)
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    return os.path.relpath(path, os.path.join(os.path.dirname(__file__),
+                                              ".."))
 
 
 # ---------------------------------------------------------------------------
 def bench_router_scale(force=False):
     """Vectorized scoring core vs the frozen scalar reference: mean
-    per-decision latency of the paper's LMETRIC policy at 16 / 256 / 1024
-    instances.  The scalar path walks per-instance Python state; the
-    vectorized path is a handful of array ops over the factory's
-    indicator arrays plus one aggregated-prefix-index walk for the hit
-    vector — this is what makes routing viable at 1000-instance scale."""
+    per-decision latency of the paper's LMETRIC policy at 16 / 256 /
+    1024 / 4096 instances.  The scalar path walks per-instance Python
+    state; the vectorized path is a handful of array ops over the
+    factory's indicator arrays plus one flat-bitset aggregated-index
+    walk for the hit vector — the 4096 point is what the old
+    bigint-mask index could not reach without quadratic mask copies
+    (see ``bench_prefix_index`` for the index-level old-vs-new).  Also
+    records the factory's measured per-walk host latency (``walk_us``),
+    the number ROADMAP §Router scaling tracks."""
     import time
 
     from repro.core import make_policy
@@ -436,8 +626,8 @@ def bench_router_scale(force=False):
     from repro.core.scalar_ref import make_scalar_policy
     from repro.workloads.traces import make_trace
 
-    sizes = (16, 256, 1024)
-    decisions = {16: 1200, 256: 600, 1024: 250}
+    sizes = (16, 256, 1024, 4096)
+    decisions = {16: 1200, 256: 600, 1024: 250, 4096: 100}
 
     def measure(policy, n_inst, reqs):
         factory = IndicatorFactory(n_inst, kv_capacity_tokens=KV_CAPACITY)
@@ -451,30 +641,138 @@ def bench_router_scale(force=False):
             inst.on_route(req, req.arrival, hit)
             inst.kv.insert(req.blocks)
         warm = ns[len(ns) // 5:]           # drop cold-cache warmup
-        return sum(warm) / len(warm) / 1e3
+        return sum(warm) / len(warm) / 1e3, factory.mean_walk_us()
 
     def go():
         trace = make_trace("agent", qps=30.0, duration=120.0, seed=2)
         out = {}
         for n in sizes:
             reqs = trace[:decisions[n]]
-            out[str(n)] = {
-                "vector_us": measure(make_policy("lmetric"), n, reqs),
-                "scalar_us": measure(make_scalar_policy("lmetric"), n, reqs),
-            }
+            v_us, walk_us = measure(make_policy("lmetric"), n, reqs)
+            s_us, _ = measure(make_scalar_policy("lmetric"), n, reqs)
+            out[str(n)] = {"vector_us": v_us, "scalar_us": s_us,
+                           "walk_us": walk_us}
         return out
     r = cached("router_scale", go, force)
+    if any(str(n) not in r for n in sizes):
+        # cached artifact predates the 4096 extension: remeasure
+        r = cached("router_scale", go, True)
     rows = []
     for n in sizes:
         v, s = r[str(n)]["vector_us"], r[str(n)]["scalar_us"]
+        walk = r[str(n)].get("walk_us")
+        extra = f" walk={walk:.1f}us" if walk is not None else ""
         rows.append(csv_row(f"router_scale.n{n}.vector", v,
-                            f"scalar={s:.1f}us speedup={s / v:.1f}x"))
+                            f"scalar={s:.1f}us speedup={s / v:.1f}x"
+                            f"{extra}"))
     sp256 = r["256"]["scalar_us"] / r["256"]["vector_us"]
     sp1k = r["1024"]["scalar_us"] / r["1024"]["vector_us"]
+    sp4k = r["4096"]["scalar_us"] / r["4096"]["vector_us"]
     return rows, (f"vectorized core: {sp256:.1f}x faster @256 instances, "
-                  f"{sp1k:.1f}x @1024 "
-                  f"({r['1024']['vector_us']:.0f}us/decision at 1k scale; "
+                  f"{sp1k:.1f}x @1024, {sp4k:.1f}x @4096 "
+                  f"({r['4096']['vector_us']:.0f}us/decision at 4k scale; "
                   f"target >=5x @256)")
+
+
+# ---------------------------------------------------------------------------
+def bench_prefix_index(force=False):
+    """Flat bitset aggregated prefix index vs the frozen bigint-mask
+    reference (``repro.core._prefix_ref``): add / evict / walk
+    micro-ops at 256 / 1024 / 4096 instances over an LCP-heavy
+    session-lineage scenario (6 lineages of 256 blocks, 16 holders
+    each spread across the whole instance range, 64-chain waves of
+    nested lineage prefixes — the coalesced coder/fan-out wave shape).
+    Walks run at batch 1 (``match_depths``) and 8/64
+    (``match_depths_many``, where the LCP-chained walk reuse pays one
+    deep walk per lineage instead of one per chain).  The 4096 point is
+    the scale the bigint masks choked on (every per-node mask op copies
+    O(n/64) words; ``remove_instance`` walks the whole tree doing it).
+    Outputs verify old==new hit matrices before timing."""
+    import time
+
+    from repro.core._prefix_ref import AggregatedPrefixIndexRef
+    from repro.core.indicators import AggregatedPrefixIndex
+
+    n_lin, depth, holders_per, wave_k = 6, 256, 16, 64
+    sizes = (256, 1024, 4096)
+    rng = np.random.RandomState(7)
+    lineages = [[int(x) for x in rng.randint(0, 1 << 60, depth)]
+                for _ in range(n_lin)]
+    wave = [tuple(lineages[j % n_lin][: 64 + (j * 29) % (depth - 64)])
+            for j in range(wave_k)]
+
+    def best_us(f, reps=20):
+        best = 1e18
+        for _ in range(3):
+            t0 = time.perf_counter_ns()
+            for _ in range(reps):
+                f()
+            best = min(best, (time.perf_counter_ns() - t0) / reps)
+        return best / 1e3
+
+    def measure(n):
+        holders = {l: [int(x) for x in rng.choice(n, holders_per,
+                                                  replace=False)]
+                   for l in range(n_lin)}
+
+        def build(idx):
+            for l, lin in enumerate(lineages):
+                for iid in holders[l]:
+                    idx.add(iid, lin)
+            return idx
+
+        new = build(AggregatedPrefixIndex(n))
+        old = build(AggregatedPrefixIndexRef(n))
+        agree = bool((new.match_depths_many(wave)
+                      == old.match_depths_many(wave)).all())
+        rec = {"agree": agree, "nodes": new.n_nodes}
+        for tag, idx in (("old", old), ("new", new)):
+            # warm re-adds: the insert-on-route hot path (chains are
+            # lineage prefixes of existing holders -> state unchanged)
+            rec[f"add_{tag}_us"] = best_us(lambda: [
+                idx.add(holders[j % n_lin][j % holders_per], wave[j])
+                for j in range(wave_k)]) / wave_k
+            iid0 = holders[0][0]
+            rec[f"evict_{tag}_us"] = best_us(lambda: (
+                idx.remove_leaf(iid0, lineages[0]),
+                idx.add(iid0, lineages[0]))) / 2
+            rec[f"walk1_{tag}_us"] = best_us(lambda: [
+                idx.match_depths(c) for c in wave[:8]]) / 8
+            rec[f"walk8_{tag}_us"] = best_us(
+                lambda: idx.match_depths_many(wave[:8]))
+            rec[f"walk64_{tag}_us"] = best_us(
+                lambda: idx.match_depths_many(wave))
+        for op in ("add", "evict", "walk1", "walk8", "walk64"):
+            rec[f"{op}_speedup"] = rec[f"{op}_old_us"] \
+                / max(rec[f"{op}_new_us"], 1e-9)
+        return rec
+
+    def go():
+        return {"scenario": {"n_lineages": n_lin, "depth": depth,
+                             "holders_per_lineage": holders_per,
+                             "wave": wave_k},
+                "sizes": {str(n): measure(n) for n in sizes}}
+
+    r = cached("prefix_index", go, force)
+    rows = []
+    for n in sizes:
+        rec = r["sizes"][str(n)]
+        for op in ("add", "evict", "walk1", "walk8", "walk64"):
+            us = rec[f"{op}_new_us"]
+            rows.append(csv_row(
+                f"prefix_index.n{n}.{op}", us,
+                f"{1e6 / max(us, 1e-3):.0f} ops/s "
+                f"old={rec[f'{op}_old_us']:.1f}us "
+                f"speedup={rec[f'{op}_speedup']:.1f}x"))
+    r1k, r4k = r["sizes"]["1024"], r["sizes"]["4096"]
+    return rows, (f"flat bitset index: match_depths_many "
+                  f"{r1k['walk64_speedup']:.1f}x @1024 instances on the "
+                  f"64-chain LCP wave (target >=3x), "
+                  f"{r4k['walk64_speedup']:.1f}x @4096 "
+                  f"({r4k['walk64_new_us']:.0f}us/wave, "
+                  f"agree={r4k['agree']}); single walks "
+                  f"{r1k['walk1_speedup']:.1f}x, warm adds "
+                  f"{r1k['add_speedup']:.1f}x @1024")
 
 
 # ---------------------------------------------------------------------------
@@ -714,7 +1012,9 @@ ALL_BENCHES = [
     bench_fig27_preble_branches,
     bench_fig28_load_gradient,
     bench_closed_loop,
+    bench_capacity_knee,
     bench_router_scale,
+    bench_prefix_index,
     bench_batch_routing,
     bench_detector_observe,
     bench_router_overhead,

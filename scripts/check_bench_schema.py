@@ -28,6 +28,18 @@ CLOSED_LOOP_RECORD = (
 )
 #: summary records emitted by run_sim-based benches
 SUMMARY_RECORD = ("n", "ttft_mean", "tpot_mean", "kv_hit_ratio")
+#: per-size record in prefix_index.json (flat-vs-bigint index micro-ops)
+PREFIX_INDEX_RECORD = (
+    "agree", "nodes",
+    "add_old_us", "add_new_us", "add_speedup",
+    "evict_old_us", "evict_new_us", "evict_speedup",
+    "walk1_old_us", "walk1_new_us", "walk1_speedup",
+    "walk8_old_us", "walk8_new_us", "walk8_speedup",
+    "walk64_old_us", "walk64_new_us", "walk64_speedup",
+)
+#: per-policy record in capacity_knee.json (goodput-vs-load knee)
+CAPACITY_KNEE_RECORD = ("goodput_rps", "abandon_rate", "knee_frac",
+                        "sat_goodput_rps")
 
 SCALARS = (str, int, float, bool, type(None))
 
@@ -71,7 +83,7 @@ def check_file(path):
         return [f"{name}: top level must be a dict"]
     _leaves_ok(data, name, errors)
     if name == "closed_loop.json":
-        for key in ("n_sessions", "grid", "sweep"):
+        for key in ("n_sessions", "grid", "sweep", "mixed"):
             if key not in data:
                 errors.append(f"{name}: missing top-level '{key}'")
         for p, rec in data.get("grid", {}).items():
@@ -81,6 +93,28 @@ def check_file(path):
             for p, rec in by_pol.items():
                 _check_record(rec, CLOSED_LOOP_RECORD,
                               f"{name}.sweep.{frac}.{p}", errors)
+        for p, rec in data.get("mixed", {}).items():
+            # mixed-family records carry the per-family breakdown the
+            # scenario exists to compare
+            _check_record(rec, CLOSED_LOOP_RECORD + ("families",),
+                          f"{name}.mixed.{p}", errors)
+    elif name == "prefix_index.json":
+        for key in ("scenario", "sizes"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for n, rec in data.get("sizes", {}).items():
+            _check_record(rec, PREFIX_INDEX_RECORD,
+                          f"{name}.sizes.{n}", errors)
+        if "4096" not in data.get("sizes", {}):
+            errors.append(f"{name}: missing the 4096-instance point "
+                          f"(the scale the flat index exists for)")
+    elif name == "capacity_knee.json":
+        for key in ("offered_fracs", "policies", "degenerate"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for p, rec in data.get("policies", {}).items():
+            _check_record(rec, CAPACITY_KNEE_RECORD,
+                          f"{name}.policies.{p}", errors)
     elif name == "fig22.json":
         for t, by_pol in data.items():
             for p, rec in by_pol.items():

@@ -1,0 +1,186 @@
+"""Frozen reference for the flat aggregated prefix index.
+
+This module preserves, verbatim, the pre-flat ``AggregatedPrefixIndex``
+— per-node Python dicts with arbitrary-precision *bigint* instance
+masks — that ``repro.core.indicators`` replaced with the array-backed
+bitset index.  It exists for two reasons:
+
+1. **Differential testing** — ``tests/test_prefix_index.py`` drives
+   random interleavings of ``add`` / ``remove_leaf`` /
+   ``remove_instance`` / ``match_depths_many`` through both
+   implementations (via the real ``RadixKVIndex`` callback protocol)
+   and asserts identical hit vectors.
+2. **Benchmarking** — ``benchmarks.figures.bench_prefix_index``
+   measures add/evict/walk throughput old-vs-new; the bigint masks are
+   what stopped scaling near ~4k instances (every mask op copies
+   O(n/64) words per *node*, and ``remove_instance`` walks the whole
+   tree doing it).
+
+Do not "improve" this file: its value is being the pre-flat behaviour,
+bit for bit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class AggregatedPrefixIndexRef:
+    """Cross-instance radix tree with per-node instance bitmasks.
+
+    ``match_depths(blocks)`` returns, for every instance at once, the
+    number of leading prompt blocks cached on that instance — O(prompt
+    depth) dict walks plus a handful of C-speed bit-scatter ops, instead
+    of O(n_instances) Python tree walks.
+    """
+
+    __slots__ = ("n", "_nbytes", "_full", "root")
+
+    class _Node:
+        __slots__ = ("children", "mask")
+
+        def __init__(self):
+            self.children: Dict[int, "AggregatedPrefixIndexRef._Node"] = {}
+            self.mask = 0
+
+    def __init__(self, n_instances: int):
+        self.n = n_instances
+        self._nbytes = (n_instances + 7) // 8
+        self._full = (1 << n_instances) - 1
+        self.root = self._Node()
+
+    # ------------------------------------------------------------------
+    def add(self, iid: int, blocks: Sequence[int]):
+        """Mark the whole chain as present on instance ``iid``."""
+        bit = 1 << iid
+        node = self.root
+        for b in blocks:
+            child = node.children.get(b)
+            if child is None:
+                child = self._Node()
+                node.children[b] = child
+            child.mask |= bit
+            node = child
+
+    def remove_leaf(self, iid: int, path: Sequence[int]):
+        """Instance ``iid`` evicted the leaf at ``path`` (root→leaf keys).
+
+        Only the final node loses the bit — ancestors are still cached
+        (radix eviction removes leaves only, so chains stay prefix-closed).
+        """
+        bit = 1 << iid
+        node = self.root
+        chain = []
+        for b in path:
+            nxt = node.children.get(b)
+            if nxt is None:
+                return
+            chain.append((node, b, nxt))
+            node = nxt
+        node.mask &= ~bit
+        # prune nodes that no instance holds and nothing hangs off
+        for parent, key, child in reversed(chain):
+            if child.mask == 0 and not child.children:
+                del parent.children[key]
+            else:
+                break
+
+    def remove_instance(self, iid: int):
+        """Instance ``iid`` cleared its whole cache."""
+        keep = ~(1 << iid)
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            dead = []
+            for key, child in node.children.items():
+                child.mask &= keep
+                if child.mask == 0 and not child.children:
+                    dead.append(key)
+                else:
+                    stack.append(child)
+            for key in dead:
+                del node.children[key]
+
+    # ------------------------------------------------------------------
+    def _scatter(self, mask: int, depth: int, out: np.ndarray):
+        if not mask or not depth:
+            return  # depth 0 is the zero-initialised default
+        raw = np.frombuffer(mask.to_bytes(self._nbytes, "little"), np.uint8)
+        bits = np.unpackbits(raw, bitorder="little", count=self.n)
+        out[bits.astype(bool)] = depth
+
+    def match_depths(self, blocks: Sequence[int],
+                     out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-instance cached-prefix depth (in blocks) for ``blocks``."""
+        if out is None:
+            out = np.zeros(self.n, dtype=np.int64)
+        else:
+            out[:] = 0
+        mask = self._full
+        node = self.root
+        d = 0
+        for b in blocks:
+            child = node.children.get(b)
+            if child is None:
+                break
+            nm = mask & child.mask
+            if nm != mask:
+                self._scatter(mask & ~nm, d, out)
+                mask = nm
+                if not mask:
+                    return out
+            node = child
+            d += 1
+        self._scatter(mask, d, out)
+        return out
+
+    def match_depths_many(self, chains: Sequence[Sequence[int]]
+                          ) -> np.ndarray:
+        """``match_depths`` for a whole wave of chains at once.
+
+        The walks collect (row, mask, depth) segments and one batched
+        unpackbits scatters them all — the per-walk numpy small-op
+        overhead (the dominant cost of per-request walks) is paid once
+        per wave.  Segments within a row are disjoint bitmasks, so the
+        additive scatter equals per-segment assignment.
+        """
+        rows: List[int] = []
+        masks: List[int] = []
+        depths: List[int] = []
+        for r, blocks in enumerate(chains):
+            mask = self._full
+            node = self.root
+            d = 0
+            for b in blocks:
+                child = node.children.get(b)
+                if child is None:
+                    break
+                nm = mask & child.mask
+                if nm != mask:
+                    if d:
+                        rows.append(r)
+                        masks.append(mask & ~nm)
+                        depths.append(d)
+                    mask = nm
+                    if not mask:
+                        break
+                node = child
+                d += 1
+            if mask and d:
+                rows.append(r)
+                masks.append(mask)
+                depths.append(d)
+        out = np.zeros((len(chains), self.n), dtype=np.int64)
+        if rows:
+            buf = np.empty((len(masks), self._nbytes), dtype=np.uint8)
+            nb = self._nbytes
+            for i, m in enumerate(masks):
+                buf[i] = np.frombuffer(m.to_bytes(nb, "little"), np.uint8)
+            bits = np.unpackbits(buf, axis=1, bitorder="little",
+                                 count=self.n).astype(bool)
+            # a handful of segments per chain: masked row assignment
+            # (disjoint masks) beats ufunc.at by ~10x
+            for i, r in enumerate(rows):
+                out[r][bits[i]] = depths[i]
+        return out

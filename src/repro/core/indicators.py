@@ -35,14 +35,20 @@ keep working unchanged.
 
 Vectorized KV$ hits
 -------------------
-``hits_for`` is backed by an aggregated prefix index: one radix tree
-shared across the factory whose nodes carry an instance *bitmask* (bit i
-set ⇔ instance i's own tree contains that block chain).  A single walk
-down the prompt yields every instance's hit depth; per-instance LRU
-clocks and capacity eviction stay in the per-instance trees, which keep
-the aggregate coherent through the ``RadixKVIndex`` on_insert/on_evict
-callbacks.  ``exact_only`` factories (recurrent-state semantics) fall
-back to the per-instance scalar walk, which the aggregate cannot model.
+``hits_for`` is backed by an aggregated prefix index shared across the
+factory: a *flat* structure-of-arrays radix tree whose per-node
+instance membership is one row of a ``(capacity, ceil(n/64))`` uint64
+bitset matrix (bit i set ⇔ instance i's own tree contains that block
+chain) — see ``AggregatedPrefixIndex`` for the layout and the
+walk-reuse invariant.  A single walk down the prompt yields every
+instance's hit depth; per-instance LRU clocks and capacity eviction
+stay in the per-instance trees, which keep the aggregate coherent
+through the ``RadixKVIndex`` on_insert/on_evict callbacks.
+``exact_only`` factories (recurrent-state semantics) fall back to the
+per-instance scalar walk, which the aggregate cannot model.  The
+factory accumulates host walk telemetry (``walk_ns`` / ``walks``) so
+benchmarks can report the per-walk cost the flat index optimises
+(``Router.mean_walk_us``).
 
 Device mirror & dirty-flag sync contract
 ----------------------------------------
@@ -96,96 +102,244 @@ cluster simulator and the in-process JAX engine call the same hooks.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .radix import RadixKVIndex
 from .types import Request
 
+_WORD_BITS = 64
+#: bitset word dtype pinned to little-endian so the ``view(np.uint8)``
+#: decode in the scatters is platform-independent (the frozen bigint
+#: reference uses explicit little-endian ``int.to_bytes``); on LE hosts
+#: this is bit-for-bit the native uint64
+_WORD = np.dtype("<u8")
+
 
 class AggregatedPrefixIndex:
-    """Cross-instance radix tree with per-node instance bitmasks.
+    """Flat, array-backed cross-instance prefix index.
 
-    ``match_depths(blocks)`` returns, for every instance at once, the
-    number of leading prompt blocks cached on that instance — O(prompt
-    depth) dict walks plus a handful of C-speed bit-scatter ops, instead
-    of O(n_instances) Python tree walks.
+    Nodes live in contiguous structure-of-arrays storage — a node is an
+    integer row id, child lookup is one hash probe in the node's
+    ``block_key -> child_row_id`` dict (``_kids[row]``, single-int
+    hashing on the walk's hot path), and freed rows are recycled
+    through a free list — so the index has no per-node Python objects
+    and no arbitrary-precision mask arithmetic.
+
+    Bitset layout
+    -------------
+    Per-node instance membership is one row of the ``(capacity,
+    ceil(n/64))`` uint64 matrix ``_masks``: bit ``i`` of row ``nid``
+    (little-endian within and across words) is set iff instance ``i``'s
+    own radix tree contains the block chain ending at node ``nid``.
+    Mask AND/ANDNOT and the ``match_depths`` scatter are vectorized
+    numpy word ops, ``remove_instance`` is a single column clear — this
+    removes the ~4k-instance ceiling of the old bigint masks (kept
+    verbatim in ``repro.core._prefix_ref`` as the differential
+    reference).
+
+    The walk-reuse invariant
+    ------------------------
+    Because every per-instance chain is prefix-closed, a child's mask is
+    always a **subset** of its parent's (``add`` marks whole chains;
+    ``remove_leaf`` only ever clears a node that is a leaf *for that
+    instance*, so no descendant still carries the bit).  Two
+    consequences the fast paths lean on:
+
+    * the live instance set at depth ``d`` of a walk is exactly the
+      mask of the node at depth ``d`` (no running intersection), and
+      mask *narrowing* is detected by comparing cached popcounts — one
+      scalar read per step instead of an O(n/64) word op;
+    * a walk's state at depth ``d`` — (node id, live set) — is a pure
+      function of the first ``d`` blocks, so ``match_depths_many`` can
+      sort a wave's chains lexicographically and resume each walk from
+      the shared-prefix frontier of its predecessor (frame stack +
+      narrowing-segment stack), paying one deep walk per *lineage*
+      instead of one per chain.
+
+    Callers must therefore only mutate through the ``RadixKVIndex``
+    callback protocol (or preserve prefix-closure themselves); the
+    invariant is what ``tests/test_prefix_index.py`` pins against the
+    bigint reference.
     """
 
-    __slots__ = ("n", "_nbytes", "_full", "root")
+    __slots__ = ("n", "words", "_full", "_masks", "_pop", "_parent",
+                 "_live", "_key", "_kids", "_free", "_top")
 
-    class _Node:
-        __slots__ = ("children", "mask")
-
-        def __init__(self):
-            self.children: Dict[int, "AggregatedPrefixIndex._Node"] = {}
-            self.mask = 0
-
-    def __init__(self, n_instances: int):
+    def __init__(self, n_instances: int, capacity: int = 256):
         self.n = n_instances
-        self._nbytes = (n_instances + 7) // 8
-        self._full = (1 << n_instances) - 1
-        self.root = self._Node()
+        self.words = (n_instances + _WORD_BITS - 1) // _WORD_BITS
+        full = np.zeros(self.words, dtype=_WORD)
+        nfull, rem = divmod(n_instances, _WORD_BITS)
+        full[:nfull] = np.uint64(0xFFFFFFFFFFFFFFFF)
+        if rem:
+            full[nfull] = np.uint64((1 << rem) - 1)
+        self._full = full
+        cap = max(int(capacity), 2)
+        # masks are the one vectorized structure; the scalar per-node
+        # metadata lives in plain Python lists — the walk reads one pop
+        # per step, and a list index is ~3x cheaper than a numpy scalar
+        # read on that hot path
+        self._masks = np.zeros((cap, self.words), dtype=_WORD)
+        self._pop: List[int] = [0] * cap
+        self._parent: List[int] = [-1] * cap
+        self._live: List[bool] = [False] * cap
+        self._key: List = [None] * cap
+        # per-node child dict (block key -> child row id), indexed by
+        # row id — hash-addressed lookup with single-int hashing on the
+        # walk's hot path; None marks a freed row
+        self._kids: List[Optional[Dict[int, int]]] = [None] * cap
+        self._free: List[int] = []
+        # row 0 is the root, pinned to the full instance set so the
+        # popcount narrowing check works from the very first block
+        self._top = 1
+        self._masks[0] = full
+        self._pop[0] = n_instances
+        self._live[0] = True
+        self._kids[0] = {}
 
-    # ------------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        """Live nodes, excluding the root."""
+        return sum(self._live) - 1
+
+    # ---- storage ------------------------------------------------------
+    def _grow(self):
+        cap = self._masks.shape[0]
+        masks = np.zeros((2 * cap, self.words), dtype=_WORD)
+        masks[:cap] = self._masks
+        self._masks = masks
+        self._pop.extend([0] * cap)
+        self._parent.extend([-1] * cap)
+        self._live.extend([False] * cap)
+        self._key.extend([None] * cap)
+        self._kids.extend([None] * cap)
+
+    def _alloc(self, parent: int, key) -> int:
+        if self._free:
+            nid = self._free.pop()
+        else:
+            nid = self._top
+            if nid == self._masks.shape[0]:
+                self._grow()
+            self._top += 1
+        self._masks[nid] = 0
+        self._pop[nid] = 0
+        self._parent[nid] = parent
+        self._live[nid] = True
+        self._key[nid] = key
+        self._kids[nid] = {}
+        return nid
+
+    def _free_node(self, nid: int) -> int:
+        """Recycle a dead node; returns its parent id."""
+        parent = self._parent[nid]
+        del self._kids[parent][self._key[nid]]
+        self._live[nid] = False
+        self._parent[nid] = -1
+        self._key[nid] = None
+        self._kids[nid] = None
+        self._free.append(nid)
+        return parent
+
+    # ---- mutation (RadixKVIndex callback protocol) --------------------
     def add(self, iid: int, blocks: Sequence[int]):
         """Mark the whole chain as present on instance ``iid``."""
-        bit = 1 << iid
-        node = self.root
+        if not blocks:
+            return
+        kids = self._kids
+        cur_kids = kids[0]
+        node = 0
+        path: List[int] = []
+        append = path.append
         for b in blocks:
-            child = node.children.get(b)
+            child = cur_kids.get(b)
             if child is None:
-                child = self._Node()
-                node.children[b] = child
-            child.mask |= bit
+                child = self._alloc(node, b)
+                cur_kids[b] = child
+            append(child)
             node = child
+            cur_kids = kids[child]
+        w = iid >> 6
+        mbit = 1 << (iid & 63)
+        mitem = self._masks.item       # bound after _alloc may have grown
+        # subset invariant: the nodes already holding the bit form a
+        # prefix of the path — binary-search the boundary instead of
+        # reading every node's mask
+        lo, hi = 0, len(path)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if mitem(path[mid], w) & mbit:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo < len(path):
+            fresh = path[lo:]
+            ids = np.fromiter(fresh, np.int64, len(fresh))
+            self._masks[ids, w] |= np.uint64(mbit)
+            pop = self._pop
+            for nid in fresh:
+                pop[nid] += 1
 
     def remove_leaf(self, iid: int, path: Sequence[int]):
         """Instance ``iid`` evicted the leaf at ``path`` (root→leaf keys).
 
         Only the final node loses the bit — ancestors are still cached
-        (radix eviction removes leaves only, so chains stay prefix-closed).
+        (radix eviction removes leaves only, so chains stay prefix-closed
+        and the subset invariant holds).
         """
-        bit = 1 << iid
-        node = self.root
-        chain = []
+        kids = self._kids
+        node = 0
         for b in path:
-            nxt = node.children.get(b)
-            if nxt is None:
+            node = kids[node].get(b)
+            if node is None:
                 return
-            chain.append((node, b, nxt))
-            node = nxt
-        node.mask &= ~bit
-        # prune nodes that no instance holds and nothing hangs off
-        for parent, key, child in reversed(chain):
-            if child.mask == 0 and not child.children:
-                del parent.children[key]
-            else:
-                break
+        w = iid >> 6
+        mbit = 1 << (iid & 63)
+        v = self._masks.item(node, w)
+        if v & mbit:
+            self._masks[node, w] = np.uint64(v & ~mbit)
+            self._pop[node] -= 1
+        # prune the freed tail: no instance holds it, nothing hangs off
+        pop = self._pop
+        while node and not pop[node] and not kids[node]:
+            node = self._free_node(node)
 
     def remove_instance(self, iid: int):
-        """Instance ``iid`` cleared its whole cache."""
-        keep = ~(1 << iid)
-        stack = [self.root]
+        """Instance ``iid`` cleared its whole cache: one vectorized
+        column clear over every live row, then a cascade prune of the
+        rows the clear killed."""
+        w = iid >> 6
+        bit = np.uint64(1 << (iid & 63))
+        top = self._top
+        col = self._masks[:top, w]
+        pop, kids, live = self._pop, self._kids, self._live
+        # row 0 (the pinned full root) is excluded; freed rows keep
+        # stale masks until recycled, so filter by liveness
+        hits = [nid for nid in np.flatnonzero((col & bit) != 0).tolist()
+                if nid and live[nid]]
+        if not hits:
+            return
+        col[np.fromiter(hits, np.int64, len(hits))] &= ~bit
+        stack = []
+        for nid in hits:
+            pop[nid] -= 1
+            if not pop[nid] and not kids[nid]:
+                stack.append(nid)
         while stack:
-            node = stack.pop()
-            dead = []
-            for key, child in node.children.items():
-                child.mask &= keep
-                if child.mask == 0 and not child.children:
-                    dead.append(key)
-                else:
-                    stack.append(child)
-            for key in dead:
-                del node.children[key]
+            nid = stack.pop()
+            if not live[nid] or pop[nid] or kids[nid]:
+                continue
+            parent = self._free_node(nid)
+            if parent and not pop[parent] and not kids[parent]:
+                stack.append(parent)
 
-    # ------------------------------------------------------------------
-    def _scatter(self, mask: int, depth: int, out: np.ndarray):
-        if not mask or not depth:
-            return  # depth 0 is the zero-initialised default
-        raw = np.frombuffer(mask.to_bytes(self._nbytes, "little"), np.uint8)
-        bits = np.unpackbits(raw, bitorder="little", count=self.n)
+    # ---- queries ------------------------------------------------------
+    def _scatter(self, words: np.ndarray, depth: int, out: np.ndarray):
+        bits = np.unpackbits(words.view(np.uint8), bitorder="little",
+                             count=self.n)
         out[bits.astype(bool)] = depth
 
     def match_depths(self, blocks: Sequence[int],
@@ -195,82 +349,129 @@ class AggregatedPrefixIndex:
             out = np.zeros(self.n, dtype=np.int64)
         else:
             out[:] = 0
-        mask = self._full
-        node = self.root
+        kids = self._kids
+        pop = self._pop
+        masks = self._masks
+        node = 0
+        cur_kids = kids[0]
+        cur = self.n                 # popcount of the live set (= node's)
         d = 0
+        segs: List[Tuple[np.ndarray, int]] = []
+        alive = True
         for b in blocks:
-            child = node.children.get(b)
+            child = cur_kids.get(b)
             if child is None:
                 break
-            nm = mask & child.mask
-            if nm != mask:
-                self._scatter(mask & ~nm, d, out)
-                mask = nm
-                if not mask:
-                    return out
+            pc = pop[child]
+            if pc != cur:            # subset invariant: strict narrowing
+                if d:
+                    segs.append((masks[node] & ~masks[child], d))
+                if not pc:
+                    alive = False
+                    break
+                cur = pc
             node = child
+            cur_kids = kids[child]
             d += 1
-        self._scatter(mask, d, out)
+        for words, dep in segs:
+            self._scatter(words, dep, out)
+        if alive and d:
+            self._scatter(masks[node], d, out)
         return out
 
-    def match_depths_many(self, chains: Sequence[Sequence[int]]
-                          ) -> np.ndarray:
-        """``match_depths`` for a whole wave of chains at once.
+    def match_depths_many(self, chains: Sequence[Sequence[int]],
+                          order: Optional[Sequence[int]] = None,
+                          adj: Optional[np.ndarray] = None) -> np.ndarray:
+        """``match_depths`` for a whole wave of chains at once, with
+        LCP-chained walk reuse.
 
-        The walks collect (row, mask, depth) segments and one batched
-        unpackbits scatters them all — the per-walk numpy small-op
-        overhead (the dominant cost of per-request walks) is paid once
-        per wave.  Segments within a row are disjoint bitmasks, so the
-        additive scatter equals per-segment assignment.
+        Chains are walked in lexicographic order; each walk resumes from
+        the shared-prefix frontier of its predecessor (frame stack of
+        node ids plus the stack of narrowing segments emitted along the
+        current path), so a wave of requests sharing long lineages pays
+        one deep walk instead of k.  Pass precomputed ``(order, adj)``
+        from :func:`_sorted_lcp` to share the sort with the pairwise-LCP
+        matrix; segment scatters batch into one ``unpackbits`` exactly
+        like the per-chain version.
         """
+        k = len(chains)
+        out = np.zeros((k, self.n), dtype=np.int64)
+        if k == 0:
+            return out
+        if order is None:
+            order, adj = _sorted_lcp(chains)
+        kids = self._kids
+        pop = self._pop
+        masks = self._masks
         rows: List[int] = []
-        masks: List[int] = []
-        depths: List[int] = []
-        for r, blocks in enumerate(chains):
-            mask = self._full
-            node = self.root
-            d = 0
-            for b in blocks:
-                child = node.children.get(b)
+        seg_words: List[np.ndarray] = []
+        seg_depths: List[int] = []
+        nodes = [0]      # frame stack: nodes[d] = node after d blocks
+        # (descend_depth, lost_words, matched_depth) along current path
+        loss: List[Tuple[int, np.ndarray, int]] = []
+        for t, r in enumerate(order):
+            blocks = chains[r]
+            p = int(adj[t]) if t else 0
+            if p > len(nodes) - 1:
+                p = len(nodes) - 1
+            del nodes[p + 1:]
+            while loss and loss[-1][0] > p:
+                loss.pop()
+            node = nodes[p]
+            cur_kids = kids[node]
+            cur = pop[node]
+            d = p
+            empty = False
+            for b in blocks[d:]:
+                child = cur_kids.get(b)
                 if child is None:
                     break
-                nm = mask & child.mask
-                if nm != mask:
+                pc = pop[child]
+                if pc != cur:
                     if d:
-                        rows.append(r)
-                        masks.append(mask & ~nm)
-                        depths.append(d)
-                    mask = nm
-                    if not mask:
+                        loss.append(
+                            (d + 1, masks[node] & ~masks[child], d))
+                    if not pc:
+                        empty = True
                         break
+                    cur = pc
                 node = child
+                cur_kids = kids[child]
+                nodes.append(child)
                 d += 1
-            if mask and d:
+            for _, words, md in loss:
                 rows.append(r)
-                masks.append(mask)
-                depths.append(d)
-        out = np.zeros((len(chains), self.n), dtype=np.int64)
+                seg_words.append(words)
+                seg_depths.append(md)
+            if not empty and d:
+                rows.append(r)
+                seg_words.append(masks[node])
+                seg_depths.append(d)
         if rows:
-            buf = np.empty((len(masks), self._nbytes), dtype=np.uint8)
-            nb = self._nbytes
-            for i, m in enumerate(masks):
-                buf[i] = np.frombuffer(m.to_bytes(nb, "little"), np.uint8)
-            bits = np.unpackbits(buf, axis=1, bitorder="little",
+            buf = np.empty((len(seg_words), self.words), dtype=_WORD)
+            for i, wds in enumerate(seg_words):
+                buf[i] = wds
+            bits = np.unpackbits(buf.view(np.uint8), axis=1,
+                                 bitorder="little",
                                  count=self.n).astype(bool)
             # a handful of segments per chain: masked row assignment
-            # (disjoint masks) beats ufunc.at by ~10x
+            # (disjoint masks) beats ufunc.at and broadcast-multiply
+            # reductions by ~10x
             for i, r in enumerate(rows):
-                out[r][bits[i]] = depths[i]
+                out[r][bits[i]] = seg_depths[i]
         return out
 
 
 def _lcp_block(chains: Sequence[Sequence[int]], out: np.ndarray,
                idxs: Sequence[int], max_elems: int = 4_000_000):
-    """Vectorized pairwise LCP of ``chains[idxs]`` scattered into
+    """Brute-force pairwise LCP of ``chains[idxs]`` scattered into
     ``out``: pad to (g, L), compare all pairs, count the leading run of
-    equal positions.  Row-tiled so the (rows, g, L) temporary stays
-    under ``max_elems`` int8 even for a single huge shared-first-block
-    group."""
+    equal positions, row-tiled to bound the (rows, g, L) temporary.
+
+    O(g²·L) — superseded by the sorted running-minimum reconstruction in
+    :func:`_pairwise_lcp`, and kept as its differential reference
+    (``tests/test_batch_routing.py::test_lcp_tiling_matches_untiled``).
+    """
     g = len(idxs)
     lens = np.fromiter((len(chains[i]) for i in idxs), np.int64, g)
     L = int(lens.max())
@@ -288,35 +489,76 @@ def _lcp_block(chains: Sequence[Sequence[int]], out: np.ndarray,
             eq, axis=2, dtype=np.int8).sum(axis=2, dtype=np.int64)
 
 
-def _pairwise_lcp(chains: Sequence[Sequence[int]]) -> np.ndarray:
-    """Pairwise longest-common-prefix (in blocks) of block-id chains.
+def _lcp_pair(a: Sequence[int], b: Sequence[int]) -> int:
+    """LCP of two chains by galloping + binary search over C-level
+    tuple-slice equality — O(lcp·log) pointer compares, no per-element
+    Python arithmetic (chains carry ~2^60 block ids, so element-wise
+    Python loops and numpy int conversion both cost more than slice
+    compares)."""
+    m = min(len(a), len(b))
+    if m == 0 or a[0] != b[0]:
+        return 0
+    lo, k = 1, 2                        # a[:lo] == b[:lo] holds
+    while k < m and a[:k] == b[:k]:
+        lo, k = k, 2 * k
+    if k >= m:
+        if a[:m] == b[:m]:
+            return m
+        hi = m
+    else:
+        hi = k
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if a[:mid] == b[:mid]:
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
-    Small waves compare everything at once (one vectorized pass beats
-    per-group Python overhead); big ones group by first block first
-    (cross-group LCP is 0 by definition), bounding the (g, g, L)
-    temporary.
+
+def _sorted_lcp(chains: Sequence[Sequence[int]]
+                ) -> Tuple[List[int], np.ndarray]:
+    """Lexicographic sort order + adjacent-LCP array for a wave.
+
+    ``order[t]`` indexes chains in sorted order; ``adj[t]`` is the LCP
+    (in blocks) of sorted chains ``t-1`` and ``t`` (``adj[0] = 0``).
+    Sorting makes each chain's LCP with its predecessor maximal over all
+    earlier chains — the property both the walk reuse and the pairwise
+    running-minimum reconstruction rely on.
     """
     u = len(chains)
-    out = np.zeros((u, u), dtype=np.int64)
+    order = sorted(range(u), key=chains.__getitem__)
+    adj = np.zeros(u, dtype=np.int64)
+    for t in range(1, u):
+        adj[t] = _lcp_pair(chains[order[t - 1]], chains[order[t]])
+    return order, adj
+
+
+def _pairwise_lcp(chains: Sequence[Sequence[int]],
+                  order: Optional[Sequence[int]] = None,
+                  adj: Optional[np.ndarray] = None) -> np.ndarray:
+    """Pairwise longest-common-prefix (in blocks) of block-id chains.
+
+    Reconstructed from the sorted adjacent-LCP array: for sorted chains,
+    ``LCP(t, t') = min(adj[t+1..t'])``, so the matrix is u running-
+    minimum sweeps (O(u²) total) instead of the old padded all-pairs
+    compare (O(u²·L)).  Pass the ``(order, adj)`` pair from
+    :func:`_sorted_lcp` to share the sort with ``match_depths_many``.
+    """
+    u = len(chains)
     if u == 0:
-        return out
-    nonempty = [i for i, c in enumerate(chains) if len(c)]
-    if not nonempty:
-        return out
-    max_l = max(len(chains[i]) for i in nonempty)
-    if u * u * max_l <= 2_000_000:
-        _lcp_block(chains, out, nonempty)
-        return out
-    groups: Dict[int, List[int]] = {}
-    for i in nonempty:
-        groups.setdefault(chains[i][0], []).append(i)
-    for idxs in groups.values():
-        if len(idxs) == 1:
-            i = idxs[0]
-            out[i, i] = len(chains[i])
-        else:
-            _lcp_block(chains, out, idxs)
-    return out
+        return np.zeros((0, 0), dtype=np.int64)
+    if order is None:
+        order, adj = _sorted_lcp(chains)
+    M = np.zeros((u, u), dtype=np.int64)
+    for t in range(u - 1):
+        M[t, t + 1:] = np.minimum.accumulate(adj[t + 1:])
+    M += M.T
+    lens = np.fromiter((len(chains[i]) for i in order), np.int64, u)
+    np.fill_diagonal(M, lens)
+    rank = np.empty(u, dtype=np.int64)
+    rank[np.fromiter(order, np.int64, u)] = np.arange(u)
+    return M[np.ix_(rank, rank)]
 
 
 class InstanceState:
@@ -452,6 +694,10 @@ class IndicatorFactory:
         self._dev = None
         # mid-wave plan invalidation signal for Router.route_batch
         self.evictions = 0
+        # host-walk telemetry: aggregated-index walk time / walk count
+        # (per unique prompt), surfaced by Router.mean_walk_us
+        self.walk_ns = 0
+        self.walks = 0
         # Preble routed-window ring buffers (time, p_tokens), per instance
         cap = self._LOG_CAP0
         self._log_t = np.zeros((n_instances, cap), dtype=np.float64)
@@ -498,7 +744,10 @@ class IndicatorFactory:
     def hits_for(self, req: Request) -> np.ndarray:
         """Per-instance KV$ hit tokens (capped at the prompt length)."""
         if self._agg is not None:
+            t0 = time.perf_counter_ns()
             depths = self._agg.match_depths(req.blocks, out=self._hit_depths)
+            self.walk_ns += time.perf_counter_ns() - t0
+            self.walks += 1
             hits = depths * self.block_size
             np.minimum(hits, req.prompt_len, out=hits)
             return hits
@@ -511,6 +760,13 @@ class IndicatorFactory:
         if hits is None:
             hits = self.hits_for(req)
         return self.queued_prefill_tokens + (req.prompt_len - hits)
+
+    def mean_walk_us(self) -> float:
+        """Mean host cost of one aggregated-index walk (per unique
+        prompt), from the ``walk_ns``/``walks`` telemetry — the single
+        definition both ``Router.mean_walk_us`` and the benchmarks
+        report."""
+        return self.walk_ns / max(self.walks, 1) / 1e3
 
     # ---- device mirror (dirty-flag sync contract, see docstring) ---------
     def mark_dirty(self):
@@ -535,10 +791,12 @@ class IndicatorFactory:
     def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
         """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.
 
-        One aggregated-index walk per *unique* prompt (waves are bursty —
-        duplicates and shared classes are the common case), plus the
-        pairwise block-chain LCP matrix the device loop needs to credit
-        intra-wave inserts.  Requires the aggregated index."""
+        One LCP-chained aggregated-index walk per *unique* prompt (waves
+        are bursty — duplicates and shared classes are the common case),
+        plus the pairwise block-chain LCP matrix the device loop needs
+        to credit intra-wave inserts.  The lexicographic sort feeding
+        the walk reuse is computed once and shared with the pairwise-LCP
+        reconstruction.  Requires the aggregated index."""
         k = len(reqs)
         uid = np.empty(k, dtype=np.int64)
         uniq: Dict[tuple, int] = {}
@@ -548,9 +806,13 @@ class IndicatorFactory:
         chains = [None] * len(uniq)
         for blocks, u in uniq.items():
             chains[u] = blocks
-        depth_u = self._agg.match_depths_many(chains)
-        lcp = (_pairwise_lcp(chains)[np.ix_(uid, uid)] if with_lcp
-               else None)
+        t0 = time.perf_counter_ns()
+        order, adj = _sorted_lcp(chains)
+        depth_u = self._agg.match_depths_many(chains, order=order, adj=adj)
+        self.walk_ns += time.perf_counter_ns() - t0
+        self.walks += len(chains)
+        lcp = (_pairwise_lcp(chains, order=order, adj=adj)
+               [np.ix_(uid, uid)] if with_lcp else None)
         plen = np.fromiter((r.prompt_len for r in reqs), np.int64, k)
         return depth_u[uid], lcp, plen
 

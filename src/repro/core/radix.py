@@ -157,6 +157,25 @@ class RadixKVIndex:
         self.capacity_tokens = save
 
     # ------------------------------------------------------------------
+    def chains(self):
+        """Yield every root→leaf key path (the tree's maximal chains).
+
+        Each yielded list is a prefix-closed block chain this instance
+        holds; rebuilding an aggregated prefix index from every
+        instance's ``chains()`` reproduces the callback-maintained
+        aggregate exactly (the coherence check in
+        ``tests/test_prefix_index.py``).
+        """
+        stack = [(self.root, [])]
+        while stack:
+            node, path = stack.pop()
+            if not node.children:
+                if path:
+                    yield path
+                continue
+            for key, child in node.children.items():
+                stack.append((child, path + [key]))
+
     @property
     def tokens_stored(self) -> int:
         return self._n_blocks * self.block_size

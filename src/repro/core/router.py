@@ -146,3 +146,11 @@ class Router:
         if not self.decision_ns:
             return 0.0
         return sum(self.decision_ns) / len(self.decision_ns) / 1e3
+
+    def mean_walk_us(self) -> float:
+        """Mean host cost of one aggregated-index walk (per unique
+        prompt) — the host half of every KV$-aware decision, accumulated
+        by the factory across both the single-request and the wave-input
+        paths.  This is the number the flat bitset index + LCP walk
+        reuse optimise; ``bench_prefix_index`` tracks it old-vs-new."""
+        return self.factory.mean_walk_us()

@@ -31,6 +31,15 @@ reference).  Two ingredients make that possible:
   mid-wave* (the router guards that with the factory's eviction counter
   and falls back to sequential host routing).
 
+The host half behind those inputs (``IndicatorFactory.wave_inputs``) is
+the flat bitset aggregated index: one LCP-chained walk per unique
+prompt (sorted chains resume from their predecessor's shared-prefix
+frontier) and the pairwise LCP matrix reconstructed from the same sort
+by running minima.  Both are integer-exact, so the wave loop's inputs —
+and therefore its decisions — are bit-identical to what per-request
+walks would produce; the device-mirror / dirty-flag contract in
+``repro.core.indicators`` is untouched by how the host computes them.
+
 Policy kinds
 ------------
 ``jsq``      4*Q-BS + R-BS                                 (vLLM Fig. 6a)

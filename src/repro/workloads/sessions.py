@@ -58,8 +58,8 @@ import numpy as np
 from repro.core.types import DEFAULT_SLO, SLO, Request
 
 __all__ = ["BLOCK", "SLO", "DEFAULT_SLO", "SessionSpec", "SESSIONS",
-           "Session", "make_sessions", "session_stats",
-           "blocks_to_tokens"]
+           "Session", "make_sessions", "make_mixed_sessions",
+           "session_stats", "blocks_to_tokens"]
 
 BLOCK = 64                 # tokens per content block (matches traces.py)
 _SESSION_SPACE = 1 << 20   # private block-id range per session
@@ -247,13 +247,17 @@ class Session:
 # ---------------------------------------------------------------------------
 def make_sessions(name: str, n_sessions: int, seed: int = 0,
                   start_rate: Optional[float] = None,
-                  slo: Optional[SLO] = None) -> List[Session]:
+                  slo: Optional[SLO] = None,
+                  sid0: int = 0) -> List[Session]:
     """Build ``n_sessions`` deterministic ``name``-family sessions.
 
     Session starts form a Poisson process of rate ``start_rate``
     (sessions/s; default: one per mean think time so the cluster warms
     gradually); app choice is zipf-popular as in the open-loop traces.
     Deterministic in ``seed`` — content, app choice, and start times.
+    ``sid0`` offsets session ids (and therefore each session's private
+    block-id range), letting several families co-reside in one
+    closed-loop run without sid or block collisions.
     """
     spec = SESSIONS[name]
     if slo is not None:
@@ -267,7 +271,33 @@ def make_sessions(name: str, n_sessions: int, seed: int = 0,
     for sid in range(n_sessions):
         t += float(rng.exponential(1.0 / max(rate, 1e-9)))
         app = int(rng.choice(spec.n_apps, p=app_p))
-        out.append(Session(sid, spec, t, seed, app))
+        out.append(Session(sid0 + sid, spec, t, seed, app))
+    return out
+
+
+def make_mixed_sessions(mix: Dict[str, int], seed: int = 0,
+                        start_rates: Optional[Dict[str, float]] = None,
+                        slo: Optional[SLO] = None) -> List[Session]:
+    """Several session families co-resident on one cluster.
+
+    ``mix`` maps family name → session count; each family keeps its own
+    deterministic content stream (same seed semantics as
+    ``make_sessions``) and its own Poisson start process
+    (``start_rates[name]``, default: that family's think-time default).
+    Families get disjoint sid ranges (``sid0`` offsets in ``mix``'s
+    sorted-name order), so private block-id ranges never collide and
+    the closed-loop drivers' sid registry stays unambiguous.  Returned
+    sessions are ordered by start time, which fixes the rid assignment
+    order of the seeded first turns.
+    """
+    out: List[Session] = []
+    sid0 = 0
+    for name in sorted(mix):
+        rate = (start_rates or {}).get(name)
+        out.extend(make_sessions(name, mix[name], seed=seed,
+                                 start_rate=rate, slo=slo, sid0=sid0))
+        sid0 += mix[name]
+    out.sort(key=lambda s: (s.start_t, s.sid))
     return out
 
 

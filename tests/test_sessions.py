@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 
 from repro.workloads.sessions import (SESSIONS, SLO, Session,
-                                      blocks_to_tokens, make_sessions,
+                                      blocks_to_tokens,
+                                      make_mixed_sessions, make_sessions,
                                       session_stats)
 from repro.workloads.traces import make_trace
 
@@ -133,6 +134,51 @@ def test_make_trace_closed_loop_escape_hatch():
     assert all(hasattr(r, "rid") and r.rid >= 0 for r in reqs)
     with pytest.raises(ValueError):
         make_trace("hotspot", qps=8.0, duration=60.0, closed_loop=True)
+
+
+def test_mixed_sessions_disjoint_and_deterministic():
+    mix = {"chatbot": 5, "agent": 4, "coder": 3}
+    a = make_mixed_sessions(mix, seed=2)
+    b = make_mixed_sessions(mix, seed=2)
+    assert len(a) == 12
+    # globally unique sids -> unambiguous driver registry, and the
+    # per-sid private block ranges cannot collide across families
+    assert len({s.sid for s in a}) == 12
+    fams = {s.spec.family for s in a}
+    assert fams == {"chatbot", "agent", "coder"}
+    assert [(s.sid, s.spec.family, s.start_t, s.turns_total) for s in a] \
+        == [(s.sid, s.spec.family, s.start_t, s.turns_total) for s in b]
+    # sid offset does not perturb an unmixed family's start-time stream
+    solo = make_sessions("agent", 4, seed=2)
+    mixed_agents = sorted((s for s in a if s.spec.family == "agent"),
+                          key=lambda s: s.sid)
+    assert [s.start_t for s in mixed_agents] == [s.start_t for s in solo]
+    # start-time ordering fixes the seeded-arrival rid order
+    assert all(a[i].start_t <= a[i + 1].start_t for i in range(len(a) - 1))
+
+
+def test_mixed_sessions_run_closed_loop():
+    from repro.cluster.closed_loop import ClosedLoopSim
+    from repro.core import (LatencyModel, LMetricPolicy, Router,
+                            spec_from_config)
+    from repro.configs import get_config
+
+    spec = spec_from_config(get_config("qwen2_7b"))
+    mix = {"chatbot": 3, "agent": 3, "coder": 2}
+    rates = {k: 0.5 for k in mix}
+
+    def run():
+        sessions = make_mixed_sessions(mix, seed=4, start_rates=rates)
+        router = Router(LMetricPolicy(), 4)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec))
+        return sim.run_sessions(sessions)
+
+    done = run()
+    assert done and {r.family for r in done} == {"chatbot", "agent",
+                                                 "coder"}
+    again = run()
+    assert [(r.rid, r.session_id, r.sched_to, r.t_finish) for r in done] \
+        == [(r.rid, r.session_id, r.sched_to, r.t_finish) for r in again]
 
 
 def test_blocks_to_tokens_shared_prefix():
