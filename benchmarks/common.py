@@ -115,3 +115,46 @@ def cached(name: str, fn, force: bool = False):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+def median_of_k(fn, repeats: int = 5, warmup: int = 2):
+    """Stabilized micro-timing: ``warmup`` unrecorded calls (cold
+    caches, lazy imports, jit compiles), then ``repeats`` timed calls;
+    returns ``(median_us, spread)`` where ``spread`` is
+    ``(max - min) / median`` over the recorded runs.
+
+    ROADMAP flags this box's timers as noisy run-to-run — every timing
+    bench records the ``repeats``/``spread`` pair it measured under
+    (see ``timing_meta``) so ``scripts/check_bench_schema.py`` can flag
+    unstable artifacts instead of readers chasing phantom regressions.
+    """
+    for _ in range(max(warmup, 0)):
+        fn()
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append(time.perf_counter_ns() - t0)
+    med, spread = median_spread(ts)
+    return med / 1e3, spread
+
+
+def median_spread(vals):
+    """``(median, spread)`` of a list of timing values: median averages
+    the two middle elements on even counts (no worst-of-two bias), and
+    spread is ``(max - min) / median`` — the same definition
+    ``median_of_k`` records.  The single implementation every bench's
+    repeat loop reduces with."""
+    vals = sorted(vals)
+    k = len(vals)
+    med = (vals[k // 2] if k % 2 else
+           (vals[k // 2 - 1] + vals[k // 2]) / 2)
+    return med, (vals[-1] - vals[0]) / max(med, 1e-9)
+
+
+def timing_meta(repeats: int, spreads) -> Dict:
+    """The ``timing`` block every micro-timing bench JSON carries:
+    the repeat count and the worst observed spread across its
+    measurements (schema-checked; spread > 0.5 is flagged unstable)."""
+    worst = max((float(s) for s in spreads), default=0.0)
+    return {"repeats": int(repeats), "spread": round(worst, 4)}

@@ -618,19 +618,31 @@ def bench_router_scale(force=False):
     bigint-mask index could not reach without quadratic mask copies
     (see ``bench_prefix_index`` for the index-level old-vs-new).  Also
     records the factory's measured per-walk host latency (``walk_us``),
-    the number ROADMAP §Router scaling tracks."""
+    the number ROADMAP §Router scaling tracks.
+
+    The ``sharded`` section pushes past the single-object index: 8192
+    and 16384 instances × 1/2/4/8 shards (``ShardedPrefixIndex`` —
+    per-shard hit vectors concatenate, decisions bit-identical), with
+    per-shard walk telemetry (``shard_walk_us``) and the max-shard
+    critical path a parallel walk fan-out would pay.  Every timing is
+    a median over rebuilt-factory repeats; the worst observed spread
+    lands in the schema-checked ``timing`` block."""
     import time
 
     from repro.core import make_policy
     from repro.core.indicators import IndicatorFactory
     from repro.core.scalar_ref import make_scalar_policy
     from repro.workloads.traces import make_trace
+    from .common import median_spread, timing_meta
 
     sizes = (16, 256, 1024, 4096)
     decisions = {16: 1200, 256: 600, 1024: 250, 4096: 100}
+    shard_sizes = (8192, 16384)
+    shard_counts = (1, 2, 4, 8)
+    shard_decisions = {8192: 60, 16384: 40}
+    repeats = 3
 
-    def measure(policy, n_inst, reqs):
-        factory = IndicatorFactory(n_inst, kv_capacity_tokens=KV_CAPACITY)
+    def route_all(policy, factory, reqs):
         ns = []
         for req in reqs:
             t0 = time.perf_counter_ns()
@@ -641,21 +653,54 @@ def bench_router_scale(force=False):
             inst.on_route(req, req.arrival, hit)
             inst.kv.insert(req.blocks)
         warm = ns[len(ns) // 5:]           # drop cold-cache warmup
-        return sum(warm) / len(warm) / 1e3, factory.mean_walk_us()
+        return sum(warm) / len(warm) / 1e3
+
+    def measure(mk, n_inst, reqs, n_shards=1):
+        """Median over ``repeats`` fresh-factory runs (each repeat
+        replays the same decisions on a rebuilt factory) + observed
+        spread; the last factory is returned for its walk telemetry."""
+        vals, factory = [], None
+        for _ in range(repeats):
+            factory = IndicatorFactory(
+                n_inst, kv_capacity_tokens=KV_CAPACITY, n_shards=n_shards)
+            vals.append(route_all(mk(), factory, reqs))
+        med, spread = median_spread(vals)
+        return med, spread, factory
 
     def go():
         trace = make_trace("agent", qps=30.0, duration=120.0, seed=2)
-        out = {}
+        out, spreads = {}, []
         for n in sizes:
             reqs = trace[:decisions[n]]
-            v_us, walk_us = measure(make_policy("lmetric"), n, reqs)
-            s_us, _ = measure(make_scalar_policy("lmetric"), n, reqs)
+            v_us, sv, f = measure(lambda: make_policy("lmetric"), n, reqs)
+            s_us, ss, _ = measure(
+                lambda: make_scalar_policy("lmetric"), n, reqs)
+            spreads += [sv, ss]
             out[str(n)] = {"vector_us": v_us, "scalar_us": s_us,
-                           "walk_us": walk_us}
+                           "walk_us": f.mean_walk_us(),
+                           "spread": round(max(sv, ss), 4)}
+        sharded = {}
+        for n in shard_sizes:
+            reqs = trace[:shard_decisions[n]]
+            sharded[str(n)] = {}
+            for S in shard_counts:
+                v_us, sv, f = measure(lambda: make_policy("lmetric"), n,
+                                      reqs, n_shards=S)
+                spreads.append(sv)
+                st = f.shard_walk_stats()
+                sharded[str(n)][str(S)] = {
+                    "vector_us": v_us, "spread": round(sv, 4),
+                    "walk_us": f.mean_walk_us(),
+                    "shard_walk_us": [round(s["mean_walk_us"], 3)
+                                      for s in st],
+                    "max_shard_us": max(s["mean_walk_us"] for s in st)}
+        out["sharded"] = sharded
+        out["timing"] = timing_meta(repeats, spreads)
         return out
     r = cached("router_scale", go, force)
-    if any(str(n) not in r for n in sizes):
-        # cached artifact predates the 4096 extension: remeasure
+    if (any(str(n) not in r for n in sizes)
+            or "sharded" not in r or "timing" not in r):
+        # cached artifact predates the sharded/timing extension
         r = cached("router_scale", go, True)
     rows = []
     for n in sizes:
@@ -665,13 +710,26 @@ def bench_router_scale(force=False):
         rows.append(csv_row(f"router_scale.n{n}.vector", v,
                             f"scalar={s:.1f}us speedup={s / v:.1f}x"
                             f"{extra}"))
+    for n in shard_sizes:
+        for S in shard_counts:
+            rec = r["sharded"][str(n)][str(S)]
+            rows.append(csv_row(
+                f"router_scale.n{n}.shards{S}", rec["vector_us"],
+                f"walk={rec['walk_us']:.1f}us "
+                f"max_shard={rec['max_shard_us']:.1f}us"))
     sp256 = r["256"]["scalar_us"] / r["256"]["vector_us"]
     sp1k = r["1024"]["scalar_us"] / r["1024"]["vector_us"]
     sp4k = r["4096"]["scalar_us"] / r["4096"]["vector_us"]
+    top = r["sharded"]["16384"]
+    best_S = min(top, key=lambda S: top[S]["max_shard_us"])
     return rows, (f"vectorized core: {sp256:.1f}x faster @256 instances, "
                   f"{sp1k:.1f}x @1024, {sp4k:.1f}x @4096 "
-                  f"({r['4096']['vector_us']:.0f}us/decision at 4k scale; "
-                  f"target >=5x @256)")
+                  f"({r['4096']['vector_us']:.0f}us/decision at 4k); "
+                  f"sharded @16384: {top['1']['vector_us']:.0f}us/decision,"
+                  f" max-shard walk {top['1']['max_shard_us']:.1f}us at 1 "
+                  f"shard -> {top[best_S]['max_shard_us']:.1f}us at "
+                  f"{best_S} (critical path a parallel tier pays; "
+                  f"spread<={r['timing']['spread']})")
 
 
 # ---------------------------------------------------------------------------
@@ -687,73 +745,110 @@ def bench_prefix_index(force=False):
     deep walk per lineage instead of one per chain).  The 4096 point is
     the scale the bigint masks choked on (every per-node mask op copies
     O(n/64) words; ``remove_instance`` walks the whole tree doing it).
-    Outputs verify old==new hit matrices before timing."""
-    import time
+    Outputs verify old==new hit matrices before timing.
 
+    The ``sharded`` section runs the same lineage wave through
+    ``ShardedPrefixIndex`` at 4096 and 16384 instances × 1/2/4/8
+    shards: hit matrices must agree with the unsharded flat index, and
+    the per-shard walk telemetry records where the wave's host cost
+    lands (``max_shard_us`` is the parallel-tier critical path).  All
+    timings are warmed median-of-k (``benchmarks.common.median_of_k``)
+    and the worst spread lands in the ``timing`` block."""
     from repro.core._prefix_ref import AggregatedPrefixIndexRef
     from repro.core.indicators import AggregatedPrefixIndex
+    from repro.core.sharded_index import ShardedPrefixIndex
+    from .common import median_of_k, timing_meta
 
     n_lin, depth, holders_per, wave_k = 6, 256, 16, 64
     sizes = (256, 1024, 4096)
+    shard_sizes = (4096, 16384)
+    shard_counts = (1, 2, 4, 8)
+    repeats = 5
     rng = np.random.RandomState(7)
     lineages = [[int(x) for x in rng.randint(0, 1 << 60, depth)]
                 for _ in range(n_lin)]
     wave = [tuple(lineages[j % n_lin][: 64 + (j * 29) % (depth - 64)])
             for j in range(wave_k)]
+    spreads = []
 
-    def best_us(f, reps=20):
-        best = 1e18
-        for _ in range(3):
-            t0 = time.perf_counter_ns()
-            for _ in range(reps):
-                f()
-            best = min(best, (time.perf_counter_ns() - t0) / reps)
-        return best / 1e3
+    def timed_us(f, inner=20):
+        med, spread = median_of_k(
+            lambda: [f() for _ in range(inner)],
+            repeats=repeats, warmup=1)
+        spreads.append(spread)
+        return med / inner
+
+    def make_holders(n, rand):
+        return {l: [int(x) for x in rand.choice(n, holders_per,
+                                                replace=False)]
+                for l in range(n_lin)}
+
+    def build(idx, holders):
+        for l, lin in enumerate(lineages):
+            for iid in holders[l]:
+                idx.add(iid, lin)
+        return idx
 
     def measure(n):
-        holders = {l: [int(x) for x in rng.choice(n, holders_per,
-                                                  replace=False)]
-                   for l in range(n_lin)}
-
-        def build(idx):
-            for l, lin in enumerate(lineages):
-                for iid in holders[l]:
-                    idx.add(iid, lin)
-            return idx
-
-        new = build(AggregatedPrefixIndex(n))
-        old = build(AggregatedPrefixIndexRef(n))
+        holders = make_holders(n, rng)
+        new = build(AggregatedPrefixIndex(n), holders)
+        old = build(AggregatedPrefixIndexRef(n), holders)
         agree = bool((new.match_depths_many(wave)
                       == old.match_depths_many(wave)).all())
         rec = {"agree": agree, "nodes": new.n_nodes}
         for tag, idx in (("old", old), ("new", new)):
             # warm re-adds: the insert-on-route hot path (chains are
             # lineage prefixes of existing holders -> state unchanged)
-            rec[f"add_{tag}_us"] = best_us(lambda: [
+            rec[f"add_{tag}_us"] = timed_us(lambda: [
                 idx.add(holders[j % n_lin][j % holders_per], wave[j])
-                for j in range(wave_k)]) / wave_k
+                for j in range(wave_k)], inner=1) / wave_k
             iid0 = holders[0][0]
-            rec[f"evict_{tag}_us"] = best_us(lambda: (
+            rec[f"evict_{tag}_us"] = timed_us(lambda: (
                 idx.remove_leaf(iid0, lineages[0]),
                 idx.add(iid0, lineages[0]))) / 2
-            rec[f"walk1_{tag}_us"] = best_us(lambda: [
-                idx.match_depths(c) for c in wave[:8]]) / 8
-            rec[f"walk8_{tag}_us"] = best_us(
+            rec[f"walk1_{tag}_us"] = timed_us(lambda: [
+                idx.match_depths(c) for c in wave[:8]], inner=1) / 8
+            rec[f"walk8_{tag}_us"] = timed_us(
                 lambda: idx.match_depths_many(wave[:8]))
-            rec[f"walk64_{tag}_us"] = best_us(
-                lambda: idx.match_depths_many(wave))
+            rec[f"walk64_{tag}_us"] = timed_us(
+                lambda: idx.match_depths_many(wave), inner=5)
         for op in ("add", "evict", "walk1", "walk8", "walk64"):
             rec[f"{op}_speedup"] = rec[f"{op}_old_us"] \
                 / max(rec[f"{op}_new_us"], 1e-9)
         return rec
 
+    def measure_sharded(n):
+        rand = np.random.RandomState(11)
+        holders = make_holders(n, rand)
+        want = build(AggregatedPrefixIndex(n),
+                     holders).match_depths_many(wave)
+        recs = {}
+        for S in shard_counts:
+            idx = build(ShardedPrefixIndex(n, S), holders)
+            agree = bool((idx.match_depths_many(wave) == want).all())
+            us = timed_us(lambda: idx.match_depths_many(wave), inner=5)
+            st = idx.shard_stats()
+            recs[str(S)] = {
+                "agree": agree, "walk64_us": us,
+                "shard_walk_us": [round(s["mean_walk_us"], 3)
+                                  for s in st],
+                "max_shard_us": max(s["mean_walk_us"] for s in st)}
+        return recs
+
     def go():
-        return {"scenario": {"n_lineages": n_lin, "depth": depth,
-                             "holders_per_lineage": holders_per,
-                             "wave": wave_k},
-                "sizes": {str(n): measure(n) for n in sizes}}
+        out = {"scenario": {"n_lineages": n_lin, "depth": depth,
+                            "holders_per_lineage": holders_per,
+                            "wave": wave_k},
+               "sizes": {str(n): measure(n) for n in sizes},
+               "sharded": {str(n): measure_sharded(n)
+                           for n in shard_sizes}}
+        out["timing"] = timing_meta(repeats, spreads)
+        return out
 
     r = cached("prefix_index", go, force)
+    if "sharded" not in r or "timing" not in r:
+        # cached artifact predates the sharded/timing extension
+        r = cached("prefix_index", go, True)
     rows = []
     for n in sizes:
         rec = r["sizes"][str(n)]
@@ -764,7 +859,16 @@ def bench_prefix_index(force=False):
                 f"{1e6 / max(us, 1e-3):.0f} ops/s "
                 f"old={rec[f'{op}_old_us']:.1f}us "
                 f"speedup={rec[f'{op}_speedup']:.1f}x"))
+    for n in shard_sizes:
+        for S in shard_counts:
+            rec = r["sharded"][str(n)][str(S)]
+            rows.append(csv_row(
+                f"prefix_index.n{n}.shards{S}.walk64", rec["walk64_us"],
+                f"max_shard={rec['max_shard_us']:.1f}us "
+                f"agree={rec['agree']}"))
     r1k, r4k = r["sizes"]["1024"], r["sizes"]["4096"]
+    s16 = r["sharded"]["16384"]
+    bS = min(s16, key=lambda S: s16[S]["max_shard_us"])
     return rows, (f"flat bitset index: match_depths_many "
                   f"{r1k['walk64_speedup']:.1f}x @1024 instances on the "
                   f"64-chain LCP wave (target >=3x), "
@@ -772,7 +876,10 @@ def bench_prefix_index(force=False):
                   f"({r4k['walk64_new_us']:.0f}us/wave, "
                   f"agree={r4k['agree']}); single walks "
                   f"{r1k['walk1_speedup']:.1f}x, warm adds "
-                  f"{r1k['add_speedup']:.1f}x @1024")
+                  f"{r1k['add_speedup']:.1f}x @1024; sharded @16384 "
+                  f"agree={all(v['agree'] for v in s16.values())}, "
+                  f"max-shard walk {s16['1']['max_shard_us']:.1f}us@1 -> "
+                  f"{s16[bS]['max_shard_us']:.1f}us@{bS} shards")
 
 
 # ---------------------------------------------------------------------------
@@ -790,31 +897,43 @@ def bench_batch_routing(force=False):
     from repro.core import make_policy, Router
     from repro.workloads.traces import make_trace
 
+    from .common import median_spread, timing_meta
+
     small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
     sizes = (16, 256) if small else (16, 256, 1024)
     batches = (1, 8, 64) if small else (1, 8, 64, 256)
     n_requests = 256 if small else 512
+    repeats = 3
+    spreads = []
 
     def measure(n_inst, k):
         trace = make_trace("agent", qps=30.0, duration=120.0, seed=2)
         reqs = trace[:n_requests]
-        us = 0.0
-        for is_warmup in (True, False):   # first pass pays jit compiles
+        vals = []
+        # pass 0 pays jit compiles (warmup, unrecorded); then
+        # median-of-repeats over fresh routers
+        for rep in range(repeats + 1):
             router = Router(make_policy("lmetric"), n_inst,
                             kv_capacity_tokens=KV_CAPACITY)
             for i in range(0, len(reqs), k):
                 wave = reqs[i:i + k]
                 router.route_batch(wave, wave[0].arrival)
             warm = router.decision_ns[len(router.decision_ns) // 5:]
-            us = sum(warm) / len(warm) / 1e3
-        return us
+            if rep:
+                vals.append(sum(warm) / len(warm) / 1e3)
+        med, spread = median_spread(vals)
+        spreads.append(spread)
+        return med
 
     def go():
         out = {}
         for n in sizes:
             out[str(n)] = {str(k): measure(n, k) for k in batches}
+        out["timing"] = timing_meta(repeats, spreads)
         return out
     r = cached("batch_routing", go, force)
+    if "timing" not in r:
+        r = cached("batch_routing", go, True)
     rows = []
     for n in sizes:
         base = r[str(n)]["1"]
@@ -848,28 +967,48 @@ def bench_detector_observe(force=False):
 
     from repro.core.indicators import IndicatorFactory
     from repro.workloads.traces import make_hotspot_trace
+    from .common import median_spread, timing_meta
+
+    repeats = 3
+    spreads = []
 
     def measure(n_inst, use_py):
-        det = HotspotDetector(min_requests=10)
-        f = IndicatorFactory(n_inst)
-        rng = np.random.RandomState(0)
-        hits = rng.randint(0, 100, n_inst)
-        hits[n_inst // 2:] = 0                  # keep a nontrivial M set
-        scores = rng.rand(n_inst)
         reqs = make_hotspot_trace(qps=14.0, duration=120.0, seed=5)[:2000]
-        fn = det._observe_py if use_py else det.observe
-        t0 = _time.perf_counter()
-        for r in reqs:
-            fn(r, f, hits, scores, r.arrival)
-        return (_time.perf_counter() - t0) / len(reqs) * 1e6
+
+        def one_pass():
+            """Fresh detector/factory state per repeat, but only the
+            observe loop inside the timed region."""
+            det = HotspotDetector(min_requests=10)
+            f = IndicatorFactory(n_inst)
+            rng = np.random.RandomState(0)
+            hits = rng.randint(0, 100, n_inst)
+            hits[n_inst // 2:] = 0              # keep a nontrivial M set
+            scores = rng.rand(n_inst)
+            fn = det._observe_py if use_py else det.observe
+            t0 = _time.perf_counter_ns()
+            for r in reqs:
+                fn(r, f, hits, scores, r.arrival)
+            return _time.perf_counter_ns() - t0
+
+        one_pass()                              # warmup
+        med_ns, spread = median_spread([one_pass()
+                                        for _ in range(repeats)])
+        spreads.append(spread)
+        return med_ns / 1e3 / len(reqs)
 
     def go():
-        return {str(n): {"py_us": measure(n, True),
-                         "vec_us": measure(n, False)}
-                for n in (16, 256)}
+        out = {str(n): {"py_us": measure(n, True),
+                        "vec_us": measure(n, False)}
+               for n in (16, 256)}
+        out["timing"] = timing_meta(repeats, spreads)
+        return out
     r = cached("detector_observe", go, force)
+    if "timing" not in r:
+        r = cached("detector_observe", go, True)
     rows = []
     for n, v in r.items():
+        if n == "timing":
+            continue
         rows.append(csv_row(f"detector.n{n}.before_py", v["py_us"],
                             f"{v['py_us']:.1f}us/observe"))
         rows.append(csv_row(f"detector.n{n}.after_vec", v["vec_us"],

@@ -9,7 +9,13 @@ check keeps them diffable across PRs:
   or numpy types that ``json.dump(default=str)`` silently flattened),
 * known bench files carry their required record fields — e.g. every
   ``closed_loop.json`` policy record must expose the TTFT/TPOT/goodput
-  trio the closed-loop comparison is built on.
+  trio the closed-loop comparison is built on,
+* micro-timing benches (``router_scale.json``, ``prefix_index.json``)
+  carry a ``timing`` block (median-of-k ``repeats`` + worst ``spread``)
+  — a spread above 0.5 prints a WARN (artifact stays valid, but deltas
+  vs other runs are suspect), and the sharded sections must cover the
+  16384-instance point with per-shard walk telemetry and an intact
+  sharded==flat ``agree`` bit.
 
 Usage:  python scripts/check_bench_schema.py [results/bench]
 Exit 0 = all artifacts valid; 1 = violations (printed per file).
@@ -40,6 +46,20 @@ PREFIX_INDEX_RECORD = (
 #: per-policy record in capacity_knee.json (goodput-vs-load knee)
 CAPACITY_KNEE_RECORD = ("goodput_rps", "abandon_rate", "knee_frac",
                         "sat_goodput_rps")
+#: per-size record in router_scale.json (vector vs frozen scalar ref)
+ROUTER_SCALE_RECORD = ("vector_us", "scalar_us", "walk_us")
+#: per-(size, shard-count) record in the sharded sections — per-shard
+#: walk telemetry plus the max-shard critical path
+ROUTER_SCALE_SHARD_RECORD = ("vector_us", "walk_us", "shard_walk_us",
+                             "max_shard_us")
+PREFIX_INDEX_SHARD_RECORD = ("agree", "walk64_us", "shard_walk_us",
+                             "max_shard_us")
+#: the timing block every micro-timing bench records (median-of-k
+#: repeats + worst spread) so unstable numbers are flagged, not chased
+TIMING_RECORD = ("repeats", "spread")
+#: spread above this is flagged as unstable (warning, not failure —
+#: the numbers are still valid, just noisy on this box)
+SPREAD_WARN = 0.5
 
 SCALARS = (str, int, float, bool, type(None))
 
@@ -71,16 +91,33 @@ def _check_record(rec, required, path, errors):
         errors.append(f"{path}: missing fields {missing}")
 
 
+def _check_timing(data, name, errors, warnings):
+    timing = data.get("timing")
+    if timing is None:
+        msg = f"{name}: missing top-level 'timing'"
+        if msg not in errors:
+            errors.append(msg)
+        return
+    _check_record(timing, TIMING_RECORD, f"{name}.timing", errors)
+    if isinstance(timing, dict):
+        spread = timing.get("spread")
+        if isinstance(spread, (int, float)) and spread > SPREAD_WARN:
+            warnings.append(
+                f"{name}: unstable timings (spread {spread} > "
+                f"{SPREAD_WARN} across {timing.get('repeats')} repeats)"
+                f" — treat deltas vs other artifacts with suspicion")
+
+
 def check_file(path):
-    errors = []
+    errors, warnings = [], []
     name = os.path.basename(path)
     try:
         with open(path) as f:
             data = json.load(f)
     except (json.JSONDecodeError, OSError) as e:
-        return [f"{name}: unparseable ({e})"]
+        return [f"{name}: unparseable ({e})"], warnings
     if not isinstance(data, dict):
-        return [f"{name}: top level must be a dict"]
+        return [f"{name}: top level must be a dict"], warnings
     _leaves_ok(data, name, errors)
     if name == "closed_loop.json":
         for key in ("n_sessions", "grid", "sweep", "mixed"):
@@ -99,7 +136,7 @@ def check_file(path):
             _check_record(rec, CLOSED_LOOP_RECORD + ("families",),
                           f"{name}.mixed.{p}", errors)
     elif name == "prefix_index.json":
-        for key in ("scenario", "sizes"):
+        for key in ("scenario", "sizes", "sharded", "timing"):
             if key not in data:
                 errors.append(f"{name}: missing top-level '{key}'")
         for n, rec in data.get("sizes", {}).items():
@@ -108,6 +145,36 @@ def check_file(path):
         if "4096" not in data.get("sizes", {}):
             errors.append(f"{name}: missing the 4096-instance point "
                           f"(the scale the flat index exists for)")
+        for n, by_s in data.get("sharded", {}).items():
+            for s, rec in by_s.items():
+                _check_record(rec, PREFIX_INDEX_SHARD_RECORD,
+                              f"{name}.sharded.{n}.{s}", errors)
+                if isinstance(rec, dict) and rec.get("agree") is False:
+                    errors.append(f"{name}.sharded.{n}.{s}: sharded "
+                                  f"hit matrix diverged from flat index")
+        if "16384" not in data.get("sharded", {}):
+            errors.append(f"{name}: sharded section missing the "
+                          f"16384-instance point (the scale sharding "
+                          f"exists for)")
+        _check_timing(data, name, errors, warnings)
+    elif name == "router_scale.json":
+        for key in ("4096", "sharded", "timing"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for n, rec in data.items():
+            if n in ("sharded", "timing"):
+                continue
+            _check_record(rec, ROUTER_SCALE_RECORD, f"{name}.{n}",
+                          errors)
+        for n, by_s in data.get("sharded", {}).items():
+            for s, rec in by_s.items():
+                _check_record(rec, ROUTER_SCALE_SHARD_RECORD,
+                              f"{name}.sharded.{n}.{s}", errors)
+        if "16384" not in data.get("sharded", {}):
+            errors.append(f"{name}: sharded section missing the "
+                          f"16384-instance point (the scale sharding "
+                          f"exists for)")
+        _check_timing(data, name, errors, warnings)
     elif name == "capacity_knee.json":
         for key in ("offered_fracs", "policies", "degenerate"):
             if key not in data:
@@ -115,12 +182,14 @@ def check_file(path):
         for p, rec in data.get("policies", {}).items():
             _check_record(rec, CAPACITY_KNEE_RECORD,
                           f"{name}.policies.{p}", errors)
+    elif name in ("batch_routing.json", "detector_observe.json"):
+        _check_timing(data, name, errors, warnings)
     elif name == "fig22.json":
         for t, by_pol in data.items():
             for p, rec in by_pol.items():
                 _check_record(rec, SUMMARY_RECORD, f"{name}.{t}.{p}",
                               errors)
-    return errors
+    return errors, warnings
 
 
 def main():
@@ -132,11 +201,14 @@ def main():
         return 1
     failures = 0
     for f in files:
-        errors = check_file(os.path.join(bench_dir, f))
-        status = "ok" if not errors else "FAIL"
+        errors, warnings = check_file(os.path.join(bench_dir, f))
+        status = ("FAIL" if errors else
+                  "ok (unstable)" if warnings else "ok")
         print(f"{f:28s} {status}")
         for e in errors:
             print(f"  {e}")
+        for w in warnings:
+            print(f"  WARN {w}")
         failures += bool(errors)
     return 1 if failures else 0
 

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Fail CI when docs/ARCHITECTURE.md references a symbol that no
+longer exists.
+
+Architecture docs rot the moment a refactor renames what they point
+at, and nothing in the test suite notices.  This is the grep-based
+tripwire: every inline-backtick token in the checked docs is either
+
+* a **path** (contains ``/`` or ends in ``.py``/``.md``/``.json``):
+  must exist relative to the repo root, or under ``src/`` /
+  ``src/repro/`` (docs abbreviate ``core/router.py`` style), globs
+  allowed; or
+* an **identifier** (dotted Python-identifier grammar, trailing call
+  parens/arguments stripped): every dotted component must appear as a
+  whole word somewhere in the repo's Python sources
+  (``src benchmarks scripts tests examples``).
+
+Tokens that fit neither grammar (shell snippets, math, prose in
+backticks) are skipped.  Fenced code blocks are skipped wholesale —
+diagrams name things loosely.
+
+Usage:  python scripts/check_docs_symbols.py [doc.md ...]
+Exit 0 = every reference resolves; 1 = stale references (printed).
+"""
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_DOCS = [os.path.join(ROOT, "docs", "ARCHITECTURE.md")]
+SOURCE_DIRS = ("src", "benchmarks", "scripts", "tests", "examples")
+
+_IDENT = re.compile(
+    r"^[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_][A-Za-z0-9_]*)*$")
+_CALL_SUFFIX = re.compile(r"\(.*\)$")
+_FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+_BACKTICK = re.compile(r"`([^`\n]+)`")
+
+
+def _source_corpus():
+    """One big word-set over every Python source file (plus their
+    paths), so identifier lookups are whole-word and O(1)."""
+    words = set()
+    for d in SOURCE_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(ROOT, d)):
+            for f in files:
+                if not f.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, f)
+                words.update(re.findall(r"[A-Za-z_][A-Za-z0-9_]*",
+                                        open(path, errors="replace")
+                                        .read()))
+                words.add(f[:-3])
+    return words
+
+
+def _path_exists(token):
+    for base in ("", "src", os.path.join("src", "repro")):
+        pattern = os.path.join(ROOT, base, token)
+        if glob.glob(pattern):
+            return True
+    return False
+
+
+def check_doc(path, words):
+    text = open(path).read()
+    text = _FENCE.sub("", text)
+    stale = []
+    for token in _BACKTICK.findall(text):
+        token = _CALL_SUFFIX.sub("", token.strip())
+        if "/" in token or token.endswith((".py", ".md", ".json")):
+            if not _path_exists(token):
+                stale.append(f"{os.path.basename(path)}: path `{token}` "
+                             f"does not exist")
+        elif _IDENT.match(token):
+            missing = [p for p in token.split(".") if p not in words]
+            if missing:
+                stale.append(
+                    f"{os.path.basename(path)}: identifier `{token}` — "
+                    f"component(s) {missing} not found in any Python "
+                    f"source under {'/'.join(SOURCE_DIRS)}")
+        # anything else: prose/math in backticks, not a reference
+    return stale
+
+
+def main():
+    docs = sys.argv[1:] or DEFAULT_DOCS
+    words = _source_corpus()
+    failures = 0
+    for doc in docs:
+        if not os.path.exists(doc):
+            print(f"{doc}: MISSING (the architecture doc is part of "
+                  f"the repo contract)")
+            failures += 1
+            continue
+        stale = check_doc(doc, words)
+        print(f"{os.path.relpath(doc, ROOT):28s} "
+              f"{'ok' if not stale else 'FAIL'}")
+        for s in stale:
+            print(f"  {s}")
+        failures += bool(stale)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

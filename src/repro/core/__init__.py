@@ -1,6 +1,8 @@
 from .types import DEFAULT_SLO, Request, SLO
 from .radix import RadixKVIndex, tokens_to_blocks
-from .indicators import IndicatorFactory, InstanceState
+from .indicators import (AggregatedPrefixIndex, IndicatorFactory,
+                         InstanceState, shard_bounds)
+from .sharded_index import ShardedPrefixIndex
 from .latency_model import EngineSpec, LatencyModel, spec_from_config
 from .policies import (DynamoPolicy, FilterKVPolicy, JSQPolicy,
                        LinearKVPolicy, LMetricPolicy, Policy,
@@ -12,6 +14,7 @@ from .router import Router
 
 __all__ = [
     "Request", "SLO", "DEFAULT_SLO", "RadixKVIndex", "tokens_to_blocks",
+    "AggregatedPrefixIndex", "ShardedPrefixIndex", "shard_bounds",
     "IndicatorFactory",
     "InstanceState", "EngineSpec", "LatencyModel", "spec_from_config",
     "Policy", "JSQPolicy", "LinearKVPolicy", "DynamoPolicy",

@@ -50,25 +50,42 @@ factory accumulates host walk telemetry (``walk_ns`` / ``walks``) so
 benchmarks can report the per-walk cost the flat index optimises
 (``Router.mean_walk_us``).
 
+Past ~4k instances the factory shards the aggregate by instance-id
+range (``n_shards > 1`` builds a
+``repro.core.sharded_index.ShardedPrefixIndex`` — S independent flat
+indexes whose per-shard hit vectors concatenate into the same
+full-width arrays, bit-identical to the unsharded index); per-shard
+walk telemetry surfaces through ``shard_walk_stats`` /
+``Router.walk_telemetry``.
+
 Device mirror & dirty-flag sync contract
 ----------------------------------------
 Batch routing (``Router.route_batch``) scores whole arrival waves on
 device.  The factory therefore keeps a **device mirror** of the four
-scalar indicator arrays:
+scalar indicator arrays (partitioned by the same instance-id ranges as
+the prefix index, one dirty flag per shard):
 
 * ``device_view()`` returns ``(r_bs, q_bs, queued_prefill_tokens,
   total_tokens)`` as jax arrays (int64 — created under
-  ``jax.experimental.enable_x64()``), re-uploaded **only when the dirty
-  flag is set** and cached otherwise.
+  ``jax.experimental.enable_x64()``), re-uploading **only the shards
+  whose dirty flag is set** and caching the rest (with one shard —
+  the default — that degenerates to the original whole-array
+  behaviour).
 * Every built-in mutation path — the ``InstanceState`` update hooks and
   its property setters — stays an in-place numpy write and flips the
-  flag via ``mark_dirty()``.  Code that writes ``factory.r_bs[...]``
-  (or the siblings) directly MUST call ``factory.mark_dirty()``
-  afterwards; that is the entire synchronization contract, and it is
-  what every future on-device scheduling feature builds on.
+  owning shard's flag via ``mark_dirty(iid)``.  Code that writes
+  ``factory.r_bs[...]`` (or the siblings) directly MUST call
+  ``factory.mark_dirty()`` (all shards, conservative) or
+  ``factory.mark_dirty(iid)`` (just the touched shard) afterwards;
+  that is the entire synchronization contract, and it is what every
+  future on-device scheduling feature builds on.
 * The mirror is read-only: device code never writes indicators back.
   Decisions return to the host and are committed through the same
   hooks, so the numpy arrays remain the single source of truth.
+
+``docs/ARCHITECTURE.md`` states this contract (and the subset
+invariant below) as the two load-bearing invariants of the routing
+stack — read it before building on either.
 
 ``evictions`` counts per-instance KV$ leaf evictions (and full clears).
 The batched routing plan models intra-wave cache growth exactly but
@@ -116,6 +133,27 @@ _WORD_BITS = 64
 #: reference uses explicit little-endian ``int.to_bytes``); on LE hosts
 #: this is bit-for-bit the native uint64
 _WORD = np.dtype("<u8")
+
+
+def shard_bounds(n_instances: int, n_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous instance-id ranges ``[lo, hi)``, one per shard, sizes
+    within one of each other.  The single definition both the sharded
+    prefix index and the factory's device-mirror partition use, so hit
+    vectors and indicator slices always cut at the same boundaries."""
+    return [((s * n_instances) // n_shards,
+             ((s + 1) * n_instances) // n_shards)
+            for s in range(n_shards)]
+
+
+def shard_owner(n_instances: int, n_shards: int) -> np.ndarray:
+    """``owner[i]`` = shard covering instance ``i`` under
+    :func:`shard_bounds` — built here once so the sharded index's
+    mutation routing and the factory's ``mark_dirty(iid)`` mirror
+    partition can never disagree about ownership."""
+    owner = np.empty(n_instances, dtype=np.int64)
+    for s, (lo, hi) in enumerate(shard_bounds(n_instances, n_shards)):
+        owner[lo:hi] = s
+    return owner
 
 
 class AggregatedPrefixIndex:
@@ -381,7 +419,8 @@ class AggregatedPrefixIndex:
 
     def match_depths_many(self, chains: Sequence[Sequence[int]],
                           order: Optional[Sequence[int]] = None,
-                          adj: Optional[np.ndarray] = None) -> np.ndarray:
+                          adj: Optional[np.ndarray] = None,
+                          out: Optional[np.ndarray] = None) -> np.ndarray:
         """``match_depths`` for a whole wave of chains at once, with
         LCP-chained walk reuse.
 
@@ -392,10 +431,16 @@ class AggregatedPrefixIndex:
         one deep walk instead of k.  Pass precomputed ``(order, adj)``
         from :func:`_sorted_lcp` to share the sort with the pairwise-LCP
         matrix; segment scatters batch into one ``unpackbits`` exactly
-        like the per-chain version.
+        like the per-chain version.  ``out`` (shape ``(k, n)``, zeroed
+        here) lets the sharded index scatter each shard's result
+        straight into its column slice of the full-width matrix instead
+        of allocating and copying a per-shard temporary.
         """
         k = len(chains)
-        out = np.zeros((k, self.n), dtype=np.int64)
+        if out is None:
+            out = np.zeros((k, self.n), dtype=np.int64)
+        else:
+            out[:] = 0
         if k == 0:
             return out
         if order is None:
@@ -585,7 +630,7 @@ class InstanceState:
     @r_bs.setter
     def r_bs(self, v: int):
         self._f.r_bs[self.iid] = v
-        self._f.mark_dirty()
+        self._f.mark_dirty(self.iid)
 
     @property
     def q_bs(self) -> int:
@@ -594,7 +639,7 @@ class InstanceState:
     @q_bs.setter
     def q_bs(self, v: int):
         self._f.q_bs[self.iid] = v
-        self._f.mark_dirty()
+        self._f.mark_dirty(self.iid)
 
     @property
     def queued_prefill_tokens(self) -> int:
@@ -603,7 +648,7 @@ class InstanceState:
     @queued_prefill_tokens.setter
     def queued_prefill_tokens(self, v: int):
         self._f.queued_prefill_tokens[self.iid] = v
-        self._f.mark_dirty()
+        self._f.mark_dirty(self.iid)
 
     @property
     def total_tokens(self) -> int:
@@ -612,7 +657,7 @@ class InstanceState:
     @total_tokens.setter
     def total_tokens(self, v: int):
         self._f.total_tokens[self.iid] = v
-        self._f.mark_dirty()
+        self._f.mark_dirty(self.iid)
 
     @property
     def routed_log(self) -> List:
@@ -642,26 +687,26 @@ class InstanceState:
         f.q_bs[i] += 1
         f.queued_prefill_tokens[i] += req.prompt_len - hit
         f.total_tokens[i] += req.prompt_len
-        f.mark_dirty()
+        f.mark_dirty(i)
         f.log_routed(i, now, req.prompt_len - hit)
 
     def on_prefill_progress(self, n_tokens: int):
         f, i = self._f, self.iid
         left = f.queued_prefill_tokens[i] - n_tokens
         f.queued_prefill_tokens[i] = left if left > 0 else 0
-        f.mark_dirty()
+        f.mark_dirty(i)
 
     def on_start_running(self, req: Request):
         f, i = self._f, self.iid
         if f.q_bs[i] > 0:
             f.q_bs[i] -= 1
         f.r_bs[i] += 1
-        f.mark_dirty()
+        f.mark_dirty(i)
 
     def on_decode_token(self):
         f = self._f
         f.total_tokens[self.iid] += 1
-        f.mark_dirty()
+        f.mark_dirty(self.iid)
 
     def on_finish(self, req: Request):
         f, i = self._f, self.iid
@@ -669,7 +714,7 @@ class InstanceState:
             f.r_bs[i] -= 1
         left = f.total_tokens[i] - req.prompt_len - req.output_len
         f.total_tokens[i] = left if left > 0 else 0
-        f.mark_dirty()
+        f.mark_dirty(i)
 
     def trim_log(self, now: float, window: float):
         self._f.trim_routed(self.iid, now - window)
@@ -679,18 +724,26 @@ class IndicatorFactory:
     _LOG_CAP0 = 256   # initial per-instance routed-window ring capacity
 
     def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
-                 block_size: int = 64, exact_only: bool = False):
+                 block_size: int = 64, exact_only: bool = False,
+                 n_shards: int = 1, parallel_walks: bool = False):
         self.n = n_instances
         self.block_size = block_size
         self.exact_only = exact_only
+        # shard count for the aggregated index AND the device-mirror
+        # partition (same shard_bounds cut); 1 = the unsharded flat index
+        self.n_shards = max(1, min(int(n_shards), n_instances))
         # --- the array contract (see module docstring) -------------------
         self.r_bs = np.zeros(n_instances, dtype=np.int64)
         self.q_bs = np.zeros(n_instances, dtype=np.int64)
         self.queued_prefill_tokens = np.zeros(n_instances, dtype=np.int64)
         self.total_tokens = np.zeros(n_instances, dtype=np.int64)
         self._hit_depths = np.zeros(n_instances, dtype=np.int64)
-        # device mirror (see docstring): re-uploaded when dirty
-        self._dirty = True
+        # device mirror (see docstring): per-shard dirty flags, only
+        # touched shards re-upload; _dev caches the concatenated tuple
+        self._mirror_bounds = shard_bounds(n_instances, self.n_shards)
+        self._mirror_owner = shard_owner(n_instances, self.n_shards)
+        self._dirty = np.ones(self.n_shards, dtype=bool)
+        self._dev_shards = [None] * self.n_shards
         self._dev = None
         # mid-wave plan invalidation signal for Router.route_batch
         self.evictions = 0
@@ -706,7 +759,14 @@ class IndicatorFactory:
         self._log_len = np.zeros(n_instances, dtype=np.int64)
         # exact_only hit semantics (deepest snapshot boundary) cannot be
         # read off chain membership alone -> scalar per-instance fallback
-        self._agg = None if exact_only else AggregatedPrefixIndex(n_instances)
+        if exact_only:
+            self._agg = None
+        elif self.n_shards == 1:
+            self._agg = AggregatedPrefixIndex(n_instances)
+        else:
+            from .sharded_index import ShardedPrefixIndex
+            self._agg = ShardedPrefixIndex(n_instances, self.n_shards,
+                                           parallel=parallel_walks)
         self.instances = []
         for i in range(n_instances):
             kv = RadixKVIndex(block_size=block_size,
@@ -765,26 +825,71 @@ class IndicatorFactory:
         """Mean host cost of one aggregated-index walk (per unique
         prompt), from the ``walk_ns``/``walks`` telemetry — the single
         definition both ``Router.mean_walk_us`` and the benchmarks
-        report."""
+        report.  On a sharded factory a "walk" is the full fan-out
+        across every shard (including the shared lexicographic sort);
+        ``shard_walk_stats`` breaks the same work down per shard."""
         return self.walk_ns / max(self.walks, 1) / 1e3
 
+    def shard_walk_stats(self) -> List[dict]:
+        """Per-shard host-walk telemetry: one record per shard with its
+        instance range ``[lo, hi)``, walks served, and mean per-walk
+        cost in µs.  An unsharded (or ``exact_only``) factory reports a
+        single pseudo-shard covering ``[0, n)`` so consumers never
+        branch on the index flavour; the max over shards is the
+        critical path a parallel walk fan-out pays per wave
+        (``Router.walk_telemetry`` surfaces it)."""
+        stats = getattr(self._agg, "shard_stats", None)
+        if stats is not None:
+            return stats()
+        return [{"shard": 0, "lo": 0, "hi": self.n,
+                 "walks": int(self.walks),
+                 "mean_walk_us": self.mean_walk_us()}]
+
     # ---- device mirror (dirty-flag sync contract, see docstring) ---------
-    def mark_dirty(self):
-        self._dirty = True
+    def mark_dirty(self, iid: Optional[int] = None):
+        """Invalidate the device mirror after an in-place indicator
+        write — THE other half of the sync contract (hooks write numpy
+        in place, then flip dirty; ``device_view`` re-uploads; device
+        code never writes indicators back).  ``mark_dirty(iid)``
+        narrows the invalidation to the mirror shard covering instance
+        ``iid`` (what every built-in hook passes); a bare
+        ``mark_dirty()`` conservatively dirties every shard and is
+        always safe for external callers that batch-write slices of
+        ``factory.r_bs`` and friends."""
+        if iid is None:
+            self._dirty[:] = True
+        else:
+            self._dirty[self._mirror_owner[iid]] = True
+        self._dev = None
 
     def device_view(self):
-        """(r_bs, q_bs, queued_prefill_tokens, total_tokens) as int64 jax
-        arrays, re-uploaded only when an indicator mutated since the last
-        call."""
-        if self._dirty or self._dev is None:
-            import jax
-            import jax.numpy as jnp
-            with jax.experimental.enable_x64():  # keep the mirror int64
-                self._dev = (jnp.asarray(self.r_bs),
-                             jnp.asarray(self.q_bs),
-                             jnp.asarray(self.queued_prefill_tokens),
-                             jnp.asarray(self.total_tokens))
-            self._dirty = False
+        """(r_bs, q_bs, queued_prefill_tokens, total_tokens) as int64
+        jax arrays (created under ``jax.experimental.enable_x64``),
+        re-uploading only the mirror shards whose dirty flag is set
+        since the last call.  With one shard (the default) this is one
+        cached whole-array upload per mutation epoch, exactly the
+        pre-sharding behaviour; with ``n_shards > 1`` untouched shards
+        reuse their cached device slices and only the concatenation is
+        redone.  The returned arrays are read-only by contract."""
+        if self._dev is not None:
+            return self._dev
+        import jax
+        import jax.numpy as jnp
+        cols = (self.r_bs, self.q_bs, self.queued_prefill_tokens,
+                self.total_tokens)
+        with jax.experimental.enable_x64():  # keep the mirror int64
+            for s, (lo, hi) in enumerate(self._mirror_bounds):
+                if self._dirty[s] or self._dev_shards[s] is None:
+                    self._dev_shards[s] = tuple(jnp.asarray(c[lo:hi])
+                                                for c in cols)
+                    self._dirty[s] = False
+            if self.n_shards == 1:
+                self._dev = self._dev_shards[0]
+            else:
+                self._dev = tuple(
+                    jnp.concatenate([self._dev_shards[s][j]
+                                     for s in range(self.n_shards)])
+                    for j in range(4))
         return self._dev
 
     # ---- wave inputs (host half of the batch routing path) ---------------

@@ -49,14 +49,29 @@ def commit_wave_plan(factory: IndicatorFactory, reqs: Sequence[Request],
 
 
 class Router:
+    """Owns the factory and a policy; see ``docs/ARCHITECTURE.md`` for
+    the layer map a ``route_batch`` call traverses.
+
+    ``n_shards > 1`` shards the factory's aggregated prefix index (and
+    the device-mirror partition) by instance-id range — the multi-
+    worker router-tier shape for clusters past ~4k instances.  Routing
+    decisions are bit-identical at any shard count;
+    ``parallel_walks=True`` additionally fans index walks over a
+    thread pool with a deterministic merge (each shard owns a disjoint
+    slice of the hit vector — see ``repro.core.sharded_index``).
+    ``walk_telemetry`` reports the per-shard walk costs either way.
+    """
+
     def __init__(self, policy: Policy, n_instances: int,
                  kv_capacity_tokens: int = 1 << 62, block_size: int = 64,
                  exact_only: bool = False,
-                 insert_on_route: bool = True):
+                 insert_on_route: bool = True,
+                 n_shards: int = 1, parallel_walks: bool = False):
         self.policy = policy
         self.factory = IndicatorFactory(
             n_instances, kv_capacity_tokens=kv_capacity_tokens,
-            block_size=block_size, exact_only=exact_only)
+            block_size=block_size, exact_only=exact_only,
+            n_shards=n_shards, parallel_walks=parallel_walks)
         self.insert_on_route = insert_on_route
         self.decision_ns: List[int] = []
         self.routed = 0
@@ -85,6 +100,18 @@ class Router:
         """Route a coalesced arrival wave; bit-identical to sequential
         ``route`` calls.  k <= 1 and host-fallback policies degenerate to
         the scalar path; a mid-wave eviction aborts the remaining plan.
+
+        The wave path is host-then-device: the factory computes one
+        aggregated-index walk per unique prompt (sharded factories
+        concatenate per-shard hit vectors — same full-width matrix) plus
+        the pairwise-LCP credit, the policy's ``plan_batch`` runs the
+        fused score→argmin→feedback loop on device over the factory's
+        device mirror (``device_view`` re-uploads only dirty shards),
+        and the plan commits here through the identical per-request
+        hooks — in-place numpy writes that re-flip the dirty flags.
+        Device code never writes indicators back; the numpy arrays stay
+        the single source of truth (the sync contract in
+        ``repro.core.indicators``).
 
         ``decision_ns`` telemetry records the plan cost amortized over
         the wave (the same policy-decision cost ``route`` records)."""
@@ -137,8 +164,11 @@ class Router:
     def session_pin(self, session_id: int) -> Optional[int]:
         """Session-affinity hint: the instance holding this session's
         KV$ lineage, if the policy tracks pins (None otherwise).  Lets
-        drivers and demos surface where a session lives without reaching
-        into policy internals."""
+        drivers and demos surface where a session lives without
+        reaching into policy internals — and is the hook a session-
+        aware LMetric variant would use to skip the aggregated-index
+        walk entirely when the pinned instance holds the whole lineage
+        (ROADMAP §Closed-loop next steps)."""
         return self.policy.session_pin(session_id)
 
     # ------------------------------------------------------------------
@@ -154,3 +184,23 @@ class Router:
         paths.  This is the number the flat bitset index + LCP walk
         reuse optimise; ``bench_prefix_index`` tracks it old-vs-new."""
         return self.factory.mean_walk_us()
+
+    def walk_telemetry(self) -> dict:
+        """Shard-tagged walk telemetry for the host half of routing:
+
+        * ``mean_walk_us`` — the overall per-unique-prompt walk cost
+          (identical to :meth:`mean_walk_us`, fan-out + shared
+          lexicographic sort included),
+        * ``shards`` — one record per index shard (``shard``, its
+          instance range ``lo``/``hi``, ``walks``, ``mean_walk_us``);
+          an unsharded factory reports one pseudo-shard over [0, n),
+        * ``max_shard_us`` — the slowest shard's mean walk cost: the
+          critical path a parallel walk fan-out pays per wave (serial
+          fan-out pays the sum over shards instead).
+
+        ``bench_router_scale``'s sharded section records exactly this
+        structure per (instance count, shard count) point."""
+        shards = self.factory.shard_walk_stats()
+        return {"mean_walk_us": self.factory.mean_walk_us(),
+                "max_shard_us": max(s["mean_walk_us"] for s in shards),
+                "shards": shards}

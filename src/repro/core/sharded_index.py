@@ -1,0 +1,215 @@
+"""Sharded aggregated prefix index — the router's host path past ~4k
+instances.
+
+The flat bitset index (``repro.core.indicators.AggregatedPrefixIndex``)
+removed the bigint-mask ceiling, but it is still *one* object: every
+walk touches one ``(capacity, ceil(n/64))`` bitset matrix, every insert
+mutates one free list, and a router tier that wants to spread the host
+half of routing across worker threads (or, eventually, worker
+processes — the deployment shape of Intelligent-Router-style balancer
+tiers) has nothing to partition.  ``ShardedPrefixIndex`` is that
+partition: the instance-id space ``[0, n)`` splits into ``S``
+contiguous ranges, and each range gets its **own complete flat index**
+— own node arrays, own child dicts, own free list, own walk-state
+reuse — over only its local instances.
+
+Why rows shard cleanly
+----------------------
+Instance ``i``'s hit depth for a chain depends *only* on instance
+``i``'s own radix tree (the aggregate is just the union of per-instance
+trees, bit ``i`` of a node's mask ⇔ instance ``i`` holds that chain).
+So partitioning by instance-id range is exact, not approximate: shard
+``s`` reproduces columns ``[lo_s, hi_s)`` of the unsharded hit matrix
+bit-for-bit, and the full-width vector the policies and
+``repro.kernels.route_score`` consume is the plain concatenation of the
+per-shard vectors.  ``tests/test_sharded_index.py`` pins that identity
+(sharded == flat == bigint reference) under random mutation
+interleavings and over the 2k-request hotspot routing trace.
+
+Each shard keeps the two invariants of the flat index locally:
+
+* **subset invariant** — child mask ⊆ parent mask within the shard, so
+  a shard's walk still detects narrowing by one cached-popcount read
+  and *early-exits the moment its local live set empties*.  This is
+  what makes sharding cheap on skewed workloads: a lineage held only by
+  instances of shard 2 dead-ends at the root of every other shard.
+* **walk-state reuse** — ``match_depths_many`` walks LCP-sorted chains
+  with per-shard frame stacks; the lexicographic sort and adjacent-LCP
+  array are computed **once** by the caller and shared across all
+  shards (and with the pairwise-LCP reconstruction).
+
+Parallel fan-out
+----------------
+``parallel=True`` fans ``match_depths`` / ``match_depths_many`` over a
+thread pool (one task per shard).  The merge is deterministic by
+construction: shard ``s`` writes only the disjoint column slice
+``out[:, lo_s:hi_s]`` it owns, so the result is independent of task
+completion order — there is no reduction step to order.  Python-level
+walks hold the GIL, so threads mostly interleave rather than overlap on
+CPython; the flag exists to (a) pin the deterministic-merge contract
+for a future process-per-shard router tier and (b) let the numpy word
+ops (which release the GIL) overlap.  Telemetry (``shard_walk_ns`` /
+``shard_walks``) is per-shard either way, so the max-shard critical
+path — the wave latency a parallel tier would actually pay — is
+measurable from ``Router.walk_telemetry``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .indicators import (AggregatedPrefixIndex, _sorted_lcp,
+                         shard_bounds, shard_owner)
+
+
+class ShardedPrefixIndex:
+    """Instance-id-range partition of the flat bitset prefix index.
+
+    Drop-in for ``AggregatedPrefixIndex`` everywhere the factory uses
+    it: same mutation protocol (``add`` / ``remove_leaf`` /
+    ``remove_instance`` with **global** instance ids), same query
+    surface (``match_depths`` / ``match_depths_many`` returning
+    full-width ``(n,)`` / ``(k, n)`` depth arrays).  Mutations route to
+    the owning shard only; queries fan out to all shards, each writing
+    its own column slice of the output.
+    """
+
+    __slots__ = ("n", "n_shards", "bounds", "shards", "parallel",
+                 "shard_walk_ns", "shard_walks", "_owner", "_pool")
+
+    def __init__(self, n_instances: int, n_shards: int,
+                 capacity: int = 256, parallel: bool = False):
+        if not 1 <= n_shards <= n_instances:
+            raise ValueError(
+                f"n_shards must be in [1, n_instances]: {n_shards} vs "
+                f"{n_instances}")
+        self.n = n_instances
+        self.n_shards = n_shards
+        self.bounds = shard_bounds(n_instances, n_shards)
+        self.shards: List[AggregatedPrefixIndex] = [
+            AggregatedPrefixIndex(hi - lo, capacity=capacity)
+            for lo, hi in self.bounds]
+        self._owner = shard_owner(n_instances, n_shards)
+        self.parallel = bool(parallel)
+        self._pool = None
+        # per-shard host-walk telemetry (see Router.walk_telemetry)
+        self.shard_walk_ns = np.zeros(n_shards, dtype=np.int64)
+        self.shard_walks = np.zeros(n_shards, dtype=np.int64)
+
+    @property
+    def n_nodes(self) -> int:
+        """Live nodes across all shards (roots excluded)."""
+        return sum(sh.n_nodes for sh in self.shards)
+
+    # ---- mutation (RadixKVIndex callback protocol, global ids) --------
+    def _local(self, iid: int) -> Tuple[int, int]:
+        s = int(self._owner[iid])
+        return s, iid - self.bounds[s][0]
+
+    def add(self, iid: int, blocks: Sequence[int]):
+        s, li = self._local(iid)
+        self.shards[s].add(li, blocks)
+
+    def remove_leaf(self, iid: int, path: Sequence[int]):
+        s, li = self._local(iid)
+        self.shards[s].remove_leaf(li, path)
+
+    def remove_instance(self, iid: int):
+        s, li = self._local(iid)
+        self.shards[s].remove_instance(li)
+
+    # ---- queries ------------------------------------------------------
+    def _fan(self, tasks):
+        """Run one task per shard; each task writes only the disjoint
+        output slice its shard owns, so serial and pooled execution are
+        indistinguishable (the deterministic-merge contract)."""
+        if self.parallel and self.n_shards > 1:
+            if self._pool is None:
+                from concurrent.futures import ThreadPoolExecutor
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.n_shards,
+                    thread_name_prefix="prefix-shard")
+            # pool.map preserves submission order only for the *results*
+            # (all None here); output placement never depends on it
+            list(self._pool.map(lambda f: f(), tasks))
+        else:
+            for t in tasks:
+                t()
+
+    def match_depths(self, blocks: Sequence[int],
+                     out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Full-width per-instance cached-prefix depths for ``blocks``:
+        the concatenation of every shard's local depth vector."""
+        if out is None:
+            out = np.zeros(self.n, dtype=np.int64)
+
+        def mk(s, lo, hi):
+            def run():
+                t0 = time.perf_counter_ns()
+                self.shards[s].match_depths(blocks, out=out[lo:hi])
+                self.shard_walk_ns[s] += time.perf_counter_ns() - t0
+                self.shard_walks[s] += 1
+            return run
+
+        self._fan([mk(s, lo, hi)
+                   for s, (lo, hi) in enumerate(self.bounds)])
+        return out
+
+    def match_depths_many(self, chains: Sequence[Sequence[int]],
+                          order: Optional[Sequence[int]] = None,
+                          adj: Optional[np.ndarray] = None) -> np.ndarray:
+        """``match_depths`` for a wave of chains: one LCP-chained walk
+        per shard per lineage, per-shard ``(k, hi-lo)`` blocks written
+        into the full ``(k, n)`` matrix.  The lexicographic sort + the
+        adjacent-LCP array are computed once here (or passed in from
+        ``_sorted_lcp``) and shared by every shard's walk reuse."""
+        k = len(chains)
+        out = np.zeros((k, self.n), dtype=np.int64)
+        if k == 0:
+            return out
+        if order is None:
+            order, adj = _sorted_lcp(chains)
+
+        def mk(s, lo, hi):
+            def run():
+                t0 = time.perf_counter_ns()
+                self.shards[s].match_depths_many(
+                    chains, order=order, adj=adj, out=out[:, lo:hi])
+                self.shard_walk_ns[s] += time.perf_counter_ns() - t0
+                self.shard_walks[s] += k
+            return run
+
+        self._fan([mk(s, lo, hi)
+                   for s, (lo, hi) in enumerate(self.bounds)])
+        return out
+
+    # ---- lifecycle ----------------------------------------------------
+    def close(self):
+        """Shut down the parallel fan-out pool (no-op when serial or
+        never queried in parallel).  The index stays usable — queries
+        fall back to serial fan-out, or recreate the pool on demand."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def __del__(self):
+        # bound worker-thread lifetime to the index's: a sweep that
+        # rebuilds parallel factories must not accumulate idle pools
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # ---- telemetry ----------------------------------------------------
+    def shard_stats(self) -> List[dict]:
+        """Per-shard walk telemetry: instance range, walks served, and
+        mean per-walk host cost.  The max over shards of
+        ``mean_walk_us`` is the critical path a parallel router tier
+        pays per wave (serial fan-out pays the sum)."""
+        return [{"shard": s, "lo": lo, "hi": hi,
+                 "walks": int(self.shard_walks[s]),
+                 "mean_walk_us": float(self.shard_walk_ns[s])
+                 / max(int(self.shard_walks[s]), 1) / 1e3}
+                for s, (lo, hi) in enumerate(self.bounds)]

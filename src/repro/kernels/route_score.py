@@ -39,6 +39,11 @@ by running minima.  Both are integer-exact, so the wave loop's inputs —
 and therefore its decisions — are bit-identical to what per-request
 walks would produce; the device-mirror / dirty-flag contract in
 ``repro.core.indicators`` is untouched by how the host computes them.
+That independence extends to sharding: a sharded factory
+(``n_shards > 1``) concatenates per-shard hit vectors into the same
+full-width ``depth[k, n]`` matrix and slices the mirror per shard, so
+the kernel is oblivious to the host index's partitioning — the
+``depth``/``lcp``/``plen`` input schema here is the only coupling.
 
 Policy kinds
 ------------
