@@ -626,14 +626,35 @@ def bench_router_scale(force=False):
     per-shard walk telemetry (``shard_walk_us``) and the max-shard
     critical path a parallel walk fan-out would pay.  Every timing is
     a median over rebuilt-factory repeats; the worst observed spread
-    lands in the schema-checked ``timing`` block."""
+    lands in the schema-checked ``timing`` block.
+
+    The ``backends`` sweep replays one routing trace through every
+    shard **execution backend** (serial / thread / process ×
+    1/2/4/8 shards at 8192 and 16384 instances): ``agree`` pins the
+    decision sequence against the serial 1-shard baseline (the merge
+    contract — must be True everywhere), and ``max_shard_us`` isolates
+    the per-shard walk duration each backend actually achieves (thread
+    shards contend on the GIL; process shards walk shared-memory trees
+    in true parallel).  Single repeat — spawning process fleets per
+    repeat would dominate, and ``agree`` is exact, not statistical.
+
+    The ``pipeline`` section runs the full staged routing pipeline on
+    the 16384-instance closed-loop mixed workload (thread vs process
+    backends at 4 and 8 shards): per-stage wave costs
+    (``walk_us``/``score_us``/``commit_us``), speculative wave-overlap
+    counters and ``overlap_fraction``, and the max-shard walk critical
+    path — the number where the process backend must beat the thread
+    pool at >=4 shards."""
     import time
 
-    from repro.core import make_policy
+    from repro.cluster.closed_loop import ClosedLoopSim
+    from repro.cluster.simulator import ClusterSim
+    from repro.core import Router, make_policy
     from repro.core.indicators import IndicatorFactory
     from repro.core.scalar_ref import make_scalar_policy
+    from repro.workloads.sessions import make_mixed_sessions
     from repro.workloads.traces import make_trace
-    from .common import median_spread, timing_meta
+    from .common import cluster_spec, median_spread, timing_meta
 
     sizes = (16, 256, 1024, 4096)
     decisions = {16: 1200, 256: 600, 1024: 250, 4096: 100}
@@ -695,12 +716,147 @@ def bench_router_scale(force=False):
                                       for s in st],
                     "max_shard_us": max(s["mean_walk_us"] for s in st)}
         out["sharded"] = sharded
+        out["backends"] = backend_sweep(trace)
+        out["pipeline"] = pipeline_sweep()
         out["timing"] = timing_meta(repeats, spreads)
+        return out
+
+    def routed_decisions(factory, reqs):
+        """Replay the trace through the scalar routing path, recording
+        the decision sequence (the ``agree`` fingerprint)."""
+        policy = make_policy("lmetric")
+        decisions = []
+        for req in reqs:
+            iid = policy.route(req, factory, req.arrival)
+            inst = factory[iid]
+            hit = inst.kv_hit(req, touch=True)
+            inst.on_route(req, req.arrival, hit)
+            inst.kv.insert(req.blocks)
+            decisions.append(iid)
+        return decisions
+
+    def backend_sweep(trace):
+        """serial/thread/process × 1/2/4/8 shards; decisions must
+        agree with the serial 1-shard baseline bit-for-bit."""
+        backends = {}
+        for n in shard_sizes:
+            reqs = trace[:shard_decisions[n]]
+            backends[str(n)] = {}
+            baseline = None
+            for b in ("serial", "thread", "process"):
+                backends[str(n)][b] = {}
+                for S in shard_counts:
+                    factory = IndicatorFactory(
+                        n, kv_capacity_tokens=KV_CAPACITY, n_shards=S,
+                        walk_backend=b)
+                    try:
+                        decisions = routed_decisions(factory, reqs)
+                        st = factory.shard_walk_stats()
+                        if baseline is None:     # serial × 1 comes first
+                            baseline = decisions
+                        backends[str(n)][b][str(S)] = {
+                            "agree": decisions == baseline,
+                            "walk_us": factory.mean_walk_us(),
+                            "shard_walk_us": [
+                                round(s["mean_walk_us"], 3) for s in st],
+                            "max_shard_us": max(s["mean_walk_us"]
+                                                for s in st)}
+                    finally:
+                        factory.close()
+        return backends
+
+    def pipeline_sweep():
+        """The staged pipeline end-to-end: 16384-instance closed-loop
+        mixed workload, thread vs process at 4 and 8 shards (serial ×
+        1 is the agree baseline)."""
+        mix = {"agent": 96, "chatbot": 96, "coder": 48}
+
+        def run(backend, S):
+            router = Router(make_policy("lmetric"), 16384,
+                            kv_capacity_tokens=KV_CAPACITY,
+                            n_shards=S, walk_backend=backend)
+            try:
+                sim = ClosedLoopSim(router, cluster_spec())
+                log = sim.run_sessions(
+                    make_mixed_sessions(mix, seed=5), until=60.0)
+                fp = [(r.rid, r.sched_to)
+                      for r in sorted(log, key=lambda r: r.rid)]
+                tel = router.walk_telemetry()
+                stage = tel["pipeline"]
+                return fp, {
+                    "walk_us": stage["walk_us"],
+                    "score_us": stage["score_us"],
+                    "commit_us": stage["commit_us"],
+                    "waves": stage["waves"],
+                    "prefetches": stage["prefetches"],
+                    "prefetch_hits": stage["prefetch_hits"],
+                    "overlap_fraction": round(
+                        stage["overlap_fraction"], 4),
+                    "max_shard_us": tel["max_shard_us"]}
+            finally:
+                router.close()
+
+        base_fp, _ = run("serial", 1)
+        points = {}
+        for b in ("thread", "process"):
+            points[b] = {}
+            for S in (4, 8):
+                fp, rec = run(b, S)
+                rec["agree"] = fp == base_fp
+                points[b][str(S)] = rec
+        points["overlap"] = overlap_sweep()
+        return points
+
+    def overlap_sweep():
+        """Wave overlap under conditions where it can engage: an API
+        fan-out burst trace (waves arrive faster than engine steps
+        complete, so the next wave is heap-adjacent at score time).
+        The closed-loop mix above leaves speculation idle — step_end
+        events interleave between its sparse waves — so this is where
+        ``prefetch_hits`` and ``overlap_fraction`` are measured."""
+        import copy
+
+        def waved_trace():
+            reqs = copy.deepcopy(
+                make_trace("agent", qps=30.0, duration=120.0,
+                           seed=2)[:240])
+            for i, r in enumerate(reqs):
+                r.arrival = 0.002 * (i // 8 + 1)   # waves of 8, 2ms apart
+            return reqs
+
+        def run(backend, S):
+            router = Router(make_policy("lmetric"), 16384,
+                            kv_capacity_tokens=KV_CAPACITY,
+                            n_shards=S, walk_backend=backend)
+            try:
+                sim = ClusterSim(router, cluster_spec())
+                log = sim.run(waved_trace())
+                fp = [(r.rid, r.sched_to)
+                      for r in sorted(log, key=lambda r: r.rid)]
+                stage = router.walk_telemetry()["pipeline"]
+                return fp, {
+                    "waves": stage["waves"],
+                    "prefetches": stage["prefetches"],
+                    "prefetch_hits": stage["prefetch_hits"],
+                    "walk_us": stage["walk_us"],
+                    "score_us": stage["score_us"],
+                    "overlap_fraction": round(
+                        stage["overlap_fraction"], 4)}
+            finally:
+                router.close()
+
+        base_fp, _ = run("serial", 1)
+        out = {}
+        for b in ("thread", "process"):
+            fp, rec = run(b, 4)
+            rec["agree"] = fp == base_fp
+            out[b] = rec
         return out
     r = cached("router_scale", go, force)
     if (any(str(n) not in r for n in sizes)
-            or "sharded" not in r or "timing" not in r):
-        # cached artifact predates the sharded/timing extension
+            or "sharded" not in r or "timing" not in r
+            or "backends" not in r or "pipeline" not in r):
+        # cached artifact predates the sharded/backends/pipeline blocks
         r = cached("router_scale", go, True)
     rows = []
     for n in sizes:
@@ -717,11 +873,35 @@ def bench_router_scale(force=False):
                 f"router_scale.n{n}.shards{S}", rec["vector_us"],
                 f"walk={rec['walk_us']:.1f}us "
                 f"max_shard={rec['max_shard_us']:.1f}us"))
+    for b in ("serial", "thread", "process"):
+        for S in shard_counts:
+            rec = r["backends"]["16384"][b][str(S)]
+            rows.append(csv_row(
+                f"router_scale.backend.{b}.shards{S}",
+                rec["max_shard_us"],
+                f"agree={rec['agree']} walk={rec['walk_us']:.1f}us"))
+    for b in ("thread", "process"):
+        for S in ("4", "8"):
+            rec = r["pipeline"][b][S]
+            rows.append(csv_row(
+                f"router_scale.pipeline.{b}.shards{S}",
+                rec["walk_us"],
+                f"agree={rec['agree']} score={rec['score_us']:.0f}us "
+                f"commit={rec['commit_us']:.0f}us "
+                f"max_shard={rec['max_shard_us']:.1f}us "
+                f"overlap={rec['overlap_fraction']}"))
+    for b in ("thread", "process"):
+        rec = r["pipeline"]["overlap"][b]
+        rows.append(csv_row(
+            f"router_scale.overlap.{b}", rec["overlap_fraction"],
+            f"hits={rec['prefetch_hits']}/{rec['prefetches']} "
+            f"agree={rec['agree']}"))
     sp256 = r["256"]["scalar_us"] / r["256"]["vector_us"]
     sp1k = r["1024"]["scalar_us"] / r["1024"]["vector_us"]
     sp4k = r["4096"]["scalar_us"] / r["4096"]["vector_us"]
     top = r["sharded"]["16384"]
     best_S = min(top, key=lambda S: top[S]["max_shard_us"])
+    pl = r["pipeline"]
     return rows, (f"vectorized core: {sp256:.1f}x faster @256 instances, "
                   f"{sp1k:.1f}x @1024, {sp4k:.1f}x @4096 "
                   f"({r['4096']['vector_us']:.0f}us/decision at 4k); "
@@ -729,7 +909,16 @@ def bench_router_scale(force=False):
                   f" max-shard walk {top['1']['max_shard_us']:.1f}us at 1 "
                   f"shard -> {top[best_S]['max_shard_us']:.1f}us at "
                   f"{best_S} (critical path a parallel tier pays; "
-                  f"spread<={r['timing']['spread']})")
+                  f"spread<={r['timing']['spread']}); closed-loop "
+                  f"pipeline @16384x4shards max-shard walk: thread "
+                  f"{pl['thread']['4']['max_shard_us']:.1f}us vs process "
+                  f"{pl['process']['4']['max_shard_us']:.1f}us "
+                  f"(GIL-free shard walks); burst-wave overlap: "
+                  f"{pl['overlap']['process']['prefetch_hits']}/"
+                  f"{pl['overlap']['process']['prefetches']} speculative "
+                  f"walks consumed, "
+                  f"{pl['overlap']['process']['overlap_fraction']:.2f} of "
+                  f"their time off the critical path")
 
 
 # ---------------------------------------------------------------------------

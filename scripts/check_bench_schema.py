@@ -54,6 +54,19 @@ ROUTER_SCALE_SHARD_RECORD = ("vector_us", "walk_us", "shard_walk_us",
                              "max_shard_us")
 PREFIX_INDEX_SHARD_RECORD = ("agree", "walk64_us", "shard_walk_us",
                              "max_shard_us")
+#: per-(size, backend, shard-count) record in the backend sweep —
+#: decisions pinned against the serial 1-shard baseline
+ROUTER_SCALE_BACKEND_RECORD = ("agree", "walk_us", "shard_walk_us",
+                               "max_shard_us")
+#: per-(backend, shard-count) record of the staged-pipeline closed-loop
+#: run (per-stage wave costs + speculation counters)
+ROUTER_SCALE_PIPELINE_RECORD = ("agree", "walk_us", "score_us",
+                                "commit_us", "waves", "prefetches",
+                                "prefetch_hits", "overlap_fraction",
+                                "max_shard_us")
+#: per-backend record of the burst-wave overlap measurement
+ROUTER_SCALE_OVERLAP_RECORD = ("agree", "waves", "prefetches",
+                               "prefetch_hits", "overlap_fraction")
 #: the timing block every micro-timing bench records (median-of-k
 #: repeats + worst spread) so unstable numbers are flagged, not chased
 TIMING_RECORD = ("repeats", "spread")
@@ -158,11 +171,11 @@ def check_file(path):
                           f"exists for)")
         _check_timing(data, name, errors, warnings)
     elif name == "router_scale.json":
-        for key in ("4096", "sharded", "timing"):
+        for key in ("4096", "sharded", "backends", "pipeline", "timing"):
             if key not in data:
                 errors.append(f"{name}: missing top-level '{key}'")
         for n, rec in data.items():
-            if n in ("sharded", "timing"):
+            if n in ("sharded", "backends", "pipeline", "timing"):
                 continue
             _check_record(rec, ROUTER_SCALE_RECORD, f"{name}.{n}",
                           errors)
@@ -174,6 +187,45 @@ def check_file(path):
             errors.append(f"{name}: sharded section missing the "
                           f"16384-instance point (the scale sharding "
                           f"exists for)")
+        # backend sweep: serial/thread/process × shard counts, every
+        # record's decision sequence pinned to the serial 1-shard run
+        for n, by_b in data.get("backends", {}).items():
+            for b in ("serial", "thread", "process"):
+                if b not in by_b:
+                    errors.append(f"{name}.backends.{n}: missing "
+                                  f"backend '{b}'")
+            for b, by_s in by_b.items():
+                for s, rec in by_s.items():
+                    p = f"{name}.backends.{n}.{b}.{s}"
+                    _check_record(rec, ROUTER_SCALE_BACKEND_RECORD, p,
+                                  errors)
+                    if isinstance(rec, dict) and rec.get("agree") is False:
+                        errors.append(f"{p}: backend decisions diverged "
+                                      f"from the serial baseline")
+        if "16384" not in data.get("backends", {}):
+            errors.append(f"{name}: backend sweep missing the "
+                          f"16384-instance point")
+        # staged-pipeline block: thread/process closed-loop runs plus
+        # the burst-wave overlap measurement
+        pipeline = data.get("pipeline", {})
+        for b in ("thread", "process"):
+            if b not in pipeline:
+                errors.append(f"{name}.pipeline: missing backend '{b}'")
+            for s, rec in pipeline.get(b, {}).items():
+                p = f"{name}.pipeline.{b}.{s}"
+                _check_record(rec, ROUTER_SCALE_PIPELINE_RECORD, p,
+                              errors)
+                if isinstance(rec, dict) and rec.get("agree") is False:
+                    errors.append(f"{p}: pipelined routing diverged "
+                                  f"from the sequential baseline")
+        if "overlap" not in pipeline:
+            errors.append(f"{name}.pipeline: missing 'overlap' block")
+        for b, rec in pipeline.get("overlap", {}).items():
+            p = f"{name}.pipeline.overlap.{b}"
+            _check_record(rec, ROUTER_SCALE_OVERLAP_RECORD, p, errors)
+            if isinstance(rec, dict) and rec.get("agree") is False:
+                errors.append(f"{p}: overlapped routing diverged from "
+                              f"the sequential baseline")
         _check_timing(data, name, errors, warnings)
     elif name == "capacity_knee.json":
         for key in ("offered_fracs", "policies", "degenerate"):

@@ -16,7 +16,12 @@ ids are assigned in push order.  Two runs of the same scenario produce
 bit-identical request logs (``tests/test_closed_loop.py``), and
 feedback-generated same-timestamp waves (API fan-out) coalesce through
 ``Router.route_batch`` exactly like pre-stamped waves — the batch path
-stays bit-identical to sequential routing.
+stays bit-identical to sequential routing.  Wave pipelining inherits
+unchanged from ``ClusterSim``: the routing pipeline's heap peek
+(``_peek_next_wave``) sees feedback-pushed arrivals the moment they
+enter the heap, and a feedback arrival that lands *after* a speculation
+was taken simply fails the pipeline's identity check — the speculative
+walk is discarded, never misapplied.
 
 ``ClosedLoopPDSim`` drives the PD-disaggregated simulator through the
 same session feedback: its arrival coalescing already accepts

@@ -104,6 +104,13 @@ class ClusterSim:
         self._seq = itertools.count()
         self.now = 0.0
         self.finished: List[Request] = []
+        # wave pipelining: let the router's pipeline peek the event heap
+        # for the likely next arrival wave, so asynchronous walk
+        # backends can start wave k+1's index walk while wave k's score
+        # stage runs on device (see repro.core.pipeline)
+        pipe = getattr(router, "pipeline", None)
+        if pipe is not None:
+            pipe.next_wave_hint = self._peek_next_wave
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload):
@@ -131,6 +138,28 @@ class ClusterSim:
             else:
                 self._on_step_end(payload)
         return self.finished
+
+    def _peek_next_wave(self) -> Optional[List[Request]]:
+        """The next arrival wave ``run`` would coalesce, or None if the
+        next event isn't an arrival.  Pops the consecutive same-time
+        arrival run off the heap top and pushes it straight back —
+        ``(t, seq)`` keys are unique, so the pop order the run loop
+        observes is unchanged (the internal array layout may differ).
+        A prediction can still be wrong (closed-loop feedback may push
+        earlier arrivals before the run reaches it); the pipeline
+        validates by request identity and discards mispredictions."""
+        ev = self._events
+        if not ev or ev[0][2] != "arrival":
+            return None
+        t = ev[0][0]
+        popped, wave = [], []
+        while ev and ev[0][0] == t and ev[0][2] == "arrival":
+            e = heapq.heappop(ev)
+            popped.append(e)
+            wave.append(e[3])
+        for e in popped:
+            heapq.heappush(ev, e)
+        return wave
 
     # ------------------------------------------------------------------
     def _on_arrivals(self, reqs: List[Request]):

@@ -2,7 +2,10 @@ from .types import DEFAULT_SLO, Request, SLO
 from .radix import RadixKVIndex, tokens_to_blocks
 from .indicators import (AggregatedPrefixIndex, IndicatorFactory,
                          InstanceState, shard_bounds)
+from .shard_backends import (ProcessBackend, SerialBackend, ShardBackend,
+                             ThreadBackend, make_backend)
 from .sharded_index import ShardedPrefixIndex
+from .pipeline import RoutingPipeline
 from .latency_model import EngineSpec, LatencyModel, spec_from_config
 from .policies import (DynamoPolicy, FilterKVPolicy, JSQPolicy,
                        LinearKVPolicy, LMetricPolicy, Policy,
@@ -15,6 +18,8 @@ from .router import Router
 __all__ = [
     "Request", "SLO", "DEFAULT_SLO", "RadixKVIndex", "tokens_to_blocks",
     "AggregatedPrefixIndex", "ShardedPrefixIndex", "shard_bounds",
+    "ShardBackend", "SerialBackend", "ThreadBackend", "ProcessBackend",
+    "make_backend", "RoutingPipeline",
     "IndicatorFactory",
     "InstanceState", "EngineSpec", "LatencyModel", "spec_from_config",
     "Policy", "JSQPolicy", "LinearKVPolicy", "DynamoPolicy",

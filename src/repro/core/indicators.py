@@ -720,15 +720,39 @@ class InstanceState:
         self._f.trim_routed(self.iid, now - window)
 
 
+class _WaveHandle:
+    """In-flight wave walk: everything ``wave_collect`` needs to finish
+    the host half of a batch-routing wave — the (possibly asynchronous)
+    aggregated-index walk plus the shared sort the pairwise-LCP
+    reconstruction reuses.  Produced by ``wave_submit``; the routing
+    pipeline holds one of these across a speculative prefetch."""
+
+    __slots__ = ("reqs", "uid", "chains", "order", "adj", "depth_u",
+                 "handle", "submit_ns")
+
+    def __init__(self, reqs, uid, chains, order, adj, depth_u, handle,
+                 submit_ns):
+        self.reqs = reqs
+        self.uid = uid
+        self.chains = chains
+        self.order = order
+        self.adj = adj
+        self.depth_u = depth_u
+        self.handle = handle
+        self.submit_ns = submit_ns
+
+
 class IndicatorFactory:
     _LOG_CAP0 = 256   # initial per-instance routed-window ring capacity
 
     def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
                  block_size: int = 64, exact_only: bool = False,
-                 n_shards: int = 1, parallel_walks: bool = False):
+                 n_shards: int = 1, parallel_walks: bool = False,
+                 walk_backend: Optional[str] = None):
         self.n = n_instances
         self.block_size = block_size
         self.exact_only = exact_only
+        self.walk_backend = walk_backend
         # shard count for the aggregated index AND the device-mirror
         # partition (same shard_bounds cut); 1 = the unsharded flat index
         self.n_shards = max(1, min(int(n_shards), n_instances))
@@ -757,16 +781,23 @@ class IndicatorFactory:
         self._log_p = np.zeros((n_instances, cap), dtype=np.int64)
         self._log_start = np.zeros(n_instances, dtype=np.int64)
         self._log_len = np.zeros(n_instances, dtype=np.int64)
+        # speculative-walk insert capture (see begin_insert_capture)
+        self._capture = None
+        self._capture_ev0 = 0
         # exact_only hit semantics (deepest snapshot boundary) cannot be
         # read off chain membership alone -> scalar per-instance fallback
         if exact_only:
             self._agg = None
-        elif self.n_shards == 1:
+        elif self.n_shards == 1 and walk_backend is None:
             self._agg = AggregatedPrefixIndex(n_instances)
         else:
+            # an explicit walk backend always builds the sharded index
+            # (even at one shard) so backend sweeps compare like with
+            # like; decisions are bit-identical either way
             from .sharded_index import ShardedPrefixIndex
             self._agg = ShardedPrefixIndex(n_instances, self.n_shards,
-                                           parallel=parallel_walks)
+                                           parallel=parallel_walks,
+                                           backend=walk_backend)
         self.instances = []
         for i in range(n_instances):
             kv = RadixKVIndex(block_size=block_size,
@@ -774,11 +805,16 @@ class IndicatorFactory:
                               exact_only=exact_only)
             if self._agg is not None:
                 kv.on_insert = (lambda blocks, _i=i:
-                                self._agg.add(_i, blocks))
+                                self._on_insert(_i, blocks))
                 kv.on_evict = (lambda path, _i=i:
                                self._on_evict(_i, path))
                 kv.on_clear = (lambda _i=i: self._on_clear(_i))
             self.instances.append(InstanceState(i, self, kv))
+
+    def _on_insert(self, iid: int, blocks):
+        self._agg.add(iid, blocks)
+        if self._capture is not None:
+            self._capture.append((iid, blocks))
 
     def _on_evict(self, iid: int, path):
         self.evictions += 1
@@ -787,6 +823,48 @@ class IndicatorFactory:
     def _on_clear(self, iid: int):
         self.evictions += 1
         self._agg.remove_instance(iid)
+
+    # ---- lifecycle -------------------------------------------------------
+    def close(self):
+        """Tear down the aggregated index's execution backend (thread
+        pools, process workers + their shared-memory segments).  Serial
+        factories are unaffected; any factory is safe to close twice.
+        ``with IndicatorFactory(...) as f:`` closes on exit."""
+        agg = self._agg
+        if agg is not None and hasattr(agg, "close"):
+            agg.close()
+
+    def __enter__(self) -> "IndicatorFactory":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ---- speculative-walk insert capture ---------------------------------
+    def begin_insert_capture(self):
+        """Start recording ``(iid, blocks)`` aggregate inserts.
+
+        The routing pipeline brackets a speculative next-wave walk with
+        begin/end: every chain inserted between the walk's snapshot and
+        its use is captured, and the walk result is patched with the
+        exact cross-wave LCP credit (tree hit depth is the max over
+        stored chains of the LCP, so ``max(old_depth, lcp(chain,
+        inserted))`` is the depth a fresh walk would return).  An
+        eviction or clear invalidates the capture — leaf removal cannot
+        be credited — and the pipeline falls back to a fresh walk,
+        mirroring ``Router.route_batch``'s mid-wave eviction guard.
+        """
+        self._capture = []
+        self._capture_ev0 = self.evictions
+
+    def end_insert_capture(self):
+        """Stop recording; returns ``(inserts, valid)`` where ``valid``
+        is False if any eviction/clear fired during the capture."""
+        cap, self._capture = self._capture, None
+        if cap is None:
+            return [], False
+        return cap, self.evictions == self._capture_ev0
 
     def __len__(self):
         return self.n
@@ -893,15 +971,13 @@ class IndicatorFactory:
         return self._dev
 
     # ---- wave inputs (host half of the batch routing path) ---------------
-    def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
-        """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.
-
-        One LCP-chained aggregated-index walk per *unique* prompt (waves
-        are bursty — duplicates and shared classes are the common case),
-        plus the pairwise block-chain LCP matrix the device loop needs
-        to credit intra-wave inserts.  The lexicographic sort feeding
-        the walk reuse is computed once and shared with the pairwise-LCP
-        reconstruction.  Requires the aggregated index."""
+    def wave_submit(self, reqs: Sequence[Request]) -> _WaveHandle:
+        """Start the walk stage for an arrival wave: dedup to unique
+        chains, compute the shared lexicographic sort, and submit one
+        LCP-chained aggregated-index walk per unique prompt.  On
+        asynchronous backends (thread/process shard fan-out) the walk
+        runs while the caller does other work; ``wave_collect`` blocks
+        for the result.  Requires the aggregated index."""
         k = len(reqs)
         uid = np.empty(k, dtype=np.int64)
         uniq: Dict[tuple, int] = {}
@@ -913,13 +989,53 @@ class IndicatorFactory:
             chains[u] = blocks
         t0 = time.perf_counter_ns()
         order, adj = _sorted_lcp(chains)
-        depth_u = self._agg.match_depths_many(chains, order=order, adj=adj)
-        self.walk_ns += time.perf_counter_ns() - t0
-        self.walks += len(chains)
-        lcp = (_pairwise_lcp(chains, order=order, adj=adj)
-               [np.ix_(uid, uid)] if with_lcp else None)
-        plen = np.fromiter((r.prompt_len for r in reqs), np.int64, k)
-        return depth_u[uid], lcp, plen
+        submit = getattr(self._agg, "submit_many", None)
+        if submit is not None:
+            depth_u, handle = submit(chains, order=order, adj=adj)
+        else:
+            depth_u = self._agg.match_depths_many(chains, order=order,
+                                                  adj=adj)
+            handle = None
+        return _WaveHandle(tuple(reqs), uid, chains, order, adj,
+                           depth_u, handle,
+                           time.perf_counter_ns() - t0)
+
+    def wave_collect(self, h: _WaveHandle, with_lcp: bool = True):
+        """Finish a submitted wave walk: wait for the depth matrix,
+        account walk telemetry (submit cost + blocked wait — the host
+        time the walk actually held up routing), and derive the
+        pairwise-LCP matrix from the shared sort."""
+        t0 = time.perf_counter_ns()
+        if h.handle is not None:
+            h.handle.wait()
+        self.walk_ns += h.submit_ns + (time.perf_counter_ns() - t0)
+        self.walks += len(h.chains)
+        k = len(h.reqs)
+        lcp = (_pairwise_lcp(h.chains, order=h.order, adj=h.adj)
+               [np.ix_(h.uid, h.uid)] if with_lcp else None)
+        plen = np.fromiter((r.prompt_len for r in h.reqs), np.int64, k)
+        return h.depth_u[h.uid], lcp, plen
+
+    def wave_discard(self, h: _WaveHandle):
+        """Wait out a submitted walk without consuming it (mispredicted
+        speculation).  The wait keeps asynchronous backends' protocol
+        in sync; nothing is added to walk telemetry — no routed wave
+        was served by this walk."""
+        if h.handle is not None:
+            h.handle.wait()
+
+    def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
+        """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.
+
+        One LCP-chained aggregated-index walk per *unique* prompt (waves
+        are bursty — duplicates and shared classes are the common case),
+        plus the pairwise block-chain LCP matrix the device loop needs
+        to credit intra-wave inserts.  The lexicographic sort feeding
+        the walk reuse is computed once and shared with the pairwise-LCP
+        reconstruction.  ``wave_submit`` + ``wave_collect`` in one
+        breath — the synchronous spelling of the walk stage."""
+        return self.wave_collect(self.wave_submit(reqs),
+                                 with_lcp=with_lcp)
 
     # ---- Preble routed-window ring buffers -------------------------------
     #: entries older than this are expendable when a ring fills: every

@@ -113,6 +113,46 @@ class Policy:
         """Static parameters for the device wave loop (hashable)."""
         return ()
 
+    def batch_supported(self, factory: IndicatorFactory) -> bool:
+        """Whether this policy can plan waves on device against this
+        factory — the predicate the router and the routing pipeline
+        branch on *before* any walk work is submitted.  Subclasses with
+        host-only modes (e.g. LMETRIC with a hotspot detector or the
+        "cost" load indicator) narrow it further."""
+        return self.batch_kind is not None and factory._agg is not None
+
+    def wave_inputs(self, reqs: Sequence[Request],
+                    factory: IndicatorFactory):
+        """The (depth, lcp, plen) triple the device plan consumes —
+        real aggregated-index walks for KV$-aware kinds, zero matrices
+        for KV$-unaware kinds (the kernel statically ignores hits)."""
+        if self.batch_needs_kv:
+            return factory.wave_inputs(reqs)
+        k = len(reqs)
+        return (np.zeros((k, factory.n), dtype=np.int64),
+                np.zeros((k, k), dtype=np.int64), self._plens(reqs))
+
+    def plan_submit(self, wave, factory: IndicatorFactory):
+        """Score-stage dispatch: start the fused device loop over
+        precomputed wave inputs; returns a ``route_score`` handle.  The
+        split from :meth:`plan_collect` is the pipeline's overlap
+        window — host work (speculative next-wave walks) runs between
+        dispatch and the blocking collect."""
+        from repro.kernels import route_score
+        depth, lcp, plen = wave
+        if lcp is None:
+            k = len(plen)
+            lcp = np.zeros((k, k), dtype=np.int64)
+        rbs, qbs, qpt, tt = factory.device_view()
+        return route_score.route_wave_submit(
+            self.batch_kind, self._batch_params(), factory.block_size,
+            rbs, qbs, qpt, tt, depth, lcp, plen, self._tie_n)
+
+    @staticmethod
+    def plan_collect(handle):
+        from repro.kernels import route_score
+        return route_score.route_wave_collect(handle)
+
     def plan_batch(self, reqs: Sequence[Request],
                    factory: IndicatorFactory, now: float):
         """Plan a wave's assignments on device; None => host fallback.
@@ -124,22 +164,10 @@ class Policy:
         is only *read* here — the router consumes one value per
         committed decision via ``_next_tie``.
         """
-        if self.batch_kind is None or factory._agg is None:
+        if not self.batch_supported(factory):
             return None
-        from repro.kernels import route_score
-        if self.batch_needs_kv:
-            depth, lcp, plen = factory.wave_inputs(reqs)
-        else:
-            # KV$-unaware kind: the kernel statically ignores hits —
-            # skip the walks and the LCP matrix
-            k = len(reqs)
-            depth = np.zeros((k, factory.n), dtype=np.int64)
-            lcp = np.zeros((k, k), dtype=np.int64)
-            plen = self._plens(reqs)
-        rbs, qbs, qpt, tt = factory.device_view()
-        return route_score.route_wave(
-            self.batch_kind, self._batch_params(), factory.block_size,
-            rbs, qbs, qpt, tt, depth, lcp, plen, self._tie_n)
+        return self.plan_collect(self.plan_submit(
+            self.wave_inputs(reqs, factory), factory))
 
     def scores_batch(self, reqs: Sequence[Request],
                      factory: IndicatorFactory, now: float) -> np.ndarray:
@@ -537,10 +565,10 @@ class LMetricPolicy(Policy):
     def _batch_params(self):
         return (self.kv_indicator, self.load_indicator)
 
-    def plan_batch(self, reqs, factory, now):
+    def batch_supported(self, factory):
         if self.detector is not None or self.load_indicator == "cost":
-            return None                      # documented host fallback
-        return super().plan_batch(reqs, factory, now)
+            return False                     # documented host fallback
+        return super().batch_supported(factory)
 
     def scores_batch(self, reqs, factory, now):
         hits = self._hits_matrix(reqs, factory)

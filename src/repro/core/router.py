@@ -22,6 +22,7 @@ import time
 from typing import List, Optional, Sequence
 
 from .indicators import IndicatorFactory
+from .pipeline import RoutingPipeline
 from .policies import Policy
 from .types import Request
 
@@ -66,15 +67,33 @@ class Router:
                  kv_capacity_tokens: int = 1 << 62, block_size: int = 64,
                  exact_only: bool = False,
                  insert_on_route: bool = True,
-                 n_shards: int = 1, parallel_walks: bool = False):
+                 n_shards: int = 1, parallel_walks: bool = False,
+                 walk_backend: Optional[str] = None,
+                 pipeline_overlap: Optional[bool] = None):
         self.policy = policy
         self.factory = IndicatorFactory(
             n_instances, kv_capacity_tokens=kv_capacity_tokens,
             block_size=block_size, exact_only=exact_only,
-            n_shards=n_shards, parallel_walks=parallel_walks)
+            n_shards=n_shards, parallel_walks=parallel_walks,
+            walk_backend=walk_backend)
         self.insert_on_route = insert_on_route
         self.decision_ns: List[int] = []
         self.routed = 0
+        self.pipeline = RoutingPipeline(self, overlap=pipeline_overlap)
+
+    # ---- lifecycle ----------------------------------------------------
+    def close(self):
+        """Tear down the factory's walk backend (thread pools, process
+        workers + their shared-memory segments).  Required for process
+        backends; a no-op for serial ones."""
+        self.pipeline.drop_prefetch()
+        self.factory.close()
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------------
     def route(self, req: Request, now: float) -> int:
@@ -101,50 +120,34 @@ class Router:
         ``route`` calls.  k <= 1 and host-fallback policies degenerate to
         the scalar path; a mid-wave eviction aborts the remaining plan.
 
-        The wave path is host-then-device: the factory computes one
-        aggregated-index walk per unique prompt (sharded factories
-        concatenate per-shard hit vectors — same full-width matrix) plus
-        the pairwise-LCP credit, the policy's ``plan_batch`` runs the
-        fused score→argmin→feedback loop on device over the factory's
-        device mirror (``device_view`` re-uploads only dirty shards),
-        and the plan commits here through the identical per-request
+        The wave path is the three-stage ``RoutingPipeline`` (walk →
+        score → commit, see ``repro.core.pipeline``): the factory
+        computes one aggregated-index walk per unique prompt (sharded
+        factories concatenate per-shard hit vectors — same full-width
+        matrix) plus the pairwise-LCP credit, the policy's score stage
+        runs the fused score→argmin→feedback loop on device over the
+        factory's device mirror (``device_view`` re-uploads only dirty
+        shards), and the plan commits through the identical per-request
         hooks — in-place numpy writes that re-flip the dirty flags.
         Device code never writes indicators back; the numpy arrays stay
         the single source of truth (the sync contract in
-        ``repro.core.indicators``).
+        ``repro.core.indicators``).  On asynchronous walk backends the
+        pipeline overlaps the *next* wave's walk with this wave's score
+        stage — still bit-identical (insert capture + LCP patch).
 
         ``decision_ns`` telemetry records the plan cost amortized over
         the wave (the same policy-decision cost ``route`` records)."""
         if not reqs:
             return []
-        if len(reqs) == 1 or not self.insert_on_route:
+        if (len(reqs) == 1 or not self.insert_on_route
+                or not self.policy.batch_supported(self.factory)):
             # without insert-on-route the plan's intra-wave LCP credit
-            # would model KV$ inserts that never happen — host path
+            # would model KV$ inserts that never happen — host path.
+            # any pending speculative walk targeted the wave path; the
+            # scalar path mutates the index without capture, so drop it
+            self.pipeline.drop_prefetch()
             return [self.route(r, now) for r in reqs]
-        t0 = time.perf_counter_ns()
-        plan = self.policy.plan_batch(reqs, self.factory, now)
-        if plan is None:
-            return [self.route(r, now) for r in reqs]
-        sel, _ = plan
-        per_req_ns = (time.perf_counter_ns() - t0) // len(reqs)
-
-        def commit(j, req):
-            iid = int(sel[j])
-            self.policy._next_tie()      # one tie value per commit
-            self.decision_ns.append(per_req_ns)
-            inst = self.factory[iid]
-            hit = inst.kv_hit(req, touch=True)
-            req.sched_to = iid
-            req.hit_tokens = hit
-            req.t_sched = now
-            inst.on_route(req, now, hit)
-            if self.insert_on_route:
-                inst.kv.insert(req.blocks)
-            self.routed += 1
-            return iid
-
-        return commit_wave_plan(self.factory, reqs, commit,
-                                lambda r: self.route(r, now))
+        return self.pipeline.run_wave(reqs, now)
 
     # ---- response piggyback hooks ------------------------------------
     def on_prefill_progress(self, iid: int, n_tokens: int):
@@ -196,11 +199,17 @@ class Router:
           an unsharded factory reports one pseudo-shard over [0, n),
         * ``max_shard_us`` — the slowest shard's mean walk cost: the
           critical path a parallel walk fan-out pays per wave (serial
-          fan-out pays the sum over shards instead).
+          fan-out pays the sum over shards instead),
+        * ``pipeline`` — per-stage wave timings from the routing
+          pipeline (``walk_us`` / ``score_us`` / ``commit_us`` mean
+          per-wave cost, wave/speculation counters, and the
+          ``overlap_fraction`` of speculative walk time hidden behind
+          the score stage — see ``RoutingPipeline.stage_stats``).
 
         ``bench_router_scale``'s sharded section records exactly this
         structure per (instance count, shard count) point."""
         shards = self.factory.shard_walk_stats()
         return {"mean_walk_us": self.factory.mean_walk_us(),
                 "max_shard_us": max(s["mean_walk_us"] for s in shards),
-                "shards": shards}
+                "shards": shards,
+                "pipeline": self.pipeline.stage_stats()}

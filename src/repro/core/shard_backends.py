@@ -1,0 +1,659 @@
+"""Pluggable execution backends for ``ShardedPrefixIndex``.
+
+PR 5 proved the deterministic-merge contract: each shard of the
+aggregated prefix index owns a contiguous instance-id range, mutations
+route to the owning shard only, and every query writes exactly the
+disjoint column slice ``out[:, lo_s:hi_s]`` it owns — so the merged
+result is independent of *where* and *in what order* the per-shard work
+runs.  This module turns that contract into an explicit **backend**
+interface with three implementations:
+
+``SerialBackend``
+    One Python object per shard, walked in-line.  The reference
+    execution; zero concurrency, zero overhead.
+
+``ThreadBackend``
+    The PR-5 thread pool, preserved: one ``ThreadPoolExecutor`` task
+    per shard per query.  Python-level walk steps hold the GIL, so
+    threads mostly interleave; the numpy word ops overlap.  Walk
+    submission is asynchronous (``submit_walk_many`` returns a
+    :class:`WalkHandle`), which is what the routing pipeline's wave
+    overlap rides on.  Mutations drain in-flight walks first so a
+    speculative walk never observes a torn tree.
+
+``ProcessBackend``
+    One **worker process per shard** (``multiprocessing`` spawn
+    context — fork would duplicate jax runtime state).  Each worker
+    owns a complete flat index whose ``(capacity, ceil(n/64))`` uint64
+    bitset matrix lives in a ``multiprocessing.shared_memory`` segment
+    (:class:`_ShmPrefixIndex`); walks escape the GIL entirely and run
+    in true parallel.  Mutations are fire-and-forget messages routed to
+    the owning worker's pipe; per-worker FIFO ordering makes a walk
+    submitted before a mutation observe exactly the pre-mutation tree —
+    the same snapshot semantics the in-process backends give.  Query
+    output crosses back through a persistent shared-memory scratch each
+    worker writes its column slice into (the column-slice merge,
+    verbatim); the segment is reused across walks and grown on demand,
+    so the walk hot path pays no per-call segment create/attach.
+
+Shared-memory lifetime (the third architecture contract, see
+``docs/ARCHITECTURE.md``): every segment — per-shard mask matrices,
+the per-backend telemetry block, the walk output scratch — is closed
+AND unlinked by the owner on ``close()`` and on the error paths
+(worker exception, parent timeout, mid-query failure).  Leaks are
+pinned by ``tests/test_shard_backends.py`` against ``/dev/shm``.
+
+Worker protocol (one duplex pipe per shard)::
+
+    ("add", li, blocks)              no ack   — routed mutation
+    ("remove_leaf", li, path)        no ack
+    ("remove_instance", li)          no ack
+    ("walk", name, n, blocks)        ("ok",)  — match_depths slice
+    ("walk_many", name, shape,
+     chains, order, adj)             ("ok",)  — match_depths_many slice
+    ("nodes",)                       ("ok", n_nodes)
+    ("ping",)                        ("ok",)
+    ("boom",)                        ("err", …) — test hook (mid-query
+                                     failure injection)
+    ("close",)                       ("bye",)  — unlink masks and exit
+
+Worker exceptions answer ``("err", repr)`` (the parent raises and tears
+the backend down); every parent receive polls with a timeout so a hung
+worker raises instead of deadlocking the router.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .indicators import AggregatedPrefixIndex, _WORD, shard_bounds
+
+#: parent-side receive timeout (seconds) — a worker that cannot answer
+#: within this is treated as dead and the backend tears down
+_POLL_TIMEOUT = 60.0
+
+
+class WalkHandle:
+    """Completion token for a submitted fan-out walk.
+
+    ``wait()`` blocks until every shard has written its column slice
+    (propagating worker errors); calling it again is a no-op.  Serial
+    walks return an already-complete handle.
+    """
+
+    __slots__ = ("_wait",)
+
+    def __init__(self, wait=None):
+        self._wait = wait
+
+    def wait(self):
+        if self._wait is not None:
+            w, self._wait = self._wait, None
+            w()
+
+
+class ShardBackend:
+    """Execution strategy for a set of prefix-index shards.
+
+    Mutations take **local** instance ids (the owning shard ``s`` is
+    resolved by the caller); walks fan out to every shard, each writing
+    only the disjoint ``out`` column slice it owns.  ``async_walks``
+    advertises whether ``submit_walk_many`` returns before the walk
+    completes — the routing pipeline only speculates on backends where
+    waiting can overlap useful host work.
+    """
+
+    name = "base"
+    async_walks = False
+    #: in-process backends expose their shard objects; process-backed
+    #: shards live in worker address spaces and report None
+    shards: Optional[List[AggregatedPrefixIndex]] = None
+
+    def __init__(self, n_instances: int, n_shards: int,
+                 capacity: int = 256):
+        self.n = n_instances
+        self.n_shards = n_shards
+        self.bounds = shard_bounds(n_instances, n_shards)
+        self.capacity = capacity
+
+    # ---- mutation (local ids, owner resolved by the caller) -----------
+    def mutate(self, s: int, op: str, *args):
+        raise NotImplementedError
+
+    # ---- queries ------------------------------------------------------
+    def submit_walk(self, blocks: Sequence[int],
+                    out: np.ndarray) -> WalkHandle:
+        raise NotImplementedError
+
+    def submit_walk_many(self, chains, order, adj,
+                         out: np.ndarray) -> WalkHandle:
+        raise NotImplementedError
+
+    def n_nodes(self) -> int:
+        raise NotImplementedError
+
+    # ---- telemetry ----------------------------------------------------
+    @property
+    def shard_walk_ns(self) -> np.ndarray:
+        raise NotImplementedError
+
+    @property
+    def shard_walks(self) -> np.ndarray:
+        raise NotImplementedError
+
+    # ---- lifecycle ----------------------------------------------------
+    def close(self):
+        raise NotImplementedError
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+class _InProcessBackend(ShardBackend):
+    """Shared machinery for the serial and thread backends: a list of
+    in-process flat indexes plus numpy telemetry accumulators."""
+
+    def __init__(self, n_instances, n_shards, capacity=256):
+        super().__init__(n_instances, n_shards, capacity)
+        self.shards = [AggregatedPrefixIndex(hi - lo, capacity=capacity)
+                       for lo, hi in self.bounds]
+        self._walk_ns = np.zeros(n_shards, dtype=np.int64)
+        self._walks = np.zeros(n_shards, dtype=np.int64)
+
+    @property
+    def shard_walk_ns(self):
+        return self._walk_ns
+
+    @property
+    def shard_walks(self):
+        return self._walks
+
+    def mutate(self, s, op, *args):
+        getattr(self.shards[s], op)(*args)
+
+    def n_nodes(self):
+        return sum(sh.n_nodes for sh in self.shards)
+
+    def _walk_task(self, s, lo, hi, blocks, out):
+        t0 = time.perf_counter_ns()
+        self.shards[s].match_depths(blocks, out=out[lo:hi])
+        self._walk_ns[s] += time.perf_counter_ns() - t0
+        self._walks[s] += 1
+
+    def _walk_many_task(self, s, lo, hi, chains, order, adj, out):
+        t0 = time.perf_counter_ns()
+        self.shards[s].match_depths_many(chains, order=order, adj=adj,
+                                         out=out[:, lo:hi])
+        self._walk_ns[s] += time.perf_counter_ns() - t0
+        self._walks[s] += len(chains)
+
+    def close(self):
+        pass
+
+
+class SerialBackend(_InProcessBackend):
+    """In-line fan-out — one shard after another on the calling thread.
+    The reference execution every other backend must match bit-for-bit."""
+
+    name = "serial"
+
+    def submit_walk(self, blocks, out):
+        for s, (lo, hi) in enumerate(self.bounds):
+            self._walk_task(s, lo, hi, blocks, out)
+        return WalkHandle()
+
+    def submit_walk_many(self, chains, order, adj, out):
+        for s, (lo, hi) in enumerate(self.bounds):
+            self._walk_many_task(s, lo, hi, chains, order, adj, out)
+        return WalkHandle()
+
+
+class ThreadBackend(_InProcessBackend):
+    """Thread-pool fan-out (the PR-5 ``parallel=True`` pool, preserved).
+
+    Walk submission is asynchronous; ``mutate`` drains in-flight walks
+    first so a speculative walk submitted by the routing pipeline never
+    races the commit stage's tree mutations — the drain makes the walk
+    complete *before* the mutation, which is exactly the snapshot the
+    insert-capture patch assumes.
+    """
+
+    name = "thread"
+    async_walks = True
+
+    def __init__(self, n_instances, n_shards, capacity=256):
+        super().__init__(n_instances, n_shards, capacity)
+        self._pool = None
+        self._inflight: List = []
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.n_shards,
+                thread_name_prefix="prefix-shard")
+        return self._pool
+
+    def _drain(self):
+        if self._inflight:
+            pending, self._inflight = self._inflight, []
+            for f in pending:
+                f.result()
+
+    def mutate(self, s, op, *args):
+        self._drain()
+        getattr(self.shards[s], op)(*args)
+
+    def _submit(self, tasks):
+        pool = self._ensure_pool()
+        futures = [pool.submit(t) for t in tasks]
+        self._inflight.extend(futures)
+
+        def wait():
+            for f in futures:
+                f.result()
+            self._inflight = [f for f in self._inflight
+                              if f not in futures]
+        return WalkHandle(wait)
+
+    def submit_walk(self, blocks, out):
+        return self._submit([
+            (lambda s=s, lo=lo, hi=hi:
+             self._walk_task(s, lo, hi, blocks, out))
+            for s, (lo, hi) in enumerate(self.bounds)])
+
+    def submit_walk_many(self, chains, order, adj, out):
+        return self._submit([
+            (lambda s=s, lo=lo, hi=hi:
+             self._walk_many_task(s, lo, hi, chains, order, adj, out))
+            for s, (lo, hi) in enumerate(self.bounds)])
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+        self._inflight = []
+
+
+# ---------------------------------------------------------------------------
+# process backend: shared-memory shards in spawn workers
+# ---------------------------------------------------------------------------
+class _ShmPrefixIndex(AggregatedPrefixIndex):
+    """Flat index whose bitset matrix lives in a SharedMemory segment.
+
+    The ``(capacity, ceil(n/64))`` uint64 layout is one contiguous
+    array, so moving it into shared memory is a buffer swap — every
+    mask op, scatter, and the walk hot path are unchanged.  ``_grow``
+    allocates a doubled segment and unlinks the old one; ``close``
+    detaches and unlinks (idempotent), and the worker calls it from a
+    ``finally`` so segments never outlive the worker.
+    """
+
+    __slots__ = ("_shm",)
+
+    def __init__(self, n_instances: int, capacity: int = 256):
+        self._shm = None
+        super().__init__(n_instances, capacity=capacity)
+        self._move_masks()
+
+    def _move_masks(self):
+        from multiprocessing import shared_memory
+        src, old = self._masks, self._shm
+        shm = shared_memory.SharedMemory(create=True,
+                                         size=max(src.nbytes, 8))
+        arr = np.ndarray(src.shape, dtype=_WORD, buffer=shm.buf)
+        arr[:] = src
+        self._masks = arr
+        self._shm = shm
+        if old is not None:
+            old.close()
+            old.unlink()
+
+    def _grow(self):
+        super()._grow()          # plain numpy double-and-copy
+        self._move_masks()       # …then back into a fresh segment
+
+    @property
+    def shm_name(self) -> str:
+        return self._shm.name
+
+    def close(self):
+        shm, self._shm = self._shm, None
+        if shm is None:
+            return
+        # detach the ndarray before closing or SharedMemory raises
+        # BufferError on the exported buffer
+        self._masks = np.zeros((1, self.words), dtype=_WORD)
+        shm.close()
+        shm.unlink()
+
+
+def _shard_worker(conn, lo: int, hi: int, capacity: int,
+                  telem_name: str, row: int, n_shards: int):
+    """Spawn entry point: serve one shard's command loop.
+
+    Owns a :class:`_ShmPrefixIndex` over the local instance range
+    ``[lo, hi)`` and attaches to the backend's telemetry block.  The
+    ``finally`` unlinks the mask segment on *every* exit path — clean
+    close, EOF (parent died), or an escaping exception.
+    """
+    from multiprocessing import shared_memory
+    idx = _ShmPrefixIndex(hi - lo, capacity=capacity)
+    telem_shm = shared_memory.SharedMemory(name=telem_name)
+    telem = np.ndarray((n_shards, 2), dtype=np.int64,
+                       buffer=telem_shm.buf)
+    # the parent reuses one persistent output scratch across walks
+    # (grown on demand, new name); cache the attachment so the walk hot
+    # path pays no per-call SharedMemory open
+    scratch = {}
+
+    def _attach(name):
+        shm = scratch.get(name)
+        if shm is None:
+            for stale in list(scratch):     # grown → old segment is gone
+                scratch.pop(stale).close()
+            shm = shared_memory.SharedMemory(name=name)
+            scratch[name] = shm
+        return shm
+
+    try:
+        conn.send(("ready", idx.shm_name))
+        while True:
+            try:
+                msg = conn.recv()
+            except EOFError:
+                break
+            cmd = msg[0]
+            try:
+                if cmd == "add":
+                    idx.add(msg[1], msg[2])
+                elif cmd == "remove_leaf":
+                    idx.remove_leaf(msg[1], msg[2])
+                elif cmd == "remove_instance":
+                    idx.remove_instance(msg[1])
+                elif cmd == "walk":
+                    _, name, n, blocks = msg
+                    t0 = time.perf_counter_ns()
+                    out = np.ndarray((n,), dtype=np.int64,
+                                     buffer=_attach(name).buf)
+                    idx.match_depths(blocks, out=out[lo:hi])
+                    del out
+                    telem[row, 0] += time.perf_counter_ns() - t0
+                    telem[row, 1] += 1
+                    conn.send(("ok",))
+                elif cmd == "walk_many":
+                    _, name, shape, chains, order, adj = msg
+                    t0 = time.perf_counter_ns()
+                    out = np.ndarray(shape, dtype=np.int64,
+                                     buffer=_attach(name).buf)
+                    idx.match_depths_many(chains, order=order,
+                                          adj=adj,
+                                          out=out[:, lo:hi])
+                    del out
+                    telem[row, 0] += time.perf_counter_ns() - t0
+                    telem[row, 1] += len(chains)
+                    conn.send(("ok",))
+                elif cmd == "nodes":
+                    conn.send(("ok", idx.n_nodes))
+                elif cmd == "ping":
+                    conn.send(("ok",))
+                elif cmd == "boom":
+                    raise RuntimeError("injected shard-worker failure")
+                elif cmd == "close":
+                    conn.send(("bye",))
+                    break
+                else:
+                    raise ValueError(f"unknown shard command {cmd!r}")
+            except Exception as e:  # answer, let the parent decide
+                try:
+                    conn.send(("err", repr(e)))
+                except OSError:
+                    break
+    finally:
+        idx.close()
+        for shm in scratch.values():
+            shm.close()
+        del telem
+        telem_shm.close()
+        conn.close()
+
+
+class ProcessBackend(ShardBackend):
+    """One spawn worker per shard; masks in shared memory, walks in
+    true process parallelism (no GIL on the walk's Python hot path).
+
+    Mutations are fire-and-forget pipe messages to the owning worker;
+    per-worker FIFO ordering sequences them against walks exactly like
+    serial execution.  Walk output crosses back through a persistent
+    SharedMemory scratch (each worker writes its column slice — the
+    deterministic merge; one walk in flight at a time); per-shard walk
+    telemetry accumulates in a
+    ``(S, 2)`` int64 shared block the parent reads without a round
+    trip.  Every parent receive polls with a timeout; any worker error
+    or timeout tears the whole backend down (segments unlinked,
+    workers joined or terminated).
+    """
+
+    name = "process"
+    async_walks = True
+
+    def __init__(self, n_instances, n_shards, capacity=256):
+        super().__init__(n_instances, n_shards, capacity)
+        import multiprocessing as mp
+        from multiprocessing import shared_memory
+        self._closed = False
+        self._conns: List = []
+        self._procs: List = []
+        self._mask_names: List[str] = []
+        # persistent walk-output scratch, grown on demand; one walk in
+        # flight at a time (submitters drain the previous one first)
+        self._out_shm = None
+        self._out_cap = 0
+        self._pending: Optional[WalkHandle] = None
+        ctx = mp.get_context("spawn")   # fork-safety vs the jax runtime
+        self._telem_shm = shared_memory.SharedMemory(
+            create=True, size=n_shards * 2 * 8)
+        self._telem = np.ndarray((n_shards, 2), dtype=np.int64,
+                                 buffer=self._telem_shm.buf)
+        self._telem[:] = 0
+        try:
+            for s, (lo, hi) in enumerate(self.bounds):
+                parent, child = ctx.Pipe()
+                p = ctx.Process(
+                    target=_shard_worker,
+                    args=(child, lo, hi, capacity,
+                          self._telem_shm.name, s, n_shards),
+                    daemon=True, name=f"prefix-shard-{s}")
+                p.start()
+                child.close()
+                self._conns.append(parent)
+                self._procs.append(p)
+            for conn in self._conns:
+                msg = self._recv(conn)
+                self._mask_names.append(msg[1])
+        except BaseException:
+            self.close()
+            raise
+
+    # ---- plumbing -----------------------------------------------------
+    def _recv(self, conn):
+        """Receive one worker message; timeout, EOF, and ``err``
+        answers tear the backend down before raising."""
+        if not conn.poll(_POLL_TIMEOUT):
+            self.close()
+            raise RuntimeError("prefix-shard worker timed out")
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            self.close()
+            raise RuntimeError("prefix-shard worker died")
+        if msg[0] == "err":
+            self.close()
+            raise RuntimeError(f"prefix-shard worker failed: {msg[1]}")
+        return msg
+
+    def _send(self, s, msg):
+        try:
+            self._conns[s].send(msg)
+        except (OSError, ValueError):
+            self.close()
+            raise RuntimeError("prefix-shard worker pipe is closed")
+
+    # ---- mutation -----------------------------------------------------
+    def mutate(self, s, op, *args):
+        self._send(s, (op,) + args)
+
+    # ---- queries ------------------------------------------------------
+    def _drain_pending(self):
+        """Only one walk may be in flight: its per-worker acks would
+        otherwise interleave with the next command's answers, and the
+        shared output scratch is a single buffer."""
+        pending, self._pending = self._pending, None
+        if pending is not None:
+            pending.wait()
+
+    def _scratch(self, shape):
+        """The persistent output segment, grown (fresh name — workers
+        re-attach lazily) when the wave outgrows it."""
+        from multiprocessing import shared_memory
+        size = 8
+        for d in shape:
+            size *= d
+        if self._out_shm is None or size > self._out_cap:
+            self._drop_scratch()
+            cap = 1 << (max(size, 4096) - 1).bit_length()
+            self._out_shm = shared_memory.SharedMemory(create=True,
+                                                       size=cap)
+            self._out_cap = cap
+        return self._out_shm
+
+    def _drop_scratch(self):
+        shm, self._out_shm = self._out_shm, None
+        self._out_cap = 0
+        if shm is not None:
+            shm.close()
+            try:
+                shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def _collect(self, shm, shape, out):
+        def wait():
+            for conn in self._conns:
+                self._recv(conn)
+            buf = np.ndarray(shape, dtype=np.int64, buffer=shm.buf)
+            np.copyto(out, buf)
+            del buf
+        handle = WalkHandle(wait)
+        self._pending = handle
+        return handle
+
+    def submit_walk(self, blocks, out):
+        self._drain_pending()
+        shm = self._scratch((self.n,))
+        for s in range(self.n_shards):
+            self._send(s, ("walk", shm.name, self.n, blocks))
+        return self._collect(shm, (self.n,), out)
+
+    def submit_walk_many(self, chains, order, adj, out):
+        self._drain_pending()
+        shape = out.shape
+        shm = self._scratch(shape)
+        msg = ("walk_many", shm.name, shape, tuple(chains),
+               list(order), np.asarray(adj))
+        for s in range(self.n_shards):
+            self._send(s, msg)
+        return self._collect(shm, shape, out)
+
+    def n_nodes(self):
+        self._drain_pending()
+        total = 0
+        for s in range(self.n_shards):
+            self._send(s, ("nodes",))
+        for conn in self._conns:
+            total += self._recv(conn)[1]
+        return total
+
+    # ---- telemetry ----------------------------------------------------
+    @property
+    def shard_walk_ns(self):
+        return np.asarray(self._telem[:, 0])
+
+    @property
+    def shard_walks(self):
+        return np.asarray(self._telem[:, 1])
+
+    # ---- test hook ----------------------------------------------------
+    def inject_failure(self, s: int = 0):
+        """Make shard ``s``'s worker answer the next receive with an
+        error — the mid-query failure path the cleanup tests pin."""
+        self._send(s, ("boom",))
+
+    # ---- lifecycle ----------------------------------------------------
+    def close(self):
+        if getattr(self, "_closed", True):
+            return
+        self._closed = True
+        from multiprocessing import shared_memory
+        self._pending = None
+        self._drop_scratch()
+        for conn in self._conns:
+            try:
+                conn.send(("close",))
+            except (OSError, ValueError):
+                pass
+            # drain stale acks until the goodbye (or give up quickly)
+            try:
+                deadline = time.monotonic() + 5.0
+                while conn.poll(max(deadline - time.monotonic(), 0)):
+                    if conn.recv()[0] == "bye":
+                        break
+            except (EOFError, OSError):
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for i, p in enumerate(self._procs):
+            p.join(timeout=5.0)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+                # the worker's finally never ran — unlink its masks
+                if i < len(self._mask_names):
+                    try:
+                        seg = shared_memory.SharedMemory(
+                            name=self._mask_names[i])
+                        seg.close()
+                        seg.unlink()
+                    except FileNotFoundError:
+                        pass
+        # freeze telemetry into a plain array, then drop the segment
+        final = np.array(self._telem)
+        self._telem = final
+        self._telem_shm.close()
+        try:
+            self._telem_shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+_BACKENDS = {"serial": SerialBackend, "thread": ThreadBackend,
+             "process": ProcessBackend}
+
+
+def make_backend(name: str, n_instances: int, n_shards: int,
+                 capacity: int = 256) -> ShardBackend:
+    """Build a backend by name (``serial`` / ``thread`` / ``process``)."""
+    try:
+        cls = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown shard backend {name!r}; expected one of "
+            f"{sorted(_BACKENDS)}") from None
+    return cls(n_instances, n_shards, capacity=capacity)

@@ -5,13 +5,12 @@ The flat bitset index (``repro.core.indicators.AggregatedPrefixIndex``)
 removed the bigint-mask ceiling, but it is still *one* object: every
 walk touches one ``(capacity, ceil(n/64))`` bitset matrix, every insert
 mutates one free list, and a router tier that wants to spread the host
-half of routing across worker threads (or, eventually, worker
-processes — the deployment shape of Intelligent-Router-style balancer
-tiers) has nothing to partition.  ``ShardedPrefixIndex`` is that
-partition: the instance-id space ``[0, n)`` splits into ``S``
-contiguous ranges, and each range gets its **own complete flat index**
-— own node arrays, own child dicts, own free list, own walk-state
-reuse — over only its local instances.
+half of routing across worker threads or processes has nothing to
+partition.  ``ShardedPrefixIndex`` is that partition: the instance-id
+space ``[0, n)`` splits into ``S`` contiguous ranges, and each range
+gets its **own complete flat index** — own node arrays, own child
+dicts, own free list, own walk-state reuse — over only its local
+instances.
 
 Why rows shard cleanly
 ----------------------
@@ -38,30 +37,32 @@ Each shard keeps the two invariants of the flat index locally:
   array are computed **once** by the caller and shared across all
   shards (and with the pairwise-LCP reconstruction).
 
-Parallel fan-out
-----------------
-``parallel=True`` fans ``match_depths`` / ``match_depths_many`` over a
-thread pool (one task per shard).  The merge is deterministic by
-construction: shard ``s`` writes only the disjoint column slice
-``out[:, lo_s:hi_s]`` it owns, so the result is independent of task
-completion order — there is no reduction step to order.  Python-level
-walks hold the GIL, so threads mostly interleave rather than overlap on
-CPython; the flag exists to (a) pin the deterministic-merge contract
-for a future process-per-shard router tier and (b) let the numpy word
-ops (which release the GIL) overlap.  Telemetry (``shard_walk_ns`` /
-``shard_walks``) is per-shard either way, so the max-shard critical
-path — the wave latency a parallel tier would actually pay — is
-measurable from ``Router.walk_telemetry``.
+Execution backends
+------------------
+*Where* the per-shard work runs is a pluggable ``ShardBackend``
+(``repro.core.shard_backends``): ``serial`` (in-line fan-out, the
+reference), ``thread`` (the PR-5 pool, ``parallel=True`` maps here),
+and ``process`` (one spawn worker per shard, masks in
+``multiprocessing.shared_memory`` — walks escape the GIL).  The merge
+is deterministic by construction regardless of backend: shard ``s``
+writes only the disjoint column slice ``out[:, lo_s:hi_s]`` it owns,
+so the result is independent of task completion order — there is no
+reduction step to order.  Asynchronous backends additionally expose
+``submit_many`` → :class:`repro.core.shard_backends.WalkHandle`, the
+hook the routing pipeline's wave overlap rides on.  Telemetry
+(``shard_walk_ns`` / ``shard_walks``) is per-shard for every backend,
+so the max-shard critical path — the wave latency a parallel tier
+actually pays — is measurable from ``Router.walk_telemetry``.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .indicators import (AggregatedPrefixIndex, _sorted_lcp,
                          shard_bounds, shard_owner)
+from .shard_backends import ShardBackend, WalkHandle, make_backend
 
 
 class ShardedPrefixIndex:
@@ -74,13 +75,15 @@ class ShardedPrefixIndex:
     full-width ``(n,)`` / ``(k, n)`` depth arrays).  Mutations route to
     the owning shard only; queries fan out to all shards, each writing
     its own column slice of the output.
+
+    ``backend`` selects the execution strategy (``"serial"`` /
+    ``"thread"`` / ``"process"`` or a prebuilt ``ShardBackend``);
+    ``parallel=True`` is the PR-5 spelling of ``backend="thread"``.
     """
 
-    __slots__ = ("n", "n_shards", "bounds", "shards", "parallel",
-                 "shard_walk_ns", "shard_walks", "_owner", "_pool")
-
     def __init__(self, n_instances: int, n_shards: int,
-                 capacity: int = 256, parallel: bool = False):
+                 capacity: int = 256, parallel: bool = False,
+                 backend=None):
         if not 1 <= n_shards <= n_instances:
             raise ValueError(
                 f"n_shards must be in [1, n_instances]: {n_shards} vs "
@@ -88,20 +91,37 @@ class ShardedPrefixIndex:
         self.n = n_instances
         self.n_shards = n_shards
         self.bounds = shard_bounds(n_instances, n_shards)
-        self.shards: List[AggregatedPrefixIndex] = [
-            AggregatedPrefixIndex(hi - lo, capacity=capacity)
-            for lo, hi in self.bounds]
         self._owner = shard_owner(n_instances, n_shards)
-        self.parallel = bool(parallel)
-        self._pool = None
-        # per-shard host-walk telemetry (see Router.walk_telemetry)
-        self.shard_walk_ns = np.zeros(n_shards, dtype=np.int64)
-        self.shard_walks = np.zeros(n_shards, dtype=np.int64)
+        if backend is None:
+            backend = "thread" if parallel else "serial"
+        if isinstance(backend, str):
+            backend = make_backend(backend, n_instances, n_shards,
+                                   capacity=capacity)
+        self.backend: ShardBackend = backend
+
+    @property
+    def parallel(self) -> bool:
+        """True when fan-out runs concurrently (thread/process)."""
+        return self.backend.name != "serial"
+
+    @property
+    def shards(self) -> Optional[List[AggregatedPrefixIndex]]:
+        """The in-process shard objects (None for process backends —
+        those shards live in worker address spaces)."""
+        return self.backend.shards
+
+    @property
+    def shard_walk_ns(self) -> np.ndarray:
+        return self.backend.shard_walk_ns
+
+    @property
+    def shard_walks(self) -> np.ndarray:
+        return self.backend.shard_walks
 
     @property
     def n_nodes(self) -> int:
         """Live nodes across all shards (roots excluded)."""
-        return sum(sh.n_nodes for sh in self.shards)
+        return self.backend.n_nodes()
 
     # ---- mutation (RadixKVIndex callback protocol, global ids) --------
     def _local(self, iid: int) -> Tuple[int, int]:
@@ -110,51 +130,24 @@ class ShardedPrefixIndex:
 
     def add(self, iid: int, blocks: Sequence[int]):
         s, li = self._local(iid)
-        self.shards[s].add(li, blocks)
+        self.backend.mutate(s, "add", li, blocks)
 
     def remove_leaf(self, iid: int, path: Sequence[int]):
         s, li = self._local(iid)
-        self.shards[s].remove_leaf(li, path)
+        self.backend.mutate(s, "remove_leaf", li, path)
 
     def remove_instance(self, iid: int):
         s, li = self._local(iid)
-        self.shards[s].remove_instance(li)
+        self.backend.mutate(s, "remove_instance", li)
 
     # ---- queries ------------------------------------------------------
-    def _fan(self, tasks):
-        """Run one task per shard; each task writes only the disjoint
-        output slice its shard owns, so serial and pooled execution are
-        indistinguishable (the deterministic-merge contract)."""
-        if self.parallel and self.n_shards > 1:
-            if self._pool is None:
-                from concurrent.futures import ThreadPoolExecutor
-                self._pool = ThreadPoolExecutor(
-                    max_workers=self.n_shards,
-                    thread_name_prefix="prefix-shard")
-            # pool.map preserves submission order only for the *results*
-            # (all None here); output placement never depends on it
-            list(self._pool.map(lambda f: f(), tasks))
-        else:
-            for t in tasks:
-                t()
-
     def match_depths(self, blocks: Sequence[int],
                      out: Optional[np.ndarray] = None) -> np.ndarray:
         """Full-width per-instance cached-prefix depths for ``blocks``:
         the concatenation of every shard's local depth vector."""
         if out is None:
             out = np.zeros(self.n, dtype=np.int64)
-
-        def mk(s, lo, hi):
-            def run():
-                t0 = time.perf_counter_ns()
-                self.shards[s].match_depths(blocks, out=out[lo:hi])
-                self.shard_walk_ns[s] += time.perf_counter_ns() - t0
-                self.shard_walks[s] += 1
-            return run
-
-        self._fan([mk(s, lo, hi)
-                   for s, (lo, hi) in enumerate(self.bounds)])
+        self.backend.submit_walk(blocks, out).wait()
         return out
 
     def match_depths_many(self, chains: Sequence[Sequence[int]],
@@ -165,38 +158,39 @@ class ShardedPrefixIndex:
         into the full ``(k, n)`` matrix.  The lexicographic sort + the
         adjacent-LCP array are computed once here (or passed in from
         ``_sorted_lcp``) and shared by every shard's walk reuse."""
+        out, handle = self.submit_many(chains, order=order, adj=adj)
+        handle.wait()
+        return out
+
+    def submit_many(self, chains: Sequence[Sequence[int]],
+                    order: Optional[Sequence[int]] = None,
+                    adj: Optional[np.ndarray] = None
+                    ) -> Tuple[np.ndarray, WalkHandle]:
+        """Asynchronous ``match_depths_many``: returns the ``(k, n)``
+        output matrix plus a :class:`WalkHandle`; the matrix is valid
+        only after ``wait()``.  On asynchronous backends the walk runs
+        while the caller does other host/device work — the routing
+        pipeline's wave-overlap hook."""
         k = len(chains)
         out = np.zeros((k, self.n), dtype=np.int64)
         if k == 0:
-            return out
+            return out, WalkHandle()
         if order is None:
             order, adj = _sorted_lcp(chains)
-
-        def mk(s, lo, hi):
-            def run():
-                t0 = time.perf_counter_ns()
-                self.shards[s].match_depths_many(
-                    chains, order=order, adj=adj, out=out[:, lo:hi])
-                self.shard_walk_ns[s] += time.perf_counter_ns() - t0
-                self.shard_walks[s] += k
-            return run
-
-        self._fan([mk(s, lo, hi)
-                   for s, (lo, hi) in enumerate(self.bounds)])
-        return out
+        return out, self.backend.submit_walk_many(chains, order, adj,
+                                                  out)
 
     # ---- lifecycle ----------------------------------------------------
     def close(self):
-        """Shut down the parallel fan-out pool (no-op when serial or
-        never queried in parallel).  The index stays usable — queries
-        fall back to serial fan-out, or recreate the pool on demand."""
-        if self._pool is not None:
-            self._pool.shutdown(wait=False)
-            self._pool = None
+        """Tear down the backend: thread pools shut down, process
+        workers exit and unlink their shared-memory segments.  Serial
+        indexes stay usable; concurrent backends must not be queried
+        after close."""
+        self.backend.close()
 
     def __del__(self):
-        # bound worker-thread lifetime to the index's: a sweep that
-        # rebuilds parallel factories must not accumulate idle pools
+        # bound worker lifetime to the index's: a sweep that rebuilds
+        # parallel factories must not accumulate idle pools/processes
         try:
             self.close()
         except Exception:
@@ -208,8 +202,10 @@ class ShardedPrefixIndex:
         mean per-walk host cost.  The max over shards of
         ``mean_walk_us`` is the critical path a parallel router tier
         pays per wave (serial fan-out pays the sum)."""
+        walk_ns = self.shard_walk_ns
+        walks = self.shard_walks
         return [{"shard": s, "lo": lo, "hi": hi,
-                 "walks": int(self.shard_walks[s]),
-                 "mean_walk_us": float(self.shard_walk_ns[s])
-                 / max(int(self.shard_walks[s]), 1) / 1e3}
+                 "walks": int(walks[s]),
+                 "mean_walk_us": float(walk_ns[s])
+                 / max(int(walks[s]), 1) / 1e3}
                 for s, (lo, hi) in enumerate(self.bounds)]

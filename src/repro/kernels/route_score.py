@@ -278,10 +278,15 @@ def _pack_aux(lcp, plen, tie0, kp):
     return aux
 
 
-def route_wave(kind: str, params: tuple, block_size: int,
-               rbs, qbs, qpt, tt, depth, lcp, plen, tie0: int,
-               use_pallas: bool = True) -> Tuple[np.ndarray, np.ndarray]:
-    """Route a whole wave on device; returns (assignments, hit tokens).
+def route_wave_submit(kind: str, params: tuple, block_size: int,
+                      rbs, qbs, qpt, tt, depth, lcp, plen, tie0: int,
+                      use_pallas: bool = True):
+    """Dispatch a wave to the device and return a handle — the **score
+    stage boundary**.  jax dispatch is asynchronous: the jitted wave
+    loop is enqueued and the call returns immediately with device
+    futures, so the caller can do host work (e.g. submit the next
+    wave's speculative index walks) before blocking in
+    :func:`route_wave_collect`.
 
     ``rbs``/``qbs``/``qpt``/``tt`` may be numpy arrays or the factory's
     device mirror (jnp).  ``depth`` is the pre-wave aggregated-index
@@ -308,7 +313,24 @@ def route_wave(kind: str, params: tuple, block_size: int,
                                           *args, interpret=INTERPRET)
         else:
             sel, hit = _route_wave_jnp(kind, params, block_size, *args)
+    return sel, hit, k
+
+
+def route_wave_collect(handle) -> Tuple[np.ndarray, np.ndarray]:
+    """Block on a :func:`route_wave_submit` handle; returns the wave's
+    (assignments, hit tokens) as host numpy arrays (padding stripped)."""
+    sel, hit, k = handle
     return np.asarray(sel[:k]), np.asarray(hit[:k])
+
+
+def route_wave(kind: str, params: tuple, block_size: int,
+               rbs, qbs, qpt, tt, depth, lcp, plen, tie0: int,
+               use_pallas: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """Route a whole wave on device; returns (assignments, hit tokens).
+    Submit + collect in one breath — see :func:`route_wave_submit`."""
+    return route_wave_collect(route_wave_submit(
+        kind, params, block_size, rbs, qbs, qpt, tt, depth, lcp, plen,
+        tie0, use_pallas=use_pallas))
 
 
 def route_wave_ref(kind, params, block_size, rbs, qbs, qpt, tt, depth,

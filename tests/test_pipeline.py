@@ -1,0 +1,239 @@
+"""Routing-pipeline tests: staged wave path + speculative wave overlap
+(``repro.core.pipeline``).
+
+The invariant everything here pins: routing through the three-stage
+pipeline — with or without cross-wave walk speculation, on any shard
+backend — produces **bit-identical** assignments, hit tokens, and
+telemetry-visible decisions to the sequential reference path.  The
+speculation machinery (insert capture, cross-wave LCP patch, identity
+validation, eviction invalidation) must be invisible in the output.
+"""
+import numpy as np
+import pytest
+
+from repro.core.latency_model import EngineSpec
+from repro.core.policies import make_policy
+from repro.core.router import Router
+from repro.core.types import Request
+from repro.cluster.simulator import ClusterSim
+from repro.cluster.closed_loop import ClosedLoopSim
+from repro.workloads.sessions import make_mixed_sessions
+
+
+def _spec():
+    return EngineSpec(name="test", active_params=7e9, n_layers=28,
+                      kv_bytes_per_token=1 << 14)
+
+
+def _wave_trace(n_waves=30, k=4, seed=0, gap=0.05):
+    """Pre-stamped trace of same-timestamp waves with shared prefixes —
+    the shape ``ClusterSim`` coalesces into batched routing."""
+    rng = np.random.default_rng(seed)
+    pool = [tuple(int(x) for x in rng.integers(0, 7,
+                                               size=rng.integers(2, 9)))
+            for _ in range(12)]
+    reqs, rid = [], 0
+    for w in range(n_waves):
+        t = gap * (w + 1)
+        for _ in range(k):
+            base = list(pool[int(rng.integers(0, len(pool)))])
+            ext = [int(x) for x in rng.integers(0, 7,
+                                                size=rng.integers(0, 4))]
+            blocks = tuple(base + ext)
+            reqs.append(Request(rid=rid, arrival=t,
+                                prompt_len=64 * len(blocks),
+                                output_len=int(rng.integers(2, 20)),
+                                blocks=blocks))
+            rid += 1
+    return reqs
+
+
+def _fingerprint(log):
+    return [(r.rid, r.sched_to, r.hit_tokens, round(r.t_finish, 9))
+            for r in sorted(log, key=lambda r: r.rid)]
+
+
+def _run_open_loop(overlap, backend, n_shards=2, kv_cap=1 << 20, seed=0):
+    router = Router(make_policy("lmetric"), 16, kv_capacity_tokens=kv_cap,
+                    n_shards=n_shards, walk_backend=backend,
+                    pipeline_overlap=overlap)
+    sim = ClusterSim(router, _spec())
+    log = sim.run(_wave_trace(seed=seed))
+    fp = _fingerprint(log)
+    tel = router.walk_telemetry()["pipeline"]
+    router.close()
+    return fp, tel
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the overlapped pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.process
+@pytest.mark.parametrize("backend,overlap", [
+    ("serial", True),          # speculation forced on the sync backend
+    ("thread", None),          # auto: async_walks=True enables overlap
+    ("process", None),
+])
+def test_overlap_bit_identical_open_loop(backend, overlap):
+    base, base_tel = _run_open_loop(False, "serial")
+    assert base_tel["prefetches"] == 0      # overlap disabled = no spec
+    got, tel = _run_open_loop(overlap, backend)
+    assert got == base
+    assert tel["waves"] == base_tel["waves"]
+    assert 0.0 <= tel["overlap_fraction"] <= 1.0
+
+
+@pytest.mark.process
+@pytest.mark.parametrize("backend", ["serial", "process"])
+def test_overlap_bit_identical_closed_loop(backend):
+    def run(overlap, b):
+        router = Router(make_policy("lmetric"), 16,
+                        kv_capacity_tokens=1 << 20, n_shards=2,
+                        walk_backend=b, pipeline_overlap=overlap)
+        sim = ClosedLoopSim(router, _spec())
+        sessions = make_mixed_sessions(
+            {"chatbot": 6, "agent": 4, "coder": 2}, seed=3)
+        log = sim.run_sessions(sessions, until=120.0)
+        fp = _fingerprint(log)
+        router.close()
+        return fp
+
+    assert run(True, backend) == run(False, "serial")
+
+
+def test_eviction_invalidates_capture():
+    """A KV$ eviction during the capture window voids the speculative
+    walk (a removed leaf can un-deepen hits — unpatchable)."""
+    from repro.core import IndicatorFactory
+    with IndicatorFactory(2, kv_capacity_tokens=4 * 64) as factory:
+        factory.begin_insert_capture()
+        factory[0].kv.insert((1, 2, 3))
+        inserts, valid = factory.end_insert_capture()
+        assert valid and [iid for iid, _ in inserts] == [0]
+        factory.begin_insert_capture()
+        factory[0].kv.insert((7, 8, 9))       # over capacity → evicts
+        assert factory.evictions > 0
+        _, valid = factory.end_insert_capture()
+        assert not valid
+        # no capture open → invalid by definition
+        assert factory.end_insert_capture() == ([], False)
+
+
+def test_eviction_heavy_run_stays_bit_identical():
+    """Routing under constant KV$ eviction pressure with speculation
+    forced must still match the sequential reference exactly (voided
+    captures fall back to fresh walks)."""
+    def run(overlap):
+        router = Router(make_policy("lmetric"), 4,
+                        kv_capacity_tokens=16 * 64, n_shards=2,
+                        walk_backend="serial", pipeline_overlap=overlap)
+        sim = ClusterSim(router, _spec())
+        fp = _fingerprint(sim.run(_wave_trace(seed=1)))
+        ev = router.factory.evictions
+        router.close()
+        return fp, ev
+
+    base, ev0 = run(False)
+    got, ev1 = run(True)
+    assert ev0 > 0 and ev1 == ev0           # the path was exercised
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# speculation mechanics at the router level
+# ---------------------------------------------------------------------------
+def _mk_wave(rid0, blocks_list, t=0.0):
+    return [Request(rid=rid0 + j, arrival=t, prompt_len=64 * len(b),
+                    output_len=4, blocks=b)
+            for j, b in enumerate(blocks_list)]
+
+
+def _route_two_waves(hint_mode):
+    """Route two fixed waves; ``hint_mode`` controls the speculation:
+    ``None`` (disabled), ``"right"`` (hint == actual wave 2), or
+    ``"wrong"`` (hint is a different wave)."""
+    router = Router(make_policy("lmetric"), 8, kv_capacity_tokens=1 << 20,
+                    pipeline_overlap=hint_mode is not None)
+    wave1 = _mk_wave(0, [(1, 2, 3), (1, 2), (4, 5)])
+    wave2 = _mk_wave(3, [(1, 2, 3, 4), (4, 5, 6)])
+    if hint_mode == "right":
+        router.pipeline.next_wave_hint = lambda: wave2
+    elif hint_mode == "wrong":
+        router.pipeline.next_wave_hint = lambda: _mk_wave(100,
+                                                          [(9, 9), (8, 8)])
+    sel1 = router.route_batch(wave1, 0.0)
+    router.pipeline.next_wave_hint = lambda: None
+    sel2 = router.route_batch(wave2, 1.0)
+    out = (sel1, sel2, [r.hit_tokens for r in wave1 + wave2])
+    pipe = router.pipeline
+    counters = (pipe.prefetches, pipe.prefetch_hits, pipe._spec)
+    router.close()
+    return out, counters
+
+
+def test_prefetch_consumed_on_correct_prediction():
+    base, (p, h, spec) = _route_two_waves(None)
+    assert (p, h, spec) == (0, 0, None)
+    got, (p, h, spec) = _route_two_waves("right")
+    assert (p, h, spec) == (1, 1, None)
+    # the speculative walk ran *before* wave1's inserts; the capture +
+    # LCP patch must make the consumed walk indistinguishable from a
+    # fresh one — same assignments, same hit tokens
+    assert got == base
+
+
+def test_misprediction_discarded():
+    base, _ = _route_two_waves(None)
+    got, (p, h, spec) = _route_two_waves("wrong")
+    assert (p, h, spec) == (1, 0, None)
+    assert got == base                      # fresh walk, exact anyway
+
+
+def test_scalar_path_drops_prefetch():
+    """A wave that degenerates to the scalar path mutates the index
+    without capture — any pending speculation must be dropped first."""
+    router = Router(make_policy("lmetric"), 8, kv_capacity_tokens=1 << 20,
+                    pipeline_overlap=True)
+    wave1 = _mk_wave(0, [(1, 2, 3), (1, 2)])
+    hint = _mk_wave(10, [(5, 5), (6, 6)])
+    router.pipeline.next_wave_hint = lambda: hint
+    router.route_batch(wave1, 0.0)
+    assert router.pipeline._spec is not None
+    router.route_batch(_mk_wave(2, [(7, 7)]), 0.5)   # k=1 → scalar
+    assert router.pipeline._spec is None
+    assert router.factory._capture is None           # capture closed
+    assert router.pipeline.prefetch_hits == 0
+    router.close()
+
+
+def test_sim_heap_peek_matches_next_wave():
+    """``ClusterSim._peek_next_wave`` returns exactly the run the event
+    loop will coalesce next, and leaves the heap untouched."""
+    router = Router(make_policy("lmetric"), 4, kv_capacity_tokens=1 << 20)
+    sim = ClusterSim(router, _spec())
+    reqs = _wave_trace(n_waves=3, k=3, seed=2)
+    for r in reqs:
+        sim._push(r.arrival, "arrival", r)
+    heap_before = sorted(sim._events)
+    wave = sim._peek_next_wave()
+    assert [r.rid for r in wave] == [0, 1, 2]
+    # same events, heap invariant intact ((t, seq) keys are unique, so
+    # the run loop's pop order is unchanged even if the layout moved)
+    assert sorted(sim._events) == heap_before
+    # non-arrival at the top → no prediction
+    sim._push(0.0, "step_end", None)
+    assert sim._peek_next_wave() is None
+    router.close()
+
+
+def test_walk_telemetry_has_pipeline_block():
+    router = Router(make_policy("lmetric"), 8, kv_capacity_tokens=1 << 20,
+                    pipeline_overlap=False)
+    router.route_batch(_mk_wave(0, [(1, 2), (3, 4), (1, 2, 3)]), 0.0)
+    tel = router.walk_telemetry()["pipeline"]
+    assert tel["waves"] == 1
+    for key in ("walk_us", "score_us", "commit_us"):
+        assert tel[key] >= 0.0
+    assert tel["prefetches"] == 0 and tel["prefetch_hits"] == 0
+    assert tel["overlap_fraction"] == 0.0
+    router.close()
