@@ -608,6 +608,191 @@ def _plot_capacity_knee(data):
 
 
 # ---------------------------------------------------------------------------
+def bench_overload(force=False):
+    """Overload & failure resilience (ROADMAP §3): the mixed
+    chat + agent + coder closed-loop cluster pushed past saturation by
+    scaling the session-start rate 1–40x over its usual 0.75-capacity
+    baseline, with the deadline-aware admission gate and mid-flight
+    retraction toggled independently.
+
+    Two sections:
+      * ``sweep`` — start-rate multiplier × control {none, admission,
+        retraction, both}: past the knee the uncontrolled cluster burns
+        prefill on turns whose sessions abandon anyway; the controls
+        should hold the token-goodput curve up and cut the
+        wasted-prefill fraction once the cluster saturates.
+      * ``churn`` — the same scenario at overload with two hard
+        instance kills mid-run (recovered later): orphaned turns
+        re-route and finish, and the overload controls keep paying off
+        while the fleet is degraded.
+
+    Every record is judged per-family (``core.types.FAMILY_SLOS``, the
+    one SLO table).  REPRO_BENCH_SMALL=1 shrinks to a CI smoke.
+    """
+    import os
+
+    from repro.cluster.closed_loop import ClosedLoopSim
+    from repro.cluster.metrics import overload_summary, summarize
+    from repro.core import LatencyModel, OverloadControl, Router
+    from repro.workloads.sessions import (SESSIONS, make_mixed_sessions,
+                                          session_stats)
+    from .common import N_INSTANCES, capacity_qps, cluster_spec
+
+    small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+    n_sessions = 150 if small else 400
+    # the x-axis is a *session-start-rate* multiplier over the 0.75-
+    # capacity baseline: closed-loop feedback (turns wait on completions
+    # + think time) self-throttles, so queue-saturating overload needs
+    # 10-40x the start rate — by 20x the uncontrolled cluster burns
+    # ~20% of its prefill on past-SLO turns
+    mults = (1.0, 20.0) if small else (1.0, 5.0, 10.0, 20.0, 40.0)
+    churn_mult = mults[-1] if small else 20.0
+    base_frac = 0.75
+    mix_shares = {"chatbot": 0.4, "agent": 0.3, "coder": 0.3}
+    controls = {
+        "none": None,
+        "admission": OverloadControl(admission=True),
+        "retraction": OverloadControl(retraction=True),
+        "both": OverloadControl(admission=True, retraction=True),
+    }
+    spec = cluster_spec()
+
+    def run_one(mult, ctl_name, kills=()):
+        mix, acc = {}, 0
+        for fam in sorted(mix_shares):
+            mix[fam] = int(n_sessions * mix_shares[fam])
+            acc += mix[fam]
+        mix["coder"] += n_sessions - acc
+        rates = {
+            fam: mult * base_frac * mix_shares[fam] * capacity_qps(fam)
+            / SESSIONS[fam].expected_requests()
+            for fam in mix}
+        sessions = make_mixed_sessions(mix, seed=11, start_rates=rates)
+        router = Router(build_policy("lmetric"), N_INSTANCES,
+                        kv_capacity_tokens=KV_CAPACITY)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec),
+                            overload=controls[ctl_name])
+        for t, iid in kills:
+            sim.fail_at(t, iid)
+            sim.recover_at(t + 90.0, iid)
+        done = sim.run_sessions(sessions)
+        s = summarize(done, per_family_slo=True)
+        s.pop("families", None)   # per-family detail would dwarf the record
+        s.update(session_stats(sessions))
+        s.update(overload_summary(done, sim.dropped, sim.churn_recovery))
+        # token goodput: prefill that bought within-SLO completions, per
+        # second — the number shedding/retraction protects (request
+        # goodput double-charges a shed turn via session patience)
+        s["tok_goodput_rps"] = (s["useful_prefill_tokens"]
+                                / max(s["makespan"], 1e-9))
+        s["n_churn_events"] = len(sim.churn_events)
+        s["sched_us"] = router.mean_decision_us()
+        s["load_mult"] = mult
+        s["control"] = ctl_name
+        return s
+
+    def go():
+        out = {"n_sessions": n_sessions, "base_frac": base_frac,
+               "load_mults": list(mults), "churn_mult": churn_mult,
+               "sweep": {}, "churn": {}}
+        for m in mults:
+            out["sweep"][str(m)] = {c: run_one(m, c) for c in controls}
+        kills = [(60.0, 2), (90.0, 7)]
+        for c in ("none", "both"):
+            out["churn"][c] = run_one(churn_mult, c, kills=kills)
+        fig = _plot_overload(out)
+        if fig:
+            out["figure"] = fig
+        return out
+
+    r = cached("overload", go, force)
+    rows = []
+    for m in r["load_mults"]:
+        for c, s in r["sweep"][str(m)].items():
+            rows.append(csv_row(
+                f"overload.x{m:g}.{c}", s["sched_us"],
+                f"goodput={s['goodput_rps']:.2f}/s "
+                f"tok_goodput={s['tok_goodput_rps']:.0f}/s "
+                f"wasted={s['wasted_fraction'] * 100:.0f}% "
+                f"shed={s['n_shed']} retracted={s['n_retracted']} "
+                f"slo={s['slo_attainment'] * 100:.0f}% "
+                f"abandon={s['abandon_rate'] * 100:.0f}%"))
+    for c, s in r["churn"].items():
+        rows.append(csv_row(
+            f"overload.churn.{c}", s["sched_us"],
+            f"goodput={s['goodput_rps']:.2f}/s "
+            f"wasted={s['wasted_fraction'] * 100:.0f}% "
+            f"rerouted={s['n_rerouted']} "
+            f"recovery_p50={s['churn_recovery_p50'] * 1e3:.0f}ms"))
+    top = str(r["load_mults"][-1])
+    none, both = r["sweep"][top]["none"], r["sweep"][top]["both"]
+    dg = both["tok_goodput_rps"] / max(none["tok_goodput_rps"], 1e-9)
+    dw = none["wasted_fraction"] - both["wasted_fraction"]
+    ch = r["churn"]
+    return rows, (
+        f"overload at {top}x start rate ({r['n_sessions']} mixed "
+        f"sessions): admission+retraction token goodput {dg:.2f}x vs "
+        f"none, wasted prefill {none['wasted_fraction'] * 100:.0f}%->"
+        f"{both['wasted_fraction'] * 100:.0f}% ({-dw * 100:+.0f}pp), "
+        f"SLO {none['slo_attainment'] * 100:.0f}%->"
+        f"{both['slo_attainment'] * 100:.0f}%; churn at "
+        f"{r['churn_mult']:g}x: {ch['both']['n_rerouted']} orphans "
+        f"rerouted, recovery p50 "
+        f"{ch['both']['churn_recovery_p50'] * 1e3:.0f}ms")
+
+
+def _plot_overload(data):
+    """Two-panel overload figure: goodput and wasted-prefill fraction
+    vs load multiplier, one line per control.  Returns the written
+    path or None (no matplotlib / degenerate single-point sweep)."""
+    import os
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:
+        return None
+    mults = data["load_mults"]
+    if len(mults) < 2:
+        return None
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "figures")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "overload.png")
+    palette = {"none": "#e34948", "admission": "#2a78d6",
+               "retraction": "#eda100", "both": "#1baf7a"}
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(9.6, 4.0), dpi=120)
+    ctls = sorted(next(iter(data["sweep"].values())))
+    for c in ctls:
+        good = [data["sweep"][str(m)][c]["tok_goodput_rps"]
+                for m in mults]
+        waste = [data["sweep"][str(m)][c]["wasted_fraction"]
+                 for m in mults]
+        col = palette.get(c, "#4a3aa7")
+        ax1.plot(mults, good, color=col, linewidth=2, marker="o",
+                 markersize=4, label=c)
+        ax2.plot(mults, waste, color=col, linewidth=2, marker="o",
+                 markersize=4, label=c)
+    ax1.set_ylabel("token goodput (within-SLO prefill tokens / s)")
+    ax2.set_ylabel("wasted prefill fraction")
+    for ax in (ax1, ax2):
+        ax.set_xlabel("session-start rate (x the 0.75-capacity baseline)")
+        ax.set_xscale("log")
+        ax.grid(True, color="#e6e4dd", linewidth=0.8)
+        ax.set_axisbelow(True)
+        for side in ("top", "right"):
+            ax.spines[side].set_visible(False)
+    ax1.set_title("useful work under overload", fontsize=11)
+    ax2.set_title("prefill burnt past SLO", fontsize=11)
+    ax1.legend(frameon=False, fontsize=9, title="control")
+    fig.tight_layout()
+    fig.savefig(path)
+    plt.close(fig)
+    return os.path.relpath(path, os.path.join(os.path.dirname(__file__),
+                                              ".."))
+
+
+# ---------------------------------------------------------------------------
 def bench_router_scale(force=False):
     """Vectorized scoring core vs the frozen scalar reference: mean
     per-decision latency of the paper's LMETRIC policy at 16 / 256 /
@@ -1341,6 +1526,7 @@ ALL_BENCHES = [
     bench_fig28_load_gradient,
     bench_closed_loop,
     bench_capacity_knee,
+    bench_overload,
     bench_router_scale,
     bench_prefix_index,
     bench_batch_routing,

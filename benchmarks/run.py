@@ -2,15 +2,20 @@
 Prints ``name,us_per_call,derived`` CSV rows plus a claim summary block.
 
   PYTHONPATH=src python -m benchmarks.run [--only figNN] [--force]
+
+Exits non-zero when any selected bench raises, with the failing bench
+names (and their tracebacks on stderr) listed at the end — a partial
+``results/bench/`` directory is a failure, not a quiet success.
 """
 import argparse
 import os
 import sys
+import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on bench name")
@@ -22,6 +27,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     claims = []
+    failures = []
     for bench in ALL_BENCHES:
         name = bench.__name__
         if args.only and args.only not in name:
@@ -29,15 +35,22 @@ def main() -> None:
         try:
             rows, derived = bench(force=args.force)
         except Exception as e:  # noqa: BLE001
+            traceback.print_exc(file=sys.stderr)
             rows, derived = [f"{name},0.00,ERROR {type(e).__name__}: {e}"], \
                 f"ERROR: {e}"
+            failures.append(name)
         for r in rows:
             print(r, flush=True)
         claims.append((name, derived))
     print("\n=== claim summary ===")
     for n, d in claims:
         print(f"{n:36s} {d}")
+    if failures:
+        print(f"\nFAILED benches ({len(failures)}): "
+              + ", ".join(failures), file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -46,6 +46,15 @@ PREFIX_INDEX_RECORD = (
 #: per-policy record in capacity_knee.json (goodput-vs-load knee)
 CAPACITY_KNEE_RECORD = ("goodput_rps", "abandon_rate", "knee_frac",
                         "sat_goodput_rps")
+#: per-(load, control) record in overload.json (overload/churn sweep) —
+#: the waste accounting plus the controls' own counters
+OVERLOAD_RECORD = (
+    "n", "goodput_rps", "tok_goodput_rps", "slo_attainment",
+    "abandon_rate", "wasted_fraction", "useful_prefill_tokens",
+    "wasted_prefill_tokens", "n_shed", "n_retracted", "n_rerouted",
+    "churn_recovery_p50", "n_churn_events", "sched_us", "load_mult",
+    "control",
+)
 #: per-size record in router_scale.json (vector vs frozen scalar ref)
 ROUTER_SCALE_RECORD = ("vector_us", "scalar_us", "walk_us")
 #: per-(size, shard-count) record in the sharded sections — per-shard
@@ -234,6 +243,29 @@ def check_file(path):
         for p, rec in data.get("policies", {}).items():
             _check_record(rec, CAPACITY_KNEE_RECORD,
                           f"{name}.policies.{p}", errors)
+    elif name == "overload.json":
+        for key in ("n_sessions", "load_mults", "sweep", "churn"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for m, by_ctl in data.get("sweep", {}).items():
+            for c in ("none", "admission", "retraction", "both"):
+                if c not in by_ctl:
+                    errors.append(f"{name}.sweep.{m}: missing control "
+                                  f"'{c}'")
+            for c, rec in by_ctl.items():
+                _check_record(rec, OVERLOAD_RECORD,
+                              f"{name}.sweep.{m}.{c}", errors)
+        # the churn section exists to show orphans survive kills: both
+        # arms must be present and every record fully accounted
+        for c in ("none", "both"):
+            if c not in data.get("churn", {}):
+                errors.append(f"{name}.churn: missing control '{c}'")
+        for c, rec in data.get("churn", {}).items():
+            _check_record(rec, OVERLOAD_RECORD, f"{name}.churn.{c}",
+                          errors)
+            if isinstance(rec, dict) and rec.get("n_churn_events") == 0:
+                errors.append(f"{name}.churn.{c}: no churn events "
+                              f"recorded in the churn section")
     elif name in ("batch_routing.json", "detector_observe.json"):
         _check_timing(data, name, errors, warnings)
     elif name == "fig22.json":

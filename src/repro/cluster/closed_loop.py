@@ -63,11 +63,16 @@ class _SessionFeedback:
             for req in sess.start():
                 self._push_request(req)
 
-    def _session_feedback(self, req: Request):
+    def _session_feedback(self, req: Request,
+                          now: Optional[float] = None):
+        """Advance the session; ``now`` overrides the feedback clock for
+        requests that never finished (admission/retraction drops use the
+        drop time — ``t_finish`` is 0.0 and would rewind the heap)."""
         sess = self._by_sid.get(req.session_id)
         if sess is None:
             return
-        for nxt in sess.on_complete(req, req.t_finish):
+        t = now if now is not None else req.t_finish
+        for nxt in sess.on_complete(req, t):
             self._push_request(nxt)
 
 
@@ -85,6 +90,14 @@ class ClosedLoopSim(_SessionFeedback, ClusterSim):
     def _finish(self, inst: _SimInstance, req: Request):
         super()._finish(inst, req)
         self._session_feedback(req)
+
+    def _drop(self, req: Request, reason: str):
+        """A shed/retracted turn feeds back like a completion: the
+        session sees an unserved request (``t_finish`` 0.0 fails the
+        SLO predicate), counts the breach against its patience, and —
+        if it stays — schedules the next turn from the drop time."""
+        super()._drop(req, reason)
+        self._session_feedback(req, now=self.now)
 
 
 class ClosedLoopPDSim(_SessionFeedback, PDDisaggSim):

@@ -7,11 +7,13 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.types import DEFAULT_SLO, Request, SLO
+from repro.core.types import DEFAULT_SLO, Request, SLO, slo_for_family
 
 #: default per-request SLOs (seconds) — ``core.types.DEFAULT_SLO``, the
 #: same predicate closed-loop sessions abandon on; override per call for
-#: stricter/looser studies
+#: stricter/looser studies.  Per-family thresholds live in
+#: ``core.types.FAMILY_SLOS`` (the one table — pass
+#: ``per_family_slo=True`` to judge each request by its family's SLO).
 SLO_TTFT = DEFAULT_SLO.ttft
 SLO_TPOT = DEFAULT_SLO.tpot
 
@@ -24,7 +26,8 @@ def pct(xs: Sequence[float], q: float) -> float:
 
 def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
               slo_tpot: float = SLO_TPOT,
-              by_family: bool = True) -> Dict[str, float]:
+              by_family: bool = True,
+              per_family_slo: bool = False) -> Dict[str, float]:
     """Latency + SLO summary of a finished-request log.
 
     Besides the TTFT/TPOT percentiles, reports
@@ -38,6 +41,11 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
     * ``families`` — the same summary per workload-family tag, present
       when any request carries one (mixed traces, hotspot bursts,
       closed-loop scenarios).
+
+    ``per_family_slo=True`` judges every request by its family's entry
+    in ``core.types.FAMILY_SLOS`` (chat-lenient / agent-strict) instead
+    of the single ``slo_ttft``/``slo_tpot`` pair — the mixed-scenario
+    spelling the overload bench reports.
     """
     done = [r for r in requests if r.t_finish > 0.0]
     ttft = [r.ttft for r in done]
@@ -45,9 +53,12 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
     hits = sum(r.hit_tokens for r in done)
     toks = sum(r.prompt_len for r in done)
     makespan = max((r.t_finish for r in done), default=0.0)
-    slo = SLO(ttft=slo_ttft, tpot=slo_tpot)
-    ttft_ok = [slo.ttft_met(r) for r in done]
-    tpot_ok = [slo.tpot_met(r) for r in done]
+    if per_family_slo:
+        slos = [slo_for_family(r.family) for r in done]
+    else:
+        slos = [SLO(ttft=slo_ttft, tpot=slo_tpot)] * len(done)
+    ttft_ok = [s.ttft_met(r) for s, r in zip(slos, done)]
+    tpot_ok = [s.tpot_met(r) for s, r in zip(slos, done)]
     both_ok = sum(1 for a, b in zip(ttft_ok, tpot_ok) if a and b)
     out = {
         "n": len(done),
@@ -71,9 +82,53 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
         for r in done:
             fams.setdefault(r.family or "untagged", []).append(r)
         out["families"] = {
-            fam: summarize(rs, slo_ttft, slo_tpot, by_family=False)
+            fam: summarize(rs, slo_ttft, slo_tpot, by_family=False,
+                           per_family_slo=per_family_slo)
             for fam, rs in sorted(fams.items())}
     return out
+
+
+def overload_summary(finished: List[Request],
+                     dropped: Sequence[Request] = (),
+                     churn_recovery: Sequence[float] = ()
+                     ) -> Dict[str, float]:
+    """Overload/failure accounting over a run's full request fate log.
+
+    The central number is ``wasted_fraction``: the share of prefill
+    work (new tokens actually prefilled) that bought no within-SLO
+    completion — prefill burnt on requests that finished late (judged
+    by their family SLO, ``core.types.FAMILY_SLOS``) plus prefill burnt
+    on retracted requests before the cancel.  Admission shedding burns
+    nothing (that is the point) and shows up only in ``n_shed``.
+    ``churn_recovery`` percentiles report failure → first-token-
+    elsewhere latency for orphaned requests.
+    """
+    useful = wasted = 0
+    late = 0
+    for r in finished:
+        work = max(r.new_tokens, 0)
+        if slo_for_family(r.family).met(r):
+            useful += work
+        else:
+            late += 1
+            wasted += work
+    retracted = [r for r in dropped if r.drop_reason == "retracted"]
+    shed = [r for r in dropped if r.drop_reason == "shed"]
+    wasted += sum(r.prefill_done for r in retracted)
+    total = useful + wasted
+    rec = list(churn_recovery)
+    return {
+        "n_finished": len(finished),
+        "n_late": late,
+        "n_shed": len(shed),
+        "n_retracted": len(retracted),
+        "useful_prefill_tokens": int(useful),
+        "wasted_prefill_tokens": int(wasted),
+        "wasted_fraction": wasted / total if total else 0.0,
+        "n_rerouted": len(rec),
+        "churn_recovery_p50": pct(rec, 50) if rec else 0.0,
+        "churn_recovery_p95": pct(rec, 95) if rec else 0.0,
+    }
 
 
 def cdf(xs: Sequence[float], n_points: int = 50):

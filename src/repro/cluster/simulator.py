@@ -27,6 +27,8 @@ import itertools
 from typing import Dict, List, Optional
 
 from repro.core.latency_model import EngineSpec, LatencyModel
+from repro.core.overload import NO_CONTROL, AdmissionController, \
+    OverloadControl
 from repro.core.router import Router
 from repro.core.types import Request
 
@@ -46,6 +48,9 @@ class _SimInstance:
         self.running: List[Request] = []
         self.generated: Dict[int, int] = {}
         self.busy = False
+        # churn guard: bumped when the instance fails, so step_end
+        # events from before the failure are recognised as stale
+        self.epoch = 0
         # telemetry: per-window accumulators flushed on window roll, so
         # the hot step loop touches plain attributes instead of two
         # defaultdict lookups per step
@@ -94,7 +99,8 @@ class _SimInstance:
 
 class ClusterSim:
     def __init__(self, router: Router, spec: EngineSpec,
-                 model: Optional[LatencyModel] = None):
+                 model: Optional[LatencyModel] = None,
+                 overload: Optional[OverloadControl] = None):
         self.router = router
         self.spec = spec
         self.model = model or LatencyModel(spec)
@@ -104,6 +110,19 @@ class ClusterSim:
         self._seq = itertools.count()
         self.now = 0.0
         self.finished: List[Request] = []
+        # overload control (all-off by default — the frozen baseline):
+        # admission shedding + deadline retraction share one stamped
+        # deadline per request (repro.core.overload)
+        self.overload = overload if overload is not None else NO_CONTROL
+        self._admission = (AdmissionController(self.model, self.overload)
+                           if self.overload.enabled else None)
+        self.dropped: List[Request] = []
+        self.retractions = 0
+        self.wasted_prefill_tokens = 0
+        # instance churn bookkeeping (fail/drain/recover events)
+        self.churn_events: List[dict] = []
+        self.churn_recovery: List[float] = []
+        self._orphan_fail_t: Dict[int, float] = {}
         # wave pipelining: let the router's pipeline peek the event heap
         # for the likely next arrival wave, so asynchronous walk
         # backends can start wave k+1's index walk while wave k's score
@@ -135,9 +154,31 @@ class ClusterSim:
                        and self._events[0][2] == "arrival"):
                     wave.append(heapq.heappop(self._events)[3])
                 self._on_arrivals(wave)
+            elif kind == "fail":
+                self._on_fail(payload)
+            elif kind == "drain":
+                self._on_drain(payload)
+            elif kind == "recover":
+                self._on_recover(payload)
             else:
                 self._on_step_end(payload)
         return self.finished
+
+    # ---- fault injection ---------------------------------------------
+    def fail_at(self, t: float, iid: int):
+        """Schedule a hard instance failure: queue, running batch, and
+        KV$ are lost; orphaned requests re-route cold elsewhere."""
+        self._push(t, "fail", iid)
+
+    def drain_at(self, t: float, iid: int):
+        """Schedule a graceful drain: no new work routed to ``iid``;
+        in-flight work completes and the KV$ survives."""
+        self._push(t, "drain", iid)
+
+    def recover_at(self, t: float, iid: int):
+        """Schedule the instance rejoining the fleet (cold after a
+        fail, warm after a drain)."""
+        self._push(t, "recover", iid)
 
     def _peek_next_wave(self) -> Optional[List[Request]]:
         """The next arrival wave ``run`` would coalesce, or None if the
@@ -163,6 +204,16 @@ class ClusterSim:
 
     # ------------------------------------------------------------------
     def _on_arrivals(self, reqs: List[Request]):
+        if self._admission is not None:
+            # stamps deadlines (idempotent) and, with admission on,
+            # sheds requests no live instance can serve in time
+            reqs, shed = self._admission.admit_wave(
+                self.router.factory, reqs, self.now,
+                alive=self.router.policy.alive)
+            for req in shed:
+                self._drop(req, "shed")
+            if not reqs:
+                return
         iids = self.router.route_batch(reqs, self.now)
         # per-request enqueue + step start in arrival order — identical
         # to interleaved handling (step starts never mutate indicators)
@@ -180,6 +231,8 @@ class ClusterSim:
             self._start_step(inst)
 
     def _start_step(self, inst: _SimInstance):
+        if self.overload.retraction:
+            self._retract_expired(inst)
         allocs, decode_bs, ctx = inst.form_batch()
         prefill_tokens = sum(t for _, t in allocs)
         if prefill_tokens == 0 and decode_bs == 0:
@@ -193,11 +246,82 @@ class ClusterSim:
                           prefill_tokens / total if total else 0.0)
         inst.bs_samples.append((self.now, len(inst.running)
                                 + len(inst.waiting)))
-        self._push(self.now + dt, "step_end", (inst.iid, allocs, decode_bs))
+        self._push(self.now + dt, "step_end",
+                   (inst.iid, allocs, decode_bs, inst.epoch))
+
+    def _retract_expired(self, inst: _SimInstance):
+        """Cancel queued-or-prefilling requests whose prefill deadline
+        is already blown: the first token cannot arrive in time, so the
+        remaining prefill would be burnt on a guaranteed breach.  Runs
+        at step-formation time — the instance is between steps, so no
+        in-flight alloc references the retracted rids."""
+        expired = [rid for rid, r in inst.waiting.items()
+                   if r.deadline is not None
+                   and r.deadline.prefill_blown(self.now)]
+        for rid in expired:
+            req = inst.waiting.pop(rid)
+            left = inst.prefill_left.pop(rid)
+            burnt = max(req.new_tokens, 1) - left
+            req.prefill_done = burnt
+            self.retractions += 1
+            self.wasted_prefill_tokens += burnt
+            self.router.on_retract(inst.iid, req, left)
+            self._drop(req, "retracted")
+
+    def _drop(self, req: Request, reason: str):
+        """A request leaves the system unserved (shed or retracted).
+        ``ClosedLoopSim`` additionally feeds the drop back to its
+        session — an unserved turn counts as an SLO breach against the
+        patience model."""
+        req.drop_reason = reason
+        req.t_drop = self.now
+        self.dropped.append(req)
+
+    # ---- instance churn ----------------------------------------------
+    def _on_fail(self, iid: int):
+        """Hard failure: the instance's queue, running batch, and KV$
+        are gone.  The failure reaches scoring/index/mirror/speculation
+        via ``Router.mark_failed`` (Contract 4) before any subsequent
+        event routes; orphaned requests re-arrive *now* for a cold
+        re-prefill elsewhere."""
+        inst = self.instances[iid]
+        inst.epoch += 1          # outstanding step_end becomes stale
+        inst.busy = False
+        orphans = list(inst.waiting.values()) + list(inst.running)
+        inst.waiting.clear()
+        inst.prefill_left.clear()
+        inst.running = []
+        inst.generated = {}
+        self.router.mark_failed(iid)
+        self.churn_events.append(
+            {"t": self.now, "iid": iid, "kind": "fail",
+             "orphans": len(orphans)})
+        for req in orphans:
+            # lost KV$: cold re-prefill from scratch, original arrival
+            # time kept so TTFT carries the failure penalty
+            req.sched_to = -1
+            req.hit_tokens = 0
+            req.t_sched = 0.0
+            req.t_first_token = 0.0
+            req.retries += 1
+            self._orphan_fail_t.setdefault(req.rid, self.now)
+            self._push(self.now, "arrival", req)
+
+    def _on_drain(self, iid: int):
+        self.router.mark_drained(iid)
+        self.churn_events.append(
+            {"t": self.now, "iid": iid, "kind": "drain", "orphans": 0})
+
+    def _on_recover(self, iid: int):
+        self.router.mark_recovered(iid)
+        self.churn_events.append(
+            {"t": self.now, "iid": iid, "kind": "recover", "orphans": 0})
 
     def _on_step_end(self, payload):
-        iid, allocs, decode_bs = payload
+        iid, allocs, decode_bs, epoch = payload
         inst = self.instances[iid]
+        if epoch != inst.epoch:
+            return               # step from before the instance failed
         # prefill progress
         for req, tokens in allocs:
             inst.prefill_left[req.rid] -= tokens
@@ -236,6 +360,25 @@ class ClusterSim:
         req.t_finish = self.now
         self.router.on_finish(inst.iid, req)
         self.finished.append(req)
+        t_fail = self._orphan_fail_t.pop(req.rid, None)
+        if t_fail is not None:
+            # churn recovery latency: failure -> first token elsewhere
+            self.churn_recovery.append(req.t_first_token - t_fail)
+
+    def overload_stats(self) -> Dict:
+        """Raw overload/churn counters for this run; the derived
+        wasted-fraction metric lives in ``cluster.metrics
+        .overload_summary`` (it needs the finished/dropped request
+        lists)."""
+        return {
+            "shed": sum(1 for r in self.dropped
+                        if r.drop_reason == "shed"),
+            "retracted": self.retractions,
+            "wasted_prefill_tokens": int(self.wasted_prefill_tokens),
+            "churn_events": len(self.churn_events),
+            "reroutes": sum(e["orphans"] for e in self.churn_events),
+            "degraded_rebuilds": self.router.factory.degraded_rebuilds,
+        }
 
     # ------------------------------------------------------------------
     def imbalance_profile(self) -> Dict[int, List[float]]:

@@ -1,5 +1,7 @@
-from .types import DEFAULT_SLO, Request, SLO
+from .types import (DEFAULT_SLO, FAMILY_SLOS, Deadline, Request, SLO,
+                    slo_for_family, stamp_deadline)
 from .radix import RadixKVIndex, tokens_to_blocks
+from .overload import NO_CONTROL, AdmissionController, OverloadControl
 from .indicators import (AggregatedPrefixIndex, IndicatorFactory,
                          InstanceState, shard_bounds)
 from .shard_backends import (ProcessBackend, SerialBackend, ShardBackend,
@@ -16,7 +18,10 @@ from .hotspot import HotspotDetector
 from .router import Router
 
 __all__ = [
-    "Request", "SLO", "DEFAULT_SLO", "RadixKVIndex", "tokens_to_blocks",
+    "Request", "SLO", "DEFAULT_SLO", "FAMILY_SLOS", "Deadline",
+    "slo_for_family", "stamp_deadline",
+    "OverloadControl", "AdmissionController", "NO_CONTROL",
+    "RadixKVIndex", "tokens_to_blocks",
     "AggregatedPrefixIndex", "ShardedPrefixIndex", "shard_bounds",
     "ShardBackend", "SerialBackend", "ThreadBackend", "ProcessBackend",
     "make_backend", "RoutingPipeline",

@@ -696,6 +696,21 @@ class InstanceState:
         f.queued_prefill_tokens[i] = left if left > 0 else 0
         f.mark_dirty(i)
 
+    def on_retract(self, req: Request, prefill_left: int):
+        """Reverse ``on_route`` for a cancelled queued-or-prefilling
+        request (deadline blown): the unburnt prefill leaves the queue
+        and the prompt leaves the resident-token count.  The KV$ entry
+        routing inserted stays — the LRU evicts it like any cold
+        lineage."""
+        f, i = self._f, self.iid
+        if f.q_bs[i] > 0:
+            f.q_bs[i] -= 1
+        left = f.queued_prefill_tokens[i] - prefill_left
+        f.queued_prefill_tokens[i] = left if left > 0 else 0
+        left = f.total_tokens[i] - req.prompt_len
+        f.total_tokens[i] = left if left > 0 else 0
+        f.mark_dirty(i)
+
     def on_start_running(self, req: Request):
         f, i = self._f, self.iid
         if f.q_bs[i] > 0:
@@ -753,6 +768,10 @@ class IndicatorFactory:
         self.block_size = block_size
         self.exact_only = exact_only
         self.walk_backend = walk_backend
+        self.parallel_walks = parallel_walks
+        # degraded-mode telemetry: walk-backend deaths survived by
+        # rebuilding the index from the per-instance radix trees
+        self.degraded_rebuilds = 0
         # shard count for the aggregated index AND the device-mirror
         # partition (same shard_bounds cut); 1 = the unsharded flat index
         self.n_shards = max(1, min(int(n_shards), n_instances))
@@ -812,17 +831,27 @@ class IndicatorFactory:
             self.instances.append(InstanceState(i, self, kv))
 
     def _on_insert(self, iid: int, blocks):
-        self._agg.add(iid, blocks)
+        try:
+            self._agg.add(iid, blocks)
+        except (RuntimeError, OSError):
+            self._rebuild_index()        # the rebuild replays the tree,
+            #                              this insert included
         if self._capture is not None:
             self._capture.append((iid, blocks))
 
     def _on_evict(self, iid: int, path):
         self.evictions += 1
-        self._agg.remove_leaf(iid, path)
+        try:
+            self._agg.remove_leaf(iid, path)
+        except (RuntimeError, OSError):
+            self._rebuild_index()
 
     def _on_clear(self, iid: int):
         self.evictions += 1
-        self._agg.remove_instance(iid)
+        try:
+            self._agg.remove_instance(iid)
+        except (RuntimeError, OSError):
+            self._rebuild_index()
 
     # ---- lifecycle -------------------------------------------------------
     def close(self):
@@ -866,6 +895,57 @@ class IndicatorFactory:
             return [], False
         return cap, self.evictions == self._capture_ev0
 
+    # ---- instance churn (Contract 4, factory half) -----------------------
+    def on_instance_failed(self, iid: int):
+        """An instance died with its KV$: zero its indicator columns
+        (dirtying the device mirror shard), forget its routed window,
+        and clear its radix tree — the ``on_clear`` callback removes
+        the aggregated-index column through the shard backend's
+        owner-routed mutation and bumps the eviction counter, which
+        also invalidates any in-flight speculative insert capture."""
+        self.r_bs[iid] = 0
+        self.q_bs[iid] = 0
+        self.queued_prefill_tokens[iid] = 0
+        self.total_tokens[iid] = 0
+        self._log_start[iid] = 0
+        self._log_len[iid] = 0
+        self.mark_dirty(iid)
+        self.instances[iid].kv.clear()
+
+    # ---- degraded mode (walk-backend death) ------------------------------
+    def _rebuild_index(self):
+        """A walk backend died mid-query: tear the broken index down,
+        build a replacement (same sharded flavour with fresh workers;
+        a serial flat index when the respawn fails too), and repopulate
+        it from the per-instance radix trees — the KV$ ground truth the
+        aggregate is defined over.  Bumps the eviction counter so any
+        in-flight wave plan or speculative capture is invalidated."""
+        self.degraded_rebuilds += 1
+        self.evictions += 1
+        old, self._agg = self._agg, None
+        if old is not None and hasattr(old, "close"):
+            try:
+                old.close()
+            except Exception:
+                pass                      # the backend is already broken
+        agg = None
+        if self.walk_backend is not None or self.n_shards > 1:
+            from .sharded_index import ShardedPrefixIndex
+            try:
+                agg = ShardedPrefixIndex(self.n, self.n_shards,
+                                         parallel=self.parallel_walks,
+                                         backend=self.walk_backend)
+            except Exception:
+                agg = None                # respawn failed: go serial
+        if agg is None:
+            agg = AggregatedPrefixIndex(self.n)
+        for inst in self.instances:
+            for chain in inst.kv.chains():
+                agg.add(inst.iid, chain)
+        # the kv callbacks close over self._agg dynamically, so the
+        # swap retargets every future insert/evict/clear
+        self._agg = agg
+
     def __len__(self):
         return self.n
 
@@ -883,7 +963,13 @@ class IndicatorFactory:
         """Per-instance KV$ hit tokens (capped at the prompt length)."""
         if self._agg is not None:
             t0 = time.perf_counter_ns()
-            depths = self._agg.match_depths(req.blocks, out=self._hit_depths)
+            try:
+                depths = self._agg.match_depths(req.blocks,
+                                                out=self._hit_depths)
+            except (RuntimeError, OSError):
+                self._rebuild_index()    # degraded: serial retry
+                depths = self._agg.match_depths(req.blocks,
+                                                out=self._hit_depths)
             self.walk_ns += time.perf_counter_ns() - t0
             self.walks += 1
             hits = depths * self.block_size
@@ -990,9 +1076,17 @@ class IndicatorFactory:
         t0 = time.perf_counter_ns()
         order, adj = _sorted_lcp(chains)
         submit = getattr(self._agg, "submit_many", None)
-        if submit is not None:
-            depth_u, handle = submit(chains, order=order, adj=adj)
-        else:
+        try:
+            if submit is not None:
+                depth_u, handle = submit(chains, order=order, adj=adj)
+            else:
+                depth_u = self._agg.match_depths_many(chains, order=order,
+                                                      adj=adj)
+                handle = None
+        except (RuntimeError, OSError):
+            # walk backend died on dispatch: rebuild and run this
+            # wave's walk serially on the replacement index
+            self._rebuild_index()
             depth_u = self._agg.match_depths_many(chains, order=order,
                                                   adj=adj)
             handle = None
@@ -1007,7 +1101,16 @@ class IndicatorFactory:
         pairwise-LCP matrix from the shared sort."""
         t0 = time.perf_counter_ns()
         if h.handle is not None:
-            h.handle.wait()
+            try:
+                h.handle.wait()
+            except (RuntimeError, OSError):
+                # a shard worker died mid-query (degraded mode): rebuild
+                # the index and recompute this wave's walk serially —
+                # the wave proceeds instead of raising
+                self._rebuild_index()
+                h.depth_u = self._agg.match_depths_many(
+                    h.chains, order=h.order, adj=h.adj)
+                h.handle = None
         self.walk_ns += h.submit_ns + (time.perf_counter_ns() - t0)
         self.walks += len(h.chains)
         k = len(h.reqs)
@@ -1022,7 +1125,12 @@ class IndicatorFactory:
         in sync; nothing is added to walk telemetry — no routed wave
         was served by this walk."""
         if h.handle is not None:
-            h.handle.wait()
+            try:
+                h.handle.wait()
+            except (RuntimeError, OSError):
+                # the speculation is being dropped anyway; just replace
+                # the broken backend so the next wave has an index
+                self._rebuild_index()
 
     def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
         """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.

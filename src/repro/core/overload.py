@@ -1,0 +1,122 @@
+"""Overload control: deadline-aware admission + retraction config.
+
+The production regime past the goodput knee (ROADMAP §3) burns prefill
+tokens on requests whose sessions will abandon anyway.  This module
+holds the control-plane pieces:
+
+* :class:`OverloadControl` — the per-run switchboard (admission on/off,
+  retraction on/off, deadline slack).  Everything defaults to *off* so
+  existing runs and the bit-identity anchors are untouched.
+* :class:`AdmissionController` — the gate itself: a request is admitted
+  iff at least one instance is predicted (``LatencyModel`` batch APIs)
+  to produce its first token before the prefill deadline.
+
+Determinism contract: the admission predictor calls
+``predict_ttft_batch(..., noise=1.0)`` so the gate never consumes from
+the model's noise stream — policies that draw noise (Simulation,
+PolyServe) see exactly the same stream with the gate on or off, which
+keeps routing decisions for *admitted* requests bit-identical to a run
+where the shed requests simply never arrived.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .types import Request, stamp_deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadControl:
+    """Overload-control switchboard for a simulator run.
+
+    ``slack`` scales the SLO-derived deadlines (1.0 = the SLO itself);
+    admission/retraction both read the same stamped deadline so the two
+    mechanisms stay consistent.  ``decode_margin`` relaxes only the
+    admission gate's decode-feasibility check: the TPOT predictor reads
+    the instance's *instantaneous* decode load, which overestimates the
+    interference a request admitted now will actually see once earlier
+    batches drain — 1.5 recovers the goodput that a margin-free gate
+    sheds away without giving back the wasted-prefill win.  All-off
+    (the default) is the frozen baseline configuration: no deadlines
+    stamped, nothing shed, nothing retracted — decision sequences stay
+    bit-identical to ``scalar_ref``.
+    """
+    admission: bool = False
+    retraction: bool = False
+    slack: float = 1.0
+    decode_margin: float = 1.5
+
+    @property
+    def enabled(self) -> bool:
+        return self.admission or self.retraction
+
+
+#: the all-off configuration (bit-identity baseline)
+NO_CONTROL = OverloadControl()
+
+
+class AdmissionController:
+    """Deadline-feasibility gate over the factory's indicator arrays.
+
+    ``admit_wave`` partitions an arrival wave into (admitted, shed):
+    a request is shed when *no* instance is predicted to reach its
+    first token before ``deadline.prefill`` — routing it anywhere
+    would burn prefill on a guaranteed SLO breach.
+    """
+
+    def __init__(self, model, control: OverloadControl):
+        self.model = model
+        self.control = control
+        self.shed = 0
+        self.admitted = 0
+
+    def admit_wave(self, factory, reqs: Sequence[Request],
+                   now: float, alive: Optional[np.ndarray] = None):
+        """Partition ``reqs`` into (admitted, shed) at time ``now``.
+
+        Deadlines are stamped here (idempotently) from each request's
+        family SLO scaled by ``control.slack``.  Feasibility is the
+        optimistic bound: best predicted TTFT across live instances,
+        ignoring the request's own queueing behind wave-mates — an
+        intentionally permissive gate (shedding a feasible request is
+        worse than admitting a marginal one; retraction catches the
+        marginal ones later).
+        """
+        for r in reqs:
+            stamp_deadline(r, slack=self.control.slack)
+        if not self.control.admission:
+            return list(reqs), []
+        q = np.asarray(factory.queued_prefill_tokens, dtype=np.float64)
+        d = np.asarray(factory.r_bs, dtype=np.float64)
+        c = np.asarray(factory.total_tokens, dtype=np.float64)
+        # decode-side feasibility is per instance, not per request:
+        # computed once per wave (noise=1.0, see determinism contract)
+        tpot = self.model.predict_tpot_batch(d, c, q, noise=1.0)
+        admitted, shed = [], []
+        for r in reqs:
+            # per-instance KV$ hits: the gate sees the same new-token
+            # cost routing would (a full-prompt bound over-sheds warm
+            # sessions whose lineage is already resident somewhere)
+            new = np.maximum(r.prompt_len - factory.hits_for(r), 0)
+            # noise=1.0: never consume from the policy noise stream
+            ttft = self.model.predict_ttft_batch(
+                q, new.astype(np.float64), d, c, noise=1.0)
+            feasible = ttft <= r.deadline.prefill - now
+            if r.output_len > 1:
+                # split deadline, decode half: the per-token budget the
+                # finish deadline leaves after the prefill deadline
+                budget_t = (r.deadline.finish - r.deadline.prefill) \
+                    / (r.output_len - 1)
+                feasible &= tpot <= budget_t * self.control.decode_margin
+            if alive is not None:
+                feasible &= alive.astype(bool)
+            if bool(feasible.any()):
+                admitted.append(r)
+            else:
+                shed.append(r)
+        self.shed += len(shed)
+        self.admitted += len(admitted)
+        return admitted, shed

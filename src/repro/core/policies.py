@@ -80,6 +80,11 @@ class Policy:
         # mid-wave fallback must resume exactly where sequential routing
         # would be); semantics identical to the old itertools.count
         self._tie_n = 0
+        # failed-instance mask (Contract 4): None while the whole fleet
+        # is alive — the exact legacy code path, preserving bit-identity
+        # with scalar_ref.  A boolean (n,) array while any instance is
+        # down; _select_min intersects every candidate set with it.
+        self.alive: Optional[np.ndarray] = None
 
     def _next_tie(self) -> int:
         r = self._tie_n
@@ -91,9 +96,20 @@ class Policy:
 
         Semantics identical to the scalar reference: minimum over the
         allowed indices, ties within ``_EPS``, round-robin among ties via
-        the per-policy counter.
+        the per-policy counter.  While instances are failed
+        (``self.alive`` set), candidates are intersected with the live
+        set; a policy-proposed candidate set that is entirely dead falls
+        back to all live instances.
         """
         s = np.asarray(scores)
+        if self.alive is not None:
+            live = np.flatnonzero(self.alive)
+            if allowed is None:
+                allowed = live
+            else:
+                a = np.asarray(allowed)
+                a = a[self.alive[a]]
+                allowed = a if len(a) else live
         if allowed is None:
             best = s.min()
             ties = np.flatnonzero(s <= best + _EPS)
@@ -118,8 +134,12 @@ class Policy:
         factory — the predicate the router and the routing pipeline
         branch on *before* any walk work is submitted.  Subclasses with
         host-only modes (e.g. LMETRIC with a hotspot detector or the
-        "cost" load indicator) narrow it further."""
-        return self.batch_kind is not None and factory._agg is not None
+        "cost" load indicator) narrow it further.  While any instance is
+        failed the device plan is off (the fused kernel has no mask
+        input); the host scalar path carries ``self.alive`` and the
+        device path resumes once the fleet is whole again."""
+        return self.batch_kind is not None and factory._agg is not None \
+            and self.alive is None
 
     def wave_inputs(self, reqs: Sequence[Request],
                     factory: IndicatorFactory):
@@ -177,6 +197,23 @@ class Policy:
     def on_finish(self, iid: int, req: Request):
         """Response-piggyback hook (``Router.on_finish`` fans in here):
         stateful policies observe completions without new plumbing."""
+
+    # ---- instance churn --------------------------------------------------
+    def on_instance_failed(self, iid: int, n: int):
+        """Mask ``iid`` out of every future candidate set.  ``n`` sizes
+        the mask on first failure.  Stateful subclasses additionally
+        drop any affinity toward the dead instance."""
+        if self.alive is None:
+            self.alive = np.ones(n, dtype=bool)
+        self.alive[iid] = False
+
+    def on_instance_recovered(self, iid: int):
+        """Readmit ``iid``; a fully-recovered fleet drops the mask so
+        the legacy (device-capable, bit-identical) path resumes."""
+        if self.alive is not None:
+            self.alive[iid] = True
+            if bool(self.alive.all()):
+                self.alive = None
 
     def session_pin(self, session_id: int) -> Optional[int]:
         """Which instance holds this session's KV$ lineage, if the
@@ -505,6 +542,13 @@ class SessionAffinityPolicy(Policy):
 
     def session_pin(self, session_id):
         return self.pins.get(("s", session_id))
+
+    def on_instance_failed(self, iid, n):
+        # the dead instance's KV lineages are gone — any pin to it is
+        # stale affinity toward a cold instance; drop them so sessions
+        # re-pin wherever their cold re-prefill lands
+        super().on_instance_failed(iid, n)
+        self.pins = {k: v for k, v in self.pins.items() if v != iid}
 
 
 # ---------------------------------------------------------------------------

@@ -149,6 +149,41 @@ class Router:
             return [self.route(r, now) for r in reqs]
         return self.pipeline.run_wave(reqs, now)
 
+    # ---- overload control --------------------------------------------
+    def on_retract(self, iid: int, req: Request, prefill_left: int):
+        """A queued-or-prefilling request was cancelled (deadline blown):
+        reverse its ``on_route`` contribution to the indicators so the
+        instance's score reflects the freed work.  The speculative KV$
+        insert from routing stays — the LRU evicts it like any other
+        cold lineage (re-indexing a retraction would cost a walk for
+        state the engine may genuinely keep)."""
+        self.factory[iid].on_retract(req, prefill_left)
+
+    # ---- instance churn ----------------------------------------------
+    def mark_failed(self, iid: int):
+        """An instance died: before the next wave commits, the failure
+        must reach scoring (policy alive mask), the aggregated index
+        (``remove_instance`` through the shard backend's owner-routed
+        mutation), the device mirror (dirty flags on the zeroed
+        indicator columns), and speculation (pending captured walks
+        dropped) — Contract 4 in ``docs/ARCHITECTURE.md``."""
+        self.pipeline.drop_prefetch()
+        self.factory.on_instance_failed(iid)
+        self.policy.on_instance_failed(iid, self.factory.n)
+
+    def mark_drained(self, iid: int):
+        """Graceful drain: stop routing new work to ``iid`` but keep its
+        KV$ lineage and queue state intact (in-flight work completes)."""
+        self.pipeline.drop_prefetch()
+        self.policy.on_instance_failed(iid, self.factory.n)
+
+    def mark_recovered(self, iid: int):
+        """A failed/drained instance rejoined (cold: its KV$ and queue
+        state were reset at failure time).  When the whole fleet is
+        live again the policy drops its mask and the device wave path
+        resumes."""
+        self.policy.on_instance_recovered(iid)
+
     # ---- response piggyback hooks ------------------------------------
     def on_prefill_progress(self, iid: int, n_tokens: int):
         self.factory[iid].on_prefill_progress(n_tokens)

@@ -239,11 +239,24 @@ class ThreadBackend(_InProcessBackend):
                 thread_name_prefix="prefix-shard")
         return self._pool
 
+    @staticmethod
+    def _result(s, f):
+        """Bounded drain of one shard's walk future: a worker thread
+        stuck past ``_POLL_TIMEOUT`` raises a diagnostic naming the
+        shard instead of wedging the router forever."""
+        from concurrent.futures import TimeoutError as _FutTimeout
+        try:
+            return f.result(timeout=_POLL_TIMEOUT)
+        except _FutTimeout:
+            raise RuntimeError(
+                f"prefix-shard {s} walk stuck on thread backend "
+                f"(no result within {_POLL_TIMEOUT:.0f}s)") from None
+
     def _drain(self):
         if self._inflight:
             pending, self._inflight = self._inflight, []
-            for f in pending:
-                f.result()
+            for s, f in pending:
+                self._result(s, f)
 
     def mutate(self, s, op, *args):
         self._drain()
@@ -251,14 +264,15 @@ class ThreadBackend(_InProcessBackend):
 
     def _submit(self, tasks):
         pool = self._ensure_pool()
-        futures = [pool.submit(t) for t in tasks]
+        futures = [(s, pool.submit(t)) for s, t in enumerate(tasks)]
         self._inflight.extend(futures)
 
         def wait():
-            for f in futures:
-                f.result()
-            self._inflight = [f for f in self._inflight
-                              if f not in futures]
+            for s, f in futures:
+                self._result(s, f)
+            done = {f for _, f in futures}
+            self._inflight = [p for p in self._inflight
+                              if p[1] not in done]
         return WalkHandle(wait)
 
     def submit_walk(self, blocks, out):
@@ -473,28 +487,32 @@ class ProcessBackend(ShardBackend):
                 child.close()
                 self._conns.append(parent)
                 self._procs.append(p)
-            for conn in self._conns:
-                msg = self._recv(conn)
+            for s, conn in enumerate(self._conns):
+                msg = self._recv(conn, s)
                 self._mask_names.append(msg[1])
         except BaseException:
             self.close()
             raise
 
     # ---- plumbing -----------------------------------------------------
-    def _recv(self, conn):
-        """Receive one worker message; timeout, EOF, and ``err``
-        answers tear the backend down before raising."""
+    def _recv(self, conn, s):
+        """Receive one message from shard ``s``'s worker; timeout, EOF,
+        and ``err`` answers tear the backend down before raising a
+        diagnostic that names the stuck/dead shard."""
         if not conn.poll(_POLL_TIMEOUT):
             self.close()
-            raise RuntimeError("prefix-shard worker timed out")
+            raise RuntimeError(
+                f"prefix-shard {s} worker timed out (no answer within "
+                f"{_POLL_TIMEOUT:.0f}s)")
         try:
             msg = conn.recv()
         except (EOFError, OSError):
             self.close()
-            raise RuntimeError("prefix-shard worker died")
+            raise RuntimeError(f"prefix-shard {s} worker died")
         if msg[0] == "err":
             self.close()
-            raise RuntimeError(f"prefix-shard worker failed: {msg[1]}")
+            raise RuntimeError(
+                f"prefix-shard {s} worker failed: {msg[1]}")
         return msg
 
     def _send(self, s, msg):
@@ -502,7 +520,8 @@ class ProcessBackend(ShardBackend):
             self._conns[s].send(msg)
         except (OSError, ValueError):
             self.close()
-            raise RuntimeError("prefix-shard worker pipe is closed")
+            raise RuntimeError(
+                f"prefix-shard {s} worker pipe is closed")
 
     # ---- mutation -----------------------------------------------------
     def mutate(self, s, op, *args):
@@ -544,8 +563,8 @@ class ProcessBackend(ShardBackend):
 
     def _collect(self, shm, shape, out):
         def wait():
-            for conn in self._conns:
-                self._recv(conn)
+            for s, conn in enumerate(self._conns):
+                self._recv(conn, s)
             buf = np.ndarray(shape, dtype=np.int64, buffer=shm.buf)
             np.copyto(out, buf)
             del buf
@@ -575,8 +594,8 @@ class ProcessBackend(ShardBackend):
         total = 0
         for s in range(self.n_shards):
             self._send(s, ("nodes",))
-        for conn in self._conns:
-            total += self._recv(conn)[1]
+        for s, conn in enumerate(self._conns):
+            total += self._recv(conn, s)[1]
         return total
 
     # ---- telemetry ----------------------------------------------------

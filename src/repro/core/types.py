@@ -23,6 +23,13 @@ class Request:
     t_first_token: float = 0.0
     t_finish: float = 0.0
 
+    # ---- overload control / fault tolerance ----
+    deadline: Optional["Deadline"] = None   # stamped by the admission layer
+    drop_reason: str = ""          # "" | "shed" (admission) | "retracted"
+    t_drop: float = 0.0            # when the drop happened
+    prefill_done: int = 0          # prefill tokens burnt before a retraction
+    retries: int = 0               # re-routes after instance failure
+
     @property
     def new_tokens(self) -> int:
         return self.prompt_len - self.hit_tokens
@@ -61,5 +68,60 @@ class SLO:
         return req.t_finish > 0.0 and self.ttft_met(req) \
             and self.tpot_met(req)
 
+    def deadline(self, arrival: float, output_len: int,
+                 slack: float = 1.0) -> "Deadline":
+        """Split prefill/decode deadlines (absolute times) for a request
+        arriving at ``arrival``: first token by ``arrival + ttft*slack``,
+        last token a further ``(output_len-1) * tpot * slack`` after
+        that (TetriSched-style split — retraction checks prefill and
+        finish independently)."""
+        prefill = arrival + self.ttft * slack
+        finish = prefill + max(output_len - 1, 0) * self.tpot * slack
+        return Deadline(prefill=prefill, finish=finish)
+
+
+@dataclasses.dataclass(frozen=True)
+class Deadline:
+    """Absolute per-request deadlines (seconds since trace start)."""
+    prefill: float     # latest acceptable first token
+    finish: float      # latest acceptable last token
+
+    def prefill_blown(self, now: float) -> bool:
+        return now > self.prefill
+
+    def finish_blown(self, now: float) -> bool:
+        return now > self.finish
+
 
 DEFAULT_SLO = SLO()
+
+#: Per-family SLOs (chat-lenient / agent-strict, ROADMAP §3) — the one
+#: table every consumer reads: ``workloads.sessions`` builds specs from
+#: it, ``cluster.metrics`` can break attainment down by it, and the
+#: admission gate derives deadlines from it.  Families not listed fall
+#: back to ``DEFAULT_SLO``.
+FAMILY_SLOS = {
+    "chatbot": SLO(ttft=2.5, tpot=0.025),    # humans tolerate slack
+    "agent": SLO(ttft=1.0, tpot=0.015),      # API fan-out, strict
+    "coder": SLO(ttft=2.0, tpot=0.020),
+    "toolagent": SLO(ttft=1.5, tpot=0.020),
+}
+
+
+def slo_for_family(family: str) -> SLO:
+    """The family's SLO, or ``DEFAULT_SLO`` for unknown/untagged."""
+    return FAMILY_SLOS.get(family, DEFAULT_SLO)
+
+
+def stamp_deadline(req: Request, slo: Optional[SLO] = None,
+                   slack: float = 1.0) -> Request:
+    """Stamp ``req.deadline`` from its family SLO (or an explicit one).
+
+    Idempotent per request object: an already-stamped request keeps its
+    deadline (re-routed orphans after instance failure retain the
+    original promise made to the session).
+    """
+    if req.deadline is None:
+        slo = slo if slo is not None else slo_for_family(req.family)
+        req.deadline = slo.deadline(req.arrival, req.output_len, slack)
+    return req

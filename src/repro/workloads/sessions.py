@@ -55,10 +55,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.types import DEFAULT_SLO, SLO, Request
+from repro.core.types import DEFAULT_SLO, FAMILY_SLOS, SLO, Request, \
+    slo_for_family
 
-__all__ = ["BLOCK", "SLO", "DEFAULT_SLO", "SessionSpec", "SESSIONS",
-           "Session", "make_sessions", "make_mixed_sessions",
+__all__ = ["BLOCK", "SLO", "DEFAULT_SLO", "FAMILY_SLOS", "SessionSpec",
+           "SESSIONS", "Session", "make_sessions", "make_mixed_sessions",
            "session_stats", "blocks_to_tokens"]
 
 BLOCK = 64                 # tokens per content block (matches traces.py)
@@ -98,34 +99,42 @@ class SessionSpec:
 # inter-turn gap), "agent" gains its real fan-out structure (parallel
 # sub-calls per turn), and coder/toolagent think times are tool-exec
 # latencies.  ``expected_requests()`` is the bridge for rate conversion.
+# Each spec's SLO comes from ``core.types.FAMILY_SLOS`` (chat-lenient /
+# agent-strict) — the same per-family table the metrics breakdown and
+# the admission gate's deadlines read, so abandonment, attainment, and
+# shedding judge a request by one threshold.
 SESSIONS: Dict[str, SessionSpec] = {
     # ChatGPT-like chat: human think time dominates the loop period
     "chatbot": SessionSpec("chat", "chatbot", app_prefix_blocks=12,
                            n_apps=8, zipf_a=1.2, turns_mean=5.0,
                            first_input_blocks=18, turn_input_blocks=4,
                            output_tokens_mean=320, output_tokens_cv=0.8,
-                           think_time_mean=25.0),
+                           think_time_mean=25.0,
+                           slo=slo_for_family("chatbot")),
     # API-calling agent: short prompts, parallel sub-calls, tight loop
     "agent": SessionSpec("api", "agent", app_prefix_blocks=10,
                          n_apps=24, zipf_a=1.4, turns_mean=2.0,
                          first_input_blocks=4, turn_input_blocks=2,
                          output_tokens_mean=96, output_tokens_cv=0.6,
                          think_time_mean=2.0, fan_mean=3.0,
-                         embed_output=False),
+                         embed_output=False,
+                         slo=slo_for_family("agent")),
     # coding agent: long tool loops; each iteration re-sends the whole
     # transcript, so prior output becomes shared cached prefix
     "coder": SessionSpec("codeagent", "coder", app_prefix_blocks=24,
                          n_apps=12, zipf_a=1.1, turns_mean=8.0,
                          first_input_blocks=90, turn_input_blocks=20,
                          output_tokens_mean=480, output_tokens_cv=0.9,
-                         think_time_mean=3.0),
+                         think_time_mean=3.0,
+                         slo=slo_for_family("coder")),
     # Mooncake-style tool agent: very long loops, near-zero think time
     "toolagent": SessionSpec("codeagent", "toolagent",
                              app_prefix_blocks=30, n_apps=6, zipf_a=1.3,
                              turns_mean=14.0, first_input_blocks=25,
                              turn_input_blocks=8,
                              output_tokens_mean=150,
-                             output_tokens_cv=0.5, think_time_mean=1.0),
+                             output_tokens_cv=0.5, think_time_mean=1.0,
+                             slo=slo_for_family("toolagent")),
 }
 
 

@@ -1,0 +1,317 @@
+"""Chaos tests: instance churn, shrinking fleets, and degraded modes.
+
+Three contracts from the overload/failure work (``docs/ARCHITECTURE.md``
+Contract 4 and the "Overload & failure" section):
+
+1. **Shrinking-fleet differential** — random kill sequences
+   (``remove_instance``) through the flat bitset index and the sharded
+   index at 1/2/4/8 shards across serial/thread/process backends stay
+   bit-identical to the frozen bigint reference
+   (``repro.core._prefix_ref``) after every kill.
+2. **Mid-run churn recovery** — ``fail_at``/``recover_at`` during a
+   simulation: orphans re-route and finish, nothing is scheduled onto a
+   dead instance, and the post-churn aggregated index agrees with a
+   serial from-scratch rebuild over the surviving per-instance radix
+   trees (the KV$ ground truth).
+3. **Bit-identity anchor** — with every overload control and fault
+   injection disabled, decision sequences are bit-identical to the
+   frozen scalar reference (``repro.core.scalar_ref``); the resilience
+   machinery must be invisible when off.
+
+Degraded-mode worker death (``inject_failure`` → serial rebuild, no
+shm/worker leaks) rides along as chaos tier too.
+"""
+import copy
+import multiprocessing as mp
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import ClusterSim
+from repro.configs import get_config
+from repro.core import (IndicatorFactory, LatencyModel, OverloadControl,
+                        Router, make_policy, spec_from_config)
+from repro.core._prefix_ref import AggregatedPrefixIndexRef
+from repro.core.indicators import AggregatedPrefixIndex
+from repro.core.scalar_ref import make_scalar_policy
+from repro.core.sharded_index import ShardedPrefixIndex
+from repro.workloads.traces import make_trace
+
+BACKENDS = ("serial", "thread", "process")
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return spec_from_config(get_config("qwen2_7b"), chips=1)
+
+
+def _shm_segments():
+    try:
+        return {n for n in os.listdir("/dev/shm") if n.startswith("psm_")}
+    except FileNotFoundError:
+        return set()
+
+
+def _live_workers():
+    return [p for p in mp.active_children()
+            if p.name.startswith("prefix-shard")]
+
+
+def _rand_chain(rng, vocab=6, max_len=10):
+    length = int(rng.integers(1, max_len))
+    return tuple(int(x) for x in rng.integers(0, vocab, size=length))
+
+
+# ---------------------------------------------------------------------------
+# 1. shrinking-fleet differential: random kill sequences
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+@pytest.mark.process
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_kill_sequence_differential(n_shards):
+    """Kill instances one by one (with adds to survivors in between);
+    after every kill the flat index and all three sharded backends must
+    agree with the bigint reference on wave walks."""
+    n = 24
+    rng = np.random.default_rng(200 + n_shards)
+    ref = AggregatedPrefixIndexRef(n)
+    flat = AggregatedPrefixIndex(n)
+    idxs = {b: ShardedPrefixIndex(n, n_shards, backend=b)
+            for b in BACKENDS}
+    everyone = [flat] + list(idxs.values())
+    try:
+        for _ in range(120):
+            iid = int(rng.integers(0, n))
+            chain = _rand_chain(rng)
+            ref.add(iid, chain)
+            for ix in everyone:
+                ix.add(iid, chain)
+        alive = list(range(n))
+        while alive:
+            victim = alive.pop(int(rng.integers(0, len(alive))))
+            ref.remove_instance(victim)
+            for ix in everyone:
+                ix.remove_instance(victim)
+            # survivors keep serving: a few fresh inserts between kills
+            for _ in range(3):
+                if not alive:
+                    break
+                iid = alive[int(rng.integers(0, len(alive)))]
+                chain = _rand_chain(rng)
+                ref.add(iid, chain)
+                for ix in everyone:
+                    ix.add(iid, chain)
+            queries = [_rand_chain(rng) for _ in range(4)]
+            want = ref.match_depths_many(queries)
+            assert np.array_equal(want, flat.match_depths_many(queries)), \
+                f"flat diverged with {len(alive)} instances left"
+            for name, ix in idxs.items():
+                got = ix.match_depths_many(queries)
+                assert np.array_equal(want, got), \
+                    f"{name} diverged with {len(alive)} instances left"
+        # fully-killed fleet: every walk is all-zero
+        assert not np.any(ref.match_depths_many([(1, 2, 3)]))
+        for ix in everyone:
+            assert not np.any(ix.match_depths_many([(1, 2, 3)]))
+    finally:
+        for ix in idxs.values():
+            ix.close()
+    assert not _live_workers()
+
+
+# ---------------------------------------------------------------------------
+# 2. mid-run churn through the simulator
+# ---------------------------------------------------------------------------
+def _churn_run(spec, n_shards=1, walk_backend=None, n=16):
+    trace = make_trace("chatbot", qps=16.0, duration=90.0, seed=21)
+    router = Router(make_policy("lmetric"), n,
+                    kv_capacity_tokens=200_000, n_shards=n_shards,
+                    walk_backend=walk_backend)
+    sim = ClusterSim(router, spec, LatencyModel(spec))
+    sim.fail_at(30.0, 2)
+    sim.fail_at(45.0, 7)
+    sim.recover_at(60.0, 2)
+    sim.recover_at(60.0, 7)
+    done = sim.run(copy.deepcopy(trace))
+    return trace, router, sim, done
+
+
+@pytest.mark.chaos
+def test_mid_run_churn_recovers(spec):
+    """Hard failures mid-run: every request still finishes, orphans are
+    rerouted (with recovery latency recorded), the dead instances get no
+    work while down, and the mask drops once the fleet is whole."""
+    trace, router, sim, done = _churn_run(spec)
+    try:
+        assert len(done) == len(trace)           # nothing lost, only late
+        assert len(sim.churn_events) == 4
+        orphans = [r for r in done if r.retries > 0]
+        assert orphans, "kills at t=30/45 under load must orphan requests"
+        assert len(sim.churn_recovery) == len(orphans)
+        assert all(lat > 0.0 for lat in sim.churn_recovery)
+        for r in done:                           # dead instances get no work
+            if 30.0 <= r.t_sched < 60.0:
+                assert r.sched_to != 2
+            if 45.0 <= r.t_sched < 60.0:
+                assert r.sched_to != 7
+        # fleet is whole again: the alive mask is retired (device wave
+        # path resumes) and the failed instances are serving again
+        assert router.policy.alive is None
+        late = [r for r in done if r.t_sched >= 60.0]
+        assert {r.sched_to for r in late} & {2, 7}, \
+            "recovered instances never rejoined the rotation"
+    finally:
+        router.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_churn_decisions_identical_across_backends(spec, n_shards):
+    """The same churn schedule through serial, thread, and process walk
+    backends yields bit-identical request fates at every shard count —
+    and the post-churn aggregated index equals a serial from-scratch
+    rebuild over the surviving radix trees."""
+    before = _shm_segments()
+    fates = {}
+    for backend in BACKENDS:
+        kw = ({"walk_backend": backend} if backend != "serial"
+              else {"walk_backend": None})
+        trace, router, sim, done = _churn_run(spec, n_shards=n_shards, **kw)
+        try:
+            fates[backend] = [(r.rid, r.sched_to, r.hit_tokens, r.retries)
+                              for r in done]
+            _assert_index_matches_rebuild(router.factory)
+        finally:
+            router.close()
+    assert fates["thread"] == fates["serial"], f"shards={n_shards}"
+    assert fates["process"] == fates["serial"], f"shards={n_shards}"
+    assert _shm_segments() <= before
+    assert not _live_workers()
+
+
+def _assert_index_matches_rebuild(factory):
+    """The live aggregated index must equal a from-scratch serial
+    rebuild (flat AND bigint reference) over ``inst.kv.chains()`` —
+    the recovery invariant ``_rebuild_index`` relies on."""
+    n = factory.n
+    fresh = AggregatedPrefixIndex(n)
+    ref = AggregatedPrefixIndexRef(n)
+    rng = np.random.default_rng(3)
+    for inst in factory.instances:
+        for chain in inst.kv.chains():
+            fresh.add(inst.iid, chain)
+            ref.add(inst.iid, chain)
+    probes = [_rand_chain(rng, vocab=50, max_len=8) for _ in range(8)]
+    # real lineages too, not just random misses
+    for inst in factory.instances:
+        for chain in list(inst.kv.chains())[:3]:
+            probes.append(tuple(chain))
+    want = ref.match_depths_many(probes)
+    assert np.array_equal(want, fresh.match_depths_many(probes))
+    assert np.array_equal(want, factory._agg.match_depths_many(probes))
+
+
+# ---------------------------------------------------------------------------
+# 3. degraded mode: walk-backend worker death mid-query
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+@pytest.mark.process
+def test_degraded_rebuild_on_worker_death():
+    """Killing a shard worker mid-query must not raise out of the
+    factory: the index is rebuilt from the radix trees, the answer is
+    still correct, and nothing leaks."""
+    before = _shm_segments()
+    rng = np.random.default_rng(9)
+    with IndicatorFactory(32, kv_capacity_tokens=1 << 20, n_shards=4,
+                          walk_backend="process") as factory:
+        chains = []
+        for _ in range(60):
+            iid = int(rng.integers(0, 32))
+            chain = _rand_chain(rng)
+            factory.instances[iid].kv.insert(chain)
+            chains.append((iid, chain))
+        factory._agg.backend.inject_failure(2)
+        req_chain = chains[17][1]
+        req = _probe_request(req_chain, factory.block_size)
+        hits = factory.hits_for(req)             # degraded: rebuild + retry
+        assert factory.degraded_rebuilds == 1
+        ref = AggregatedPrefixIndexRef(32)
+        for iid, chain in chains:
+            ref.add(iid, chain)
+        want = np.minimum(ref.match_depths(req_chain) * factory.block_size,
+                          req.prompt_len)
+        assert np.array_equal(np.asarray(hits), want)
+        # the wave path also survives a death between submit and collect
+        factory._agg.backend.inject_failure(0)
+        reqs = [_probe_request(c, factory.block_size)
+                for _, c in chains[:5]]
+        h = factory.wave_submit(reqs)
+        depth, _lcp, _plen = factory.wave_collect(h)
+        assert factory.degraded_rebuilds == 2
+        want_many = ref.match_depths_many([r.blocks for r in reqs])
+        assert np.array_equal(depth, want_many)
+    assert _shm_segments() <= before
+    assert not _live_workers()
+
+
+def _probe_request(chain, block_size):
+    from repro.core.types import Request
+    return Request(rid=0, arrival=0.0, prompt_len=len(chain) * block_size,
+                   output_len=8, blocks=tuple(chain))
+
+
+# ---------------------------------------------------------------------------
+# 4. bit-identity anchor: controls off == frozen references
+# ---------------------------------------------------------------------------
+@pytest.mark.chaos
+def test_disabled_controls_bit_identical_to_scalar_ref(spec):
+    """``overload=None``, ``OverloadControl()`` (all-off), and the
+    frozen scalar reference policy all produce the same decision
+    sequence — the resilience machinery is invisible when off."""
+    trace = make_trace("chatbot", qps=12.0, duration=60.0, seed=4)
+
+    def fates(policy, overload):
+        router = Router(policy, 8, kv_capacity_tokens=150_000)
+        sim = ClusterSim(router, spec, LatencyModel(spec),
+                         overload=overload)
+        done = sim.run(copy.deepcopy(trace))
+        assert not sim.dropped
+        return [(r.rid, r.sched_to, r.hit_tokens, round(r.t_finish, 9))
+                for r in sorted(done, key=lambda r: r.rid)]
+
+    base = fates(make_policy("lmetric"), None)
+    allopt_off = fates(make_policy("lmetric"), OverloadControl())
+    ref_policy = make_scalar_policy("lmetric")
+    # the frozen scalar classes predate the simulator's lifecycle
+    # hooks; shim the no-op ones rather than "improving" the frozen file
+    ref_policy.on_finish = lambda iid, req: None
+    ref_policy.batch_supported = lambda k: False
+    scalar = fates(ref_policy, None)
+    assert allopt_off == base
+    assert scalar == base
+
+
+@pytest.mark.chaos
+def test_overload_controls_change_nothing_at_low_load(spec):
+    """At comfortable load the admission gate and retraction pass must
+    be no-ops: same fates as the uncontrolled run, zero drops."""
+    trace = make_trace("chatbot", qps=8.0, duration=60.0, seed=6)
+
+    def fates(overload):
+        router = Router(make_policy("lmetric"), 8,
+                        kv_capacity_tokens=150_000)
+        sim = ClusterSim(router, spec, LatencyModel(spec),
+                         overload=overload)
+        done = sim.run(copy.deepcopy(trace))
+        stats = sim.overload_stats()
+        return ([(r.rid, r.sched_to, r.hit_tokens) for r in done],
+                stats["shed"], stats["retracted"])
+
+    base, _, _ = fates(None)
+    ctl, shed, retracted = fates(OverloadControl(admission=True,
+                                                 retraction=True))
+    assert shed == 0 and retracted == 0
+    assert ctl == base

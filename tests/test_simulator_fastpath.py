@@ -71,7 +71,7 @@ class _RefClusterSim(ClusterSim):
             self._start_step(inst)
 
     def _on_step_end(self, payload):
-        iid, allocs, decode_bs = payload
+        iid, allocs, decode_bs, _epoch = payload
         inst = self.instances[iid]
         for req, tokens in allocs:
             inst.prefill_left[req.rid] -= tokens
