@@ -15,7 +15,14 @@ check keeps them diffable across PRs:
   — a spread above 0.5 prints a WARN (artifact stays valid, but deltas
   vs other runs are suspect), and the sharded sections must cover the
   16384-instance point with per-shard walk telemetry and an intact
-  sharded==flat ``agree`` bit.
+  sharded==flat ``agree`` bit,
+* observability artifacts: ``obs_trace.json`` must be valid Chrome
+  trace-event JSON (``repro.obs.trace.validate_events`` — balanced B/E
+  nesting, monotonic timestamps, named pids — the same validation
+  Perfetto-loadability rests on), ``obs_metrics.json`` a well-formed
+  registry snapshot, and ``obs_overhead.json`` must carry an intact
+  ``identical_decisions`` bit (observability changing a routing
+  decision is a hard failure, Contract 5).
 
 Usage:  python scripts/check_bench_schema.py [results/bench]
 Exit 0 = all artifacts valid; 1 = violations (printed per file).
@@ -24,6 +31,8 @@ import json
 import math
 import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 #: required keys per policy record in closed_loop.json (grid and sweep)
 CLOSED_LOOP_RECORD = (
@@ -47,14 +56,22 @@ PREFIX_INDEX_RECORD = (
 CAPACITY_KNEE_RECORD = ("goodput_rps", "abandon_rate", "knee_frac",
                         "sat_goodput_rps")
 #: per-(load, control) record in overload.json (overload/churn sweep) —
-#: the waste accounting plus the controls' own counters
+#: the waste accounting plus the controls' own counters; every record
+#: also carries the cross-family ``interference`` block (per-family
+#: queue delay + displaced-prefill attribution from the registry)
 OVERLOAD_RECORD = (
     "n", "goodput_rps", "tok_goodput_rps", "slo_attainment",
     "abandon_rate", "wasted_fraction", "useful_prefill_tokens",
     "wasted_prefill_tokens", "n_shed", "n_retracted", "n_rerouted",
     "churn_recovery_p50", "n_churn_events", "sched_us", "load_mult",
-    "control",
+    "control", "interference",
 )
+#: obs_overhead.json: the enabled/disabled cost record plus the
+#: identity bit the schema check enforces hard
+OBS_OVERHEAD_RECORD = ("n_sessions", "n_requests", "wall_ms",
+                       "overhead_metrics", "overhead_enabled",
+                       "identical_decisions", "trace_events",
+                       "provenance", "timing")
 #: per-size record in router_scale.json (vector vs frozen scalar ref)
 ROUTER_SCALE_RECORD = ("vector_us", "scalar_us", "walk_us")
 #: per-(size, shard-count) record in the sharded sections — per-shard
@@ -267,6 +284,32 @@ def check_file(path):
                 errors.append(f"{name}.churn.{c}: no churn events "
                               f"recorded in the churn section")
     elif name in ("batch_routing.json", "detector_observe.json"):
+        _check_timing(data, name, errors, warnings)
+    elif name == "obs_trace.json":
+        events = data.get("traceEvents")
+        if not isinstance(events, list) or not events:
+            errors.append(f"{name}: missing/empty 'traceEvents' list")
+        else:
+            try:
+                from repro.obs.trace import validate_events
+                validate_events(events)
+            except ValueError as e:
+                errors.append(f"{name}: invalid trace ({e})")
+            except ImportError:
+                warnings.append(f"{name}: repro.obs not importable — "
+                                f"trace schema not validated")
+    elif name == "obs_metrics.json":
+        for key in ("counters", "gauges", "hists"):
+            if not isinstance(data.get(key), dict):
+                errors.append(f"{name}: missing '{key}' dict")
+        for hname, st in data.get("hists", {}).items():
+            _check_record(st, ("count", "sum", "max", "p50", "p99"),
+                          f"{name}.hists.{hname}", errors)
+    elif name == "obs_overhead.json":
+        _check_record(data, OBS_OVERHEAD_RECORD, name, errors)
+        if data.get("identical_decisions") is not True:
+            errors.append(f"{name}: identical_decisions is not True — "
+                          f"observability changed a routing decision")
         _check_timing(data, name, errors, warnings)
     elif name == "fig22.json":
         for t, by_pol in data.items():

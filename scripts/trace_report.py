@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Report over a routing trace + metrics snapshot artifact pair.
+
+Joins the two observability artifacts a traced run exports:
+
+* the Chrome trace-event JSON (``repro.obs.trace.SpanTracer.export`` —
+  virtual-clock timeline of waves, speculation, admission, drops,
+  retraction, churn; Perfetto-loadable), and
+* the metrics-registry snapshot (``ClusterSim.metrics_snapshot`` —
+  wall-clock per-stage histograms, counters, the shard-worker
+  fixed-slot block),
+
+into the operator view: per-stage p50/p99 (wall clock, from the
+registry histograms — trace timestamps are deliberately virtual),
+speculation overlap fraction, the shed/retract/churn event timeline
+(virtual seconds, from the trace), and multiplication-failure-condition
+occurrences from the provenance detector.
+
+Usage:
+  PYTHONPATH=src python scripts/trace_report.py results/bench/obs_trace.json \\
+      [--metrics results/bench/obs_metrics.json] [--timeline-limit 20]
+
+Exit 0 on a valid trace; 1 when the trace fails schema validation.
+"""
+import argparse
+import collections
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.trace import validate_events  # noqa: E402
+
+#: trace instants that make up the operator timeline
+TIMELINE_EVENTS = ("drop", "churn.fail", "churn.drain", "churn.recover",
+                   "index.degraded_rebuild")
+
+#: registry histograms reported as the per-stage latency table
+STAGE_HISTS = ("pipeline.walk_us", "pipeline.score_us",
+               "pipeline.commit_us")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def span_counts(events):
+    """Per-name counts of sampled spans and instants."""
+    spans = collections.Counter()
+    instants = collections.Counter()
+    for ev in events:
+        if ev["ph"] == "B":
+            spans[ev["name"]] += 1
+        elif ev["ph"] == "i":
+            instants[ev["name"]] += 1
+    return spans, instants
+
+
+def timeline(events, limit):
+    """Chronological shed/retract/churn/rebuild rows: (t_s, name,
+    args).  Timestamps are virtual simulator seconds."""
+    rows = []
+    for ev in events:
+        name = ev["name"]
+        if name in TIMELINE_EVENTS or name.startswith("churn."):
+            rows.append((ev["ts"] / 1e6, name, ev.get("args", {})))
+    rows.sort(key=lambda r: r[0])
+    return rows if limit <= 0 else rows[:limit]
+
+
+def stage_table(snapshot):
+    """Wall-clock per-stage stats from the registry histograms."""
+    hists = snapshot.get("hists", {})
+    return [(name.split(".", 1)[1], hists[name])
+            for name in STAGE_HISTS if name in hists]
+
+
+def overlap_fraction(snapshot):
+    c = snapshot.get("counters", {})
+    hidden = c.get("pipeline.spec_hidden_ns", 0)
+    blocked = c.get("pipeline.spec_blocked_ns", 0)
+    denom = hidden + blocked
+    return hidden / denom if denom else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON path")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics-registry snapshot JSON path")
+    ap.add_argument("--timeline-limit", type=int, default=20,
+                    help="max timeline rows printed (<=0: all)")
+    args = ap.parse_args()
+
+    doc = load(args.trace)
+    events = doc.get("traceEvents", [])
+    try:
+        validate_events(events)
+    except ValueError as e:
+        print(f"INVALID trace {args.trace}: {e}", file=sys.stderr)
+        return 1
+
+    pids = {ev["pid"]: ev["args"]["name"] for ev in events
+            if ev["ph"] == "M" and ev["name"] == "process_name"}
+    spans, instants = span_counts(events)
+    print(f"trace: {args.trace}")
+    print(f"  events: {len(events)}  tracks: "
+          + ", ".join(f"{pid}={name}" for pid, name in sorted(pids.items())))
+    if spans:
+        print("  sampled spans: "
+              + "  ".join(f"{n}×{c}" for n, c in sorted(spans.items())))
+    if instants:
+        print("  instants:      "
+              + "  ".join(f"{n}×{c}" for n, c in sorted(instants.items())))
+
+    snapshot = None
+    if args.metrics:
+        snapshot = load(args.metrics)
+    if snapshot is not None:
+        print("\nper-stage wall-clock latency (registry histograms):")
+        print(f"  {'stage':12s} {'count':>7s} {'p50_us':>9s} "
+              f"{'p99_us':>9s} {'max_us':>9s}")
+        for stage, st in stage_table(snapshot):
+            print(f"  {stage:12s} {st['count']:7d} {st['p50']:9.1f} "
+                  f"{st['p99']:9.1f} {st['max']:9.1f}")
+        c = snapshot.get("counters", {})
+        waves = c.get("pipeline.waves", 0)
+        hits = c.get("pipeline.prefetch_hits", 0)
+        print(f"\nspeculation: overlap_fraction="
+              f"{overlap_fraction(snapshot):.3f} "
+              f"prefetch_hits={hits}/{c.get('pipeline.prefetches', 0)} "
+              f"waves={waves}")
+        fails = c.get("provenance.failure_condition", 0)
+        recs = c.get("provenance.records", 0)
+        print(f"failure-condition (affinity capture): {fails} "
+              f"occurrence(s) over {recs} provenance record(s)")
+        shed = c.get("events.drop.shed", 0)
+        retr = c.get("events.drop.retracted", 0)
+        churn = {k.split(".", 1)[1]: v for k, v in c.items()
+                 if k.startswith("churn.") and isinstance(v, int)}
+        print(f"drops: shed={shed} retracted={retr}  churn={churn}")
+
+    rows = timeline(events, args.timeline_limit)
+    print(f"\nshed/retract/churn timeline ({len(rows)} row(s) shown):")
+    for t, name, a in rows:
+        detail = " ".join(f"{k}={v}" for k, v in sorted(a.items()))
+        print(f"  t={t:10.3f}s  {name:24s} {detail}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -95,8 +95,13 @@ class ClosedLoopSim(_SessionFeedback, ClusterSim):
         """A shed/retracted turn feeds back like a completion: the
         session sees an unserved request (``t_finish`` 0.0 fails the
         SLO predicate), counts the breach against its patience, and —
-        if it stays — schedules the next turn from the drop time."""
+        if it stays — schedules the next turn from the drop time.
+        With a registry attached the closed-loop edge is counted
+        separately (``sessions.dropped_turns``) so the shed/retract
+        timeline can be attributed to session feedback pressure."""
         super()._drop(req, reason)
+        if self._registry is not None:
+            self._registry.inc("sessions.dropped_turns")
         self._session_feedback(req, now=self.now)
 
 

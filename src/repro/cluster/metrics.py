@@ -24,10 +24,41 @@ def pct(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q))
 
 
+def interference_summary(snapshot: Dict) -> Dict:
+    """Cross-family interference view extracted from a metrics-registry
+    snapshot (``repro.obs.registry``; ``ClusterSim.metrics_snapshot``).
+
+    Two halves, joined by family tag:
+
+    * ``displaced_tokens[victim][displacer]`` — prefill tokens already
+      queued ahead of an arriving ``victim``-family request, attributed
+      to the ``displacer`` family that owns them (the simulator's
+      ``_enqueue`` attribution).  The off-diagonal mass is the
+      cross-family interference the per-family SLO split cannot see.
+    * ``queue_delay_ms[family]`` — histogram stats (count/sum/max/
+      p50/p99) of schedule→first-token delay per family, the latency
+      that displacement actually cost.
+    """
+    counters = snapshot.get("counters", {})
+    hists = snapshot.get("hists", {})
+    displaced: Dict[str, Dict[str, int]] = {}
+    pre = "interference.displaced_tokens."
+    for k, v in sorted(counters.items()):
+        if k.startswith(pre):
+            victim, displacer = k[len(pre):].split(".", 1)
+            displaced.setdefault(victim, {})[displacer] = int(v)
+    qpre = "interference.queue_delay_ms."
+    qdelay = {k[len(qpre):]: st for k, st in sorted(hists.items())
+              if k.startswith(qpre)}
+    return {"displaced_tokens": displaced, "queue_delay_ms": qdelay}
+
+
 def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
               slo_tpot: float = SLO_TPOT,
               by_family: bool = True,
-              per_family_slo: bool = False) -> Dict[str, float]:
+              per_family_slo: bool = False,
+              registry_snapshot: Optional[Dict] = None
+              ) -> Dict[str, float]:
     """Latency + SLO summary of a finished-request log.
 
     Besides the TTFT/TPOT percentiles, reports
@@ -46,6 +77,11 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
     in ``core.types.FAMILY_SLOS`` (chat-lenient / agent-strict) instead
     of the single ``slo_ttft``/``slo_tpot`` pair — the mixed-scenario
     spelling the overload bench reports.
+
+    ``registry_snapshot`` (a ``ClusterSim.metrics_snapshot`` dict)
+    additionally attaches the :func:`interference_summary` block —
+    per-family queue delay plus cross-family prefill-displacement
+    attribution — to the result.
     """
     done = [r for r in requests if r.t_finish > 0.0]
     ttft = [r.ttft for r in done]
@@ -85,6 +121,8 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
             fam: summarize(rs, slo_ttft, slo_tpot, by_family=False,
                            per_family_slo=per_family_slo)
             for fam, rs in sorted(fams.items())}
+    if registry_snapshot is not None:
+        out["interference"] = interference_summary(registry_snapshot)
     return out
 
 

@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 from repro.core.latency_model import EngineSpec, LatencyModel
 from repro.core.overload import NO_CONTROL, AdmissionController, \
     OverloadControl
+from repro.core.pipeline import _NULL_CTX
 from repro.core.router import Router
 from repro.core.types import Request
 
@@ -130,6 +131,14 @@ class ClusterSim:
         pipe = getattr(router, "pipeline", None)
         if pipe is not None:
             pipe.next_wave_hint = self._peek_next_wave
+        # observability: the router's obs bundle, unpacked once so the
+        # event loop pays one attribute load + is-None branch per hook
+        # when disabled (Contract 5: no other obs statement executes)
+        obs = getattr(router, "obs", None)
+        self._obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        self._registry = obs.registry if obs is not None else None
+        self._prov = obs.provenance if obs is not None else None
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload):
@@ -204,12 +213,23 @@ class ClusterSim:
 
     # ------------------------------------------------------------------
     def _on_arrivals(self, reqs: List[Request]):
+        if self._tracer is not None:
+            # virtual clock: trace timestamps come from sim time, never
+            # wall time — traces stay byte-identical across runs of the
+            # same scenario.  The clock advances at the emitting
+            # handlers (arrival waves, drops, churn), not once per heap
+            # event: the event loop itself stays observability-free
+            self._tracer.set_time(self.now)
         if self._admission is not None:
             # stamps deadlines (idempotent) and, with admission on,
             # sheds requests no live instance can serve in time
-            reqs, shed = self._admission.admit_wave(
-                self.router.factory, reqs, self.now,
-                alive=self.router.policy.alive)
+            tr = self._tracer
+            span = (tr.span("admission", args={"k": len(reqs)})
+                    if tr is not None else _NULL_CTX)
+            with span:
+                reqs, shed = self._admission.admit_wave(
+                    self.router.factory, reqs, self.now,
+                    alive=self.router.policy.alive)
             for req in shed:
                 self._drop(req, "shed")
             if not reqs:
@@ -225,6 +245,16 @@ class ClusterSim:
 
     def _enqueue(self, req: Request, iid: int):
         inst = self.instances[iid]
+        reg = self._registry
+        if reg is not None and inst.waiting:
+            # cross-family interference attribution: the prefill tokens
+            # already queued ahead of this request displace it — counted
+            # as interference.displaced_tokens.<victim>.<displacer>
+            fam = req.family or "default"
+            left = inst.prefill_left
+            for rid2, r2 in inst.waiting.items():
+                reg.inc("interference.displaced_tokens.%s.%s"
+                        % (fam, r2.family or "default"), left[rid2])
         inst.waiting[req.rid] = req
         inst.prefill_left[req.rid] = max(req.new_tokens, 1)
         if not inst.busy:
@@ -276,6 +306,16 @@ class ClusterSim:
         req.drop_reason = reason
         req.t_drop = self.now
         self.dropped.append(req)
+        if self._obs is not None:
+            if self._registry is not None:
+                self._registry.inc("events.drop.%s" % reason)
+            if self._tracer is not None:
+                self._tracer.set_time(self.now)
+                self._tracer.instant(
+                    "drop", args={"rid": req.rid, "reason": reason,
+                                  "family": req.family})
+            if self._prov is not None:
+                self._prov.outcome(req, reason, self.now)
 
     # ---- instance churn ----------------------------------------------
     def _on_fail(self, iid: int):
@@ -292,6 +332,8 @@ class ClusterSim:
         inst.prefill_left.clear()
         inst.running = []
         inst.generated = {}
+        if self._tracer is not None:
+            self._tracer.set_time(self.now)
         self.router.mark_failed(iid)
         self.churn_events.append(
             {"t": self.now, "iid": iid, "kind": "fail",
@@ -308,11 +350,15 @@ class ClusterSim:
             self._push(self.now, "arrival", req)
 
     def _on_drain(self, iid: int):
+        if self._tracer is not None:
+            self._tracer.set_time(self.now)
         self.router.mark_drained(iid)
         self.churn_events.append(
             {"t": self.now, "iid": iid, "kind": "drain", "orphans": 0})
 
     def _on_recover(self, iid: int):
+        if self._tracer is not None:
+            self._tracer.set_time(self.now)
         self.router.mark_recovered(iid)
         self.churn_events.append(
             {"t": self.now, "iid": iid, "kind": "recover", "orphans": 0})
@@ -364,6 +410,43 @@ class ClusterSim:
         if t_fail is not None:
             # churn recovery latency: failure -> first token elsewhere
             self.churn_recovery.append(req.t_first_token - t_fail)
+            if self._registry is not None:
+                self._registry.observe("churn.recovery_s",
+                                       req.t_first_token - t_fail)
+        if self._registry is not None:
+            # per-family queue delay (schedule -> first token): the
+            # interference view's latency half, joined with the
+            # displaced-tokens counters by cluster.metrics.summarize
+            self._registry.observe(
+                "interference.queue_delay_ms.%s"
+                % (req.family or "default"),
+                (req.t_first_token - req.t_sched) * 1e3)
+        if self._prov is not None:
+            self._prov.outcome(req, "finished", self.now)
+
+    def metrics_snapshot(self) -> Dict:
+        """One merged registry snapshot for this run: the router's
+        re-homed legacy telemetry (``repro.obs.registry.ingest_router``
+        — index walks, pipeline stages, shard-worker fixed-slot block)
+        plus the simulator's own counters (drops, retractions, churn)
+        and the admission gate's mirror.  Works with or without an obs
+        bundle attached — without one, a fresh registry is populated
+        from the source-owned accumulators (all ingestion is
+        ``counter_set``, so calling this repeatedly never
+        double-counts)."""
+        from repro.obs.registry import MetricsRegistry, ingest_router
+        reg = (self._registry if self._registry is not None
+               else MetricsRegistry())
+        ingest_router(reg, self.router)
+        reg.counter_set("sim.finished", len(self.finished))
+        reg.counter_set("sim.dropped", len(self.dropped))
+        reg.counter_set("sim.retractions", self.retractions)
+        reg.counter_set("sim.wasted_prefill_tokens",
+                        int(self.wasted_prefill_tokens))
+        reg.counter_set("sim.churn_events", len(self.churn_events))
+        if self._admission is not None:
+            self._admission.metrics_into(reg)
+        return reg.snapshot()
 
     def overload_stats(self) -> Dict:
         """Raw overload/churn counters for this run; the derived

@@ -772,6 +772,12 @@ class IndicatorFactory:
         # degraded-mode telemetry: walk-backend deaths survived by
         # rebuilding the index from the per-instance radix trees
         self.degraded_rebuilds = 0
+        # exactly-once rebuild event hook (observability): invoked once
+        # per degraded_rebuilds increment, never re-fired for the same
+        # rebuild even when the triggering walk/mutation is retried —
+        # the counter and the event move together (Router wires this to
+        # the obs registry/tracer when observability is attached)
+        self.on_degraded_rebuild = None
         # shard count for the aggregated index AND the device-mirror
         # partition (same shard_bounds cut); 1 = the unsharded flat index
         self.n_shards = max(1, min(int(n_shards), n_instances))
@@ -921,6 +927,16 @@ class IndicatorFactory:
         aggregate is defined over.  Bumps the eviction counter so any
         in-flight wave plan or speculative capture is invalidated."""
         self.degraded_rebuilds += 1
+        cb = self.on_degraded_rebuild
+        if cb is not None:
+            # fire exactly here — the one place the counter increments —
+            # so a worker death that triggers a retried walk (or a
+            # mutation error during mark_failed) cannot double-emit;
+            # observer faults must never break the rebuild itself
+            try:
+                cb(self.degraded_rebuilds)
+            except Exception:
+                pass
         self.evictions += 1
         old, self._agg = self._agg, None
         if old is not None and hasattr(old, "close"):

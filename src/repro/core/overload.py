@@ -73,6 +73,15 @@ class AdmissionController:
         self.shed = 0
         self.admitted = 0
 
+    def metrics_into(self, reg):
+        """Mirror the gate's accumulators onto a metrics registry
+        (``repro.obs.registry``).  Uses ``counter_set`` — the gate owns
+        the counts, the registry mirrors them, so re-ingestion after
+        more waves replaces rather than double-counts (the exactly-once
+        ingestion contract)."""
+        reg.counter_set("admission.shed", self.shed)
+        reg.counter_set("admission.admitted", self.admitted)
+
     def admit_wave(self, factory, reqs: Sequence[Request],
                    now: float, alive: Optional[np.ndarray] = None):
         """Partition ``reqs`` into (admitted, shed) at time ``now``.

@@ -69,7 +69,8 @@ class Router:
                  insert_on_route: bool = True,
                  n_shards: int = 1, parallel_walks: bool = False,
                  walk_backend: Optional[str] = None,
-                 pipeline_overlap: Optional[bool] = None):
+                 pipeline_overlap: Optional[bool] = None,
+                 obs=None):
         self.policy = policy
         self.factory = IndicatorFactory(
             n_instances, kv_capacity_tokens=kv_capacity_tokens,
@@ -80,6 +81,15 @@ class Router:
         self.decision_ns: List[int] = []
         self.routed = 0
         self.pipeline = RoutingPipeline(self, overlap=pipeline_overlap)
+        # observability bundle (repro.obs.Obs) — None (the default)
+        # means *no* observability code runs anywhere in the routing
+        # stack: every integration point is an ``is None`` branch, so
+        # the disabled path is the exact pre-observability instruction
+        # sequence (Contract 5, docs/ARCHITECTURE.md)
+        self.obs = obs
+        if obs is not None and (obs.registry is not None
+                                or obs.tracer is not None):
+            self.factory.on_degraded_rebuild = self._on_degraded_rebuild
 
     # ---- lifecycle ----------------------------------------------------
     def close(self):
@@ -95,11 +105,53 @@ class Router:
     def __exit__(self, *exc):
         self.close()
 
+    # ---- observability -----------------------------------------------
+    def _on_degraded_rebuild(self, n: int):
+        """Exactly-once degraded-rebuild event (fired by the factory at
+        the counter increment — see ``IndicatorFactory
+        .on_degraded_rebuild``)."""
+        obs = self.obs
+        if obs.registry is not None:
+            obs.registry.inc("events.degraded_rebuild")
+        if obs.tracer is not None:
+            obs.tracer.instant("index.degraded_rebuild",
+                               args={"n": n})
+
+    def _emit_churn(self, kind: str, iid: int):
+        obs = self.obs
+        if obs is None:
+            return
+        if obs.registry is not None:
+            obs.registry.inc(f"churn.{kind}")
+        if obs.tracer is not None:
+            obs.tracer.instant(f"churn.{kind}", args={"iid": iid})
+
+    def metrics_snapshot(self) -> dict:
+        """The unified cluster metrics view: one registry snapshot
+        merging the live obs registry (if attached), every legacy
+        telemetry accumulator (factory walks, pipeline stages,
+        degraded rebuilds — ``repro.obs.registry.ingest_router``), and
+        the shard backend's fixed-slot worker block.  Works with or
+        without an attached obs bundle; ``walk_telemetry`` /
+        ``stage_stats`` remain as compatibility shims over the same
+        accumulators."""
+        from repro.obs.registry import MetricsRegistry, ingest_router
+        reg = (self.obs.registry if self.obs is not None
+               and self.obs.registry is not None else MetricsRegistry())
+        ingest_router(reg, self)
+        return reg.snapshot()
+
     # ------------------------------------------------------------------
     def route(self, req: Request, now: float) -> int:
         t0 = time.perf_counter_ns()
         iid = self.policy.route(req, self.factory, now)
         self.decision_ns.append(time.perf_counter_ns() - t0)
+        obs = self.obs
+        if obs is not None and obs.provenance is not None:
+            # before any commit hook mutates indicators, so the record
+            # captures the landscape the argmin actually saw
+            obs.provenance.record(req, iid, self.factory, now,
+                                  policy=self.policy)
         inst = self.factory[iid]
         hit = inst.kv_hit(req, touch=True)
         req.sched_to = iid
@@ -166,7 +218,14 @@ class Router:
         (``remove_instance`` through the shard backend's owner-routed
         mutation), the device mirror (dirty flags on the zeroed
         indicator columns), and speculation (pending captured walks
-        dropped) — Contract 4 in ``docs/ARCHITECTURE.md``."""
+        dropped) — Contract 4 in ``docs/ARCHITECTURE.md``.
+
+        The churn event is emitted *before* the teardown: a shard
+        worker dying mid-wave makes the index mutation below retry
+        through a degraded rebuild, and the emission must not sit
+        inside that retried region (exactly-once into the registry —
+        pinned by ``tests/test_chaos.py``)."""
+        self._emit_churn("fail", iid)
         self.pipeline.drop_prefetch()
         self.factory.on_instance_failed(iid)
         self.policy.on_instance_failed(iid, self.factory.n)
@@ -174,6 +233,7 @@ class Router:
     def mark_drained(self, iid: int):
         """Graceful drain: stop routing new work to ``iid`` but keep its
         KV$ lineage and queue state intact (in-flight work completes)."""
+        self._emit_churn("drain", iid)
         self.pipeline.drop_prefetch()
         self.policy.on_instance_failed(iid, self.factory.n)
 
@@ -182,6 +242,7 @@ class Router:
         state were reset at failure time).  When the whole fleet is
         live again the policy drops its mask and the device wave path
         resumes."""
+        self._emit_churn("recover", iid)
         self.policy.on_instance_recovered(iid)
 
     # ---- response piggyback hooks ------------------------------------

@@ -38,7 +38,7 @@ interface with three implementations:
 
 Shared-memory lifetime (the third architecture contract, see
 ``docs/ARCHITECTURE.md``): every segment — per-shard mask matrices,
-the per-backend telemetry block, the walk output scratch — is closed
+the per-backend fixed-slot metrics block, the walk output scratch — is closed
 AND unlinked by the owner on ``close()`` and on the error paths
 (worker exception, parent timeout, mid-query failure).  Leaks are
 pinned by ``tests/test_shard_backends.py`` against ``/dev/shm``.
@@ -67,6 +67,8 @@ import time
 from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.obs.registry import N_WORKER_SLOTS
 
 from .indicators import AggregatedPrefixIndex, _WORD, shard_bounds
 
@@ -143,6 +145,15 @@ class ShardBackend:
     def shard_walks(self) -> np.ndarray:
         raise NotImplementedError
 
+    def worker_metrics(self) -> Optional[np.ndarray]:
+        """The fixed-slot metrics block: an ``(n_shards,
+        N_WORKER_SLOTS)`` int64 copy, one row per shard worker, columns
+        named by ``repro.obs.registry.WORKER_SLOTS`` (the first two are
+        the legacy ``walk_ns``/``walks`` pair).  The metrics registry
+        merges these rows into per-shard scoped counters
+        (``MetricsRegistry.ingest_worker_block``)."""
+        return None
+
     # ---- lifecycle ----------------------------------------------------
     def close(self):
         raise NotImplementedError
@@ -162,8 +173,12 @@ class _InProcessBackend(ShardBackend):
         super().__init__(n_instances, n_shards, capacity)
         self.shards = [AggregatedPrefixIndex(hi - lo, capacity=capacity)
                        for lo, hi in self.bounds]
-        self._walk_ns = np.zeros(n_shards, dtype=np.int64)
-        self._walks = np.zeros(n_shards, dtype=np.int64)
+        # fixed-slot metrics block (repro.obs.registry.WORKER_SLOTS);
+        # the legacy walk telemetry pair stays columns 0/1 as views
+        self._slots = np.zeros((n_shards, N_WORKER_SLOTS),
+                               dtype=np.int64)
+        self._walk_ns = self._slots[:, 0]
+        self._walks = self._slots[:, 1]
 
     @property
     def shard_walk_ns(self):
@@ -173,8 +188,12 @@ class _InProcessBackend(ShardBackend):
     def shard_walks(self):
         return self._walks
 
+    def worker_metrics(self):
+        return np.array(self._slots)
+
     def mutate(self, s, op, *args):
         getattr(self.shards[s], op)(*args)
+        self._slots[s, 3] += 1               # mutations slot
 
     def n_nodes(self):
         return sum(sh.n_nodes for sh in self.shards)
@@ -184,6 +203,7 @@ class _InProcessBackend(ShardBackend):
         self.shards[s].match_depths(blocks, out=out[lo:hi])
         self._walk_ns[s] += time.perf_counter_ns() - t0
         self._walks[s] += 1
+        self._slots[s, 2] += 1               # walk_batches slot
 
     def _walk_many_task(self, s, lo, hi, chains, order, adj, out):
         t0 = time.perf_counter_ns()
@@ -191,6 +211,7 @@ class _InProcessBackend(ShardBackend):
                                          out=out[:, lo:hi])
         self._walk_ns[s] += time.perf_counter_ns() - t0
         self._walks[s] += len(chains)
+        self._slots[s, 2] += 1               # walk_batches slot
 
     def close(self):
         pass
@@ -260,7 +281,7 @@ class ThreadBackend(_InProcessBackend):
 
     def mutate(self, s, op, *args):
         self._drain()
-        getattr(self.shards[s], op)(*args)
+        super().mutate(s, op, *args)
 
     def _submit(self, tasks):
         pool = self._ensure_pool()
@@ -352,14 +373,18 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
     """Spawn entry point: serve one shard's command loop.
 
     Owns a :class:`_ShmPrefixIndex` over the local instance range
-    ``[lo, hi)`` and attaches to the backend's telemetry block.  The
-    ``finally`` unlinks the mask segment on *every* exit path — clean
-    close, EOF (parent died), or an escaping exception.
+    ``[lo, hi)`` and attaches to the backend's fixed-slot metrics
+    block, where its row is the worker's whole metrics registry
+    (``repro.obs.registry.WORKER_SLOTS`` names the columns — a worker
+    cannot share Python dicts with the parent, so the slot set is
+    closed at spawn time).  The ``finally`` unlinks the mask segment on
+    *every* exit path — clean close, EOF (parent died), or an escaping
+    exception.
     """
     from multiprocessing import shared_memory
     idx = _ShmPrefixIndex(hi - lo, capacity=capacity)
     telem_shm = shared_memory.SharedMemory(name=telem_name)
-    telem = np.ndarray((n_shards, 2), dtype=np.int64,
+    telem = np.ndarray((n_shards, N_WORKER_SLOTS), dtype=np.int64,
                        buffer=telem_shm.buf)
     # the parent reuses one persistent output scratch across walks
     # (grown on demand, new name); cache the attachment so the walk hot
@@ -386,10 +411,13 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
             try:
                 if cmd == "add":
                     idx.add(msg[1], msg[2])
+                    telem[row, 3] += 1          # mutations slot
                 elif cmd == "remove_leaf":
                     idx.remove_leaf(msg[1], msg[2])
+                    telem[row, 3] += 1
                 elif cmd == "remove_instance":
                     idx.remove_instance(msg[1])
+                    telem[row, 3] += 1
                 elif cmd == "walk":
                     _, name, n, blocks = msg
                     t0 = time.perf_counter_ns()
@@ -399,6 +427,7 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
                     del out
                     telem[row, 0] += time.perf_counter_ns() - t0
                     telem[row, 1] += 1
+                    telem[row, 2] += 1          # walk_batches slot
                     conn.send(("ok",))
                 elif cmd == "walk_many":
                     _, name, shape, chains, order, adj = msg
@@ -411,6 +440,7 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
                     del out
                     telem[row, 0] += time.perf_counter_ns() - t0
                     telem[row, 1] += len(chains)
+                    telem[row, 2] += 1          # walk_batches slot
                     conn.send(("ok",))
                 elif cmd == "nodes":
                     conn.send(("ok", idx.n_nodes))
@@ -424,6 +454,7 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
                 else:
                     raise ValueError(f"unknown shard command {cmd!r}")
             except Exception as e:  # answer, let the parent decide
+                telem[row, 4] += 1              # errors slot
                 try:
                     conn.send(("err", repr(e)))
                 except OSError:
@@ -445,11 +476,12 @@ class ProcessBackend(ShardBackend):
     per-worker FIFO ordering sequences them against walks exactly like
     serial execution.  Walk output crosses back through a persistent
     SharedMemory scratch (each worker writes its column slice — the
-    deterministic merge; one walk in flight at a time); per-shard walk
-    telemetry accumulates in a
-    ``(S, 2)`` int64 shared block the parent reads without a round
-    trip.  Every parent receive polls with a timeout; any worker error
-    or timeout tears the whole backend down (segments unlinked,
+    deterministic merge; one walk in flight at a time); per-shard
+    metrics accumulate in an ``(S, N_WORKER_SLOTS)`` int64 shared
+    fixed-slot block (``repro.obs.registry.WORKER_SLOTS`` — columns 0/1
+    are the legacy walk telemetry pair) the parent reads without a
+    round trip.  Every parent receive polls with a timeout; any worker
+    error or timeout tears the whole backend down (segments unlinked,
     workers joined or terminated).
     """
 
@@ -471,8 +503,9 @@ class ProcessBackend(ShardBackend):
         self._pending: Optional[WalkHandle] = None
         ctx = mp.get_context("spawn")   # fork-safety vs the jax runtime
         self._telem_shm = shared_memory.SharedMemory(
-            create=True, size=n_shards * 2 * 8)
-        self._telem = np.ndarray((n_shards, 2), dtype=np.int64,
+            create=True, size=n_shards * N_WORKER_SLOTS * 8)
+        self._telem = np.ndarray((n_shards, N_WORKER_SLOTS),
+                                 dtype=np.int64,
                                  buffer=self._telem_shm.buf)
         self._telem[:] = 0
         try:
@@ -606,6 +639,9 @@ class ProcessBackend(ShardBackend):
     @property
     def shard_walks(self):
         return np.asarray(self._telem[:, 1])
+
+    def worker_metrics(self):
+        return np.array(self._telem)
 
     # ---- test hook ----------------------------------------------------
     def inject_failure(self, s: int = 0):

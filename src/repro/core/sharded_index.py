@@ -209,3 +209,10 @@ class ShardedPrefixIndex:
                  "mean_walk_us": float(walk_ns[s])
                  / max(int(walks[s]), 1) / 1e3}
                 for s, (lo, hi) in enumerate(self.bounds)]
+
+    def worker_metrics(self) -> Optional[np.ndarray]:
+        """The backend's fixed-slot metrics block (``(S,
+        N_WORKER_SLOTS)`` int64 copy; see ``repro.obs.registry
+        .WORKER_SLOTS``) — the per-shard-worker registry rows the
+        cluster metrics view merges."""
+        return self.backend.worker_metrics()

@@ -1,0 +1,171 @@
+"""Decision provenance: per-request "why did instance *i* win" records.
+
+Opt-in (``make_obs(provenance=True)``): for every routing decision the
+recorder captures the top-k candidate instances with the paper's two
+indicators — new-prefill tokens (KV$-awareness factor) and batch size
+(load factor) — the multiplied score, the tie-break path the epsilon-
+round-robin took, the session-pin hint, and the request's eventual
+admission/retraction outcome.  This is the decision-level introspection
+the paper's "failure conditions can be detected beforehand" claim
+demands: the record is enough to replay the argmin by hand.
+
+**Multiplication-failure detector.**  The product ``(P+1) × (BS+1)``
+needs no tuned weights precisely because neither factor can dominate
+under the paper's workload assumptions; the derived failure condition is
+the regime where that breaks — prefill-affinity spreads wider than the
+load spread, so the product routes onto an instance whose load is far
+above the fleet's, starving load balance ("affinity capture").  The
+recorder flags a decision when the chosen instance's batch size exceeds
+``alpha ×`` the live-fleet median (default ``alpha=2``) while a
+lower-loaded candidate existed — and increments the registry counter
+``provenance.failure_condition`` so the condition is observable *before*
+its latency cost shows up in TTFT tails.
+
+Capturing a record costs one aggregated-index walk per decision (plus,
+for policies without a hit-vector ``scores`` form, one side-effect-free
+``scores_batch`` row) — real but opt-in overhead; the decision sequence
+itself is untouched (inspection APIs only).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+# same epsilon as the policies' tie detection (repro.core.policies._EPS)
+_EPS = 1e-9
+
+
+class ProvenanceRecorder:
+    def __init__(self, registry=None, top_k: int = 4,
+                 alpha: float = 2.0, max_records: int = 1 << 16):
+        self.registry = registry
+        self.top_k = top_k
+        self.alpha = alpha
+        self.max_records = max_records
+        self.records: List[dict] = []
+        self._by_rid = {}
+        self.failure_conditions = 0
+        self._all = np.arange(0)  # cached identity candidate set
+
+    # ------------------------------------------------------------------
+    def record(self, req, iid: int, factory, now: float, policy=None):
+        """Capture one decision (called by the router after the policy
+        picked ``iid`` and before any commit hook mutates indicators,
+        so the captured landscape is the one the argmin saw)."""
+        if len(self.records) >= self.max_records:
+            return
+        hits = factory.hits_for(req)
+        new_prefill = np.maximum(req.prompt_len - hits, 0)
+        bs = factory.bs_vector()
+        scores = None
+        if policy is not None:
+            scorer = getattr(policy, "scores", None)
+            if scorer is not None:
+                # single-walk exact landscape (LMetric-family policies
+                # score from a precomputed hit vector)
+                scores = np.asarray(scorer(req, factory, hits),
+                                    dtype=np.float64)
+            else:
+                try:
+                    scores = np.asarray(
+                        policy.scores_batch([req], factory, now)[0],
+                        dtype=np.float64)
+                except NotImplementedError:
+                    scores = None
+        if scores is None:
+            # the paper's product as the generic landscape
+            scores = (new_prefill + 1.0) * (bs + 1.0)
+        alive = getattr(policy, "alive", None)
+        if alive is not None:
+            live = np.flatnonzero(alive)
+        else:
+            if len(self._all) != len(scores):
+                self._all = np.arange(len(scores))
+            live = self._all
+        s_live = scores[live]
+        order = live[np.argsort(s_live, kind="stable")[:self.top_k]]
+        best = float(s_live.min()) if len(s_live) else 0.0
+        n_ties = int(np.count_nonzero(s_live <= best + _EPS))
+        pin = None
+        if policy is not None and req.session_id >= 0:
+            pin = policy.session_pin(req.session_id)
+        failure = self._failure_condition(iid, bs, new_prefill, live)
+        rec = {
+            "rid": req.rid,
+            "t": now,
+            "family": req.family or "",
+            "chosen": int(iid),
+            "outcome": "routed",
+            "pinned": int(pin) if pin is not None else -1,
+            "tie_count": n_ties,
+            "tie_break": "round_robin" if n_ties > 1 else "unique",
+            "top_k": [
+                {"iid": int(j),
+                 "new_prefill": int(new_prefill[j]),
+                 "batch": int(bs[j]),
+                 "score": float(scores[j])}
+                for j in order],
+            "failure_condition": failure,
+        }
+        self.records.append(rec)
+        self._by_rid[req.rid] = rec
+        if self.registry is not None:
+            self.registry.inc("provenance.records")
+            if failure:
+                self.registry.inc("provenance.failure_condition")
+
+    def _failure_condition(self, iid, bs, new_prefill, live) -> bool:
+        """Affinity capture: the product picked an instance loaded more
+        than ``alpha ×`` the live-fleet median while a strictly
+        lower-loaded candidate existed — only possible when the prefill
+        factor's spread exceeds the load spread (the detectable
+        failure regime)."""
+        if len(live) < 2:
+            return False
+        bs_live = bs[live]
+        # sort-based median: same value as np.median on the small live
+        # vector at a fraction of the dispatch cost (hot per-decision)
+        srt = np.sort(bs_live)
+        m = srt.size // 2
+        med = (float(srt[m]) if srt.size % 2
+               else 0.5 * (float(srt[m - 1]) + float(srt[m])))
+        med = max(med, 1.0)
+        if bs[iid] <= self.alpha * med:
+            return False
+        hit = bool((bs_live < bs[iid]).any())
+        if hit:
+            self.failure_conditions += 1
+        return hit
+
+    # ------------------------------------------------------------------
+    def outcome(self, req, what: str, t: float):
+        """Stamp a request's fate (``shed`` / ``retracted``); creates a
+        minimal record for requests shed before any decision ran."""
+        rec = self._by_rid.get(req.rid)
+        if rec is not None:
+            rec["outcome"] = what
+            rec["t_outcome"] = t
+            return
+        if len(self.records) >= self.max_records:
+            return
+        rec = {"rid": req.rid, "t": t, "family": req.family or "",
+               "chosen": -1, "outcome": what, "pinned": -1,
+               "tie_count": 0, "tie_break": "none", "top_k": [],
+               "failure_condition": False}
+        self.records.append(rec)
+        self._by_rid[req.rid] = rec
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        by_outcome = {}
+        for r in self.records:
+            by_outcome[r["outcome"]] = by_outcome.get(r["outcome"], 0) + 1
+        return {
+            "n_records": len(self.records),
+            "failure_conditions": self.failure_conditions,
+            "tie_rate": (sum(1 for r in self.records
+                             if r["tie_count"] > 1)
+                         / max(len(self.records), 1)),
+            "outcomes": dict(sorted(by_outcome.items())),
+        }

@@ -19,8 +19,13 @@ Contract 4 and the "Overload & failure" section):
    machinery must be invisible when off.
 
 Degraded-mode worker death (``inject_failure`` → serial rebuild, no
-shm/worker leaks) rides along as chaos tier too.
+shm/worker leaks) rides along as chaos tier too, as does the
+exactly-once churn-telemetry contract: ``mark_failed`` /
+``mark_recovered`` / degraded rebuilds land in the metrics registry and
+the trace exactly once even when a shard worker dies mid-wave and the
+index mutation retries through a rebuild.
 """
+import collections
 import copy
 import multiprocessing as mp
 import os
@@ -124,11 +129,11 @@ def test_kill_sequence_differential(n_shards):
 # ---------------------------------------------------------------------------
 # 2. mid-run churn through the simulator
 # ---------------------------------------------------------------------------
-def _churn_run(spec, n_shards=1, walk_backend=None, n=16):
+def _churn_run(spec, n_shards=1, walk_backend=None, n=16, obs=None):
     trace = make_trace("chatbot", qps=16.0, duration=90.0, seed=21)
     router = Router(make_policy("lmetric"), n,
                     kv_capacity_tokens=200_000, n_shards=n_shards,
-                    walk_backend=walk_backend)
+                    walk_backend=walk_backend, obs=obs)
     sim = ClusterSim(router, spec, LatencyModel(spec))
     sim.fail_at(30.0, 2)
     sim.fail_at(45.0, 7)
@@ -257,10 +262,93 @@ def test_degraded_rebuild_on_worker_death():
     assert not _live_workers()
 
 
-def _probe_request(chain, block_size):
+def _probe_request(chain, block_size, rid=0):
     from repro.core.types import Request
-    return Request(rid=0, arrival=0.0, prompt_len=len(chain) * block_size,
+    return Request(rid=rid, arrival=0.0,
+                   prompt_len=len(chain) * block_size,
                    output_len=8, blocks=tuple(chain))
+
+
+# ---------------------------------------------------------------------------
+# 3b. exactly-once churn telemetry (obs registry + trace)
+# ---------------------------------------------------------------------------
+def _instant_counts(tracer):
+    return collections.Counter(
+        e["name"] for e in tracer.to_json()["traceEvents"]
+        if e["ph"] == "i")
+
+
+@pytest.mark.chaos
+def test_churn_telemetry_exactly_once_through_sim(spec):
+    """The ``fail_at``/``recover_at`` schedule lands in the metrics
+    registry and the trace exactly once per event: 2 fails + 2
+    recoveries, counters == instant counts == ``sim.churn_events``."""
+    from repro.obs import make_obs
+    obs = make_obs(metrics=True, trace=True, sample_every=1)
+    trace, router, sim, done = _churn_run(spec, obs=obs)
+    try:
+        assert len(done) == len(trace)
+        c = obs.registry.counters
+        assert c["churn.fail"] == 2
+        assert c["churn.recover"] == 2
+        inst = _instant_counts(obs.tracer)
+        assert inst["churn.fail"] == 2
+        assert inst["churn.recover"] == 2
+        snap = sim.metrics_snapshot()
+        assert snap["counters"]["sim.churn_events"] == \
+            len(sim.churn_events) == 4
+        assert snap["hists"]["churn.recovery_s"]["count"] == \
+            len(sim.churn_recovery)
+    finally:
+        router.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+def test_churn_telemetry_exactly_once_worker_death_mid_wave():
+    """A shard worker dying mid-wave makes the walk (and any index
+    mutation behind ``mark_failed``) retry through a degraded rebuild —
+    the retried region must NOT replay the telemetry: churn counters
+    stay at one per event and ``events.degraded_rebuild`` tracks
+    ``factory.degraded_rebuilds`` exactly."""
+    from repro.obs import make_obs
+    before = _shm_segments()
+    obs = make_obs(metrics=True, trace=True, sample_every=1)
+    rng = np.random.default_rng(11)
+    router = Router(make_policy("lmetric"), 16,
+                    kv_capacity_tokens=1 << 20, n_shards=4,
+                    walk_backend="process", obs=obs)
+    try:
+        factory = router.factory
+        chains = []
+        for _ in range(40):
+            iid = int(rng.integers(0, 16))
+            chain = _rand_chain(rng)
+            factory.instances[iid].kv.insert(chain)
+            chains.append(chain)
+        # worker death *before* the wave: the wave walk degrades once
+        factory._agg.backend.inject_failure(2)
+        reqs = [_probe_request(c, factory.block_size, rid=i)
+                for i, c in enumerate(chains[:6])]
+        router.route_batch(reqs, now=1.0)
+        assert factory.degraded_rebuilds >= 1
+        # another death, then a churn event whose index mutation hits
+        # the dead worker and retries through a rebuild
+        factory._agg.backend.inject_failure(0)
+        router.mark_failed(3)
+        router.mark_recovered(3)
+        c = obs.registry.counters
+        assert c["churn.fail"] == 1
+        assert c["churn.recover"] == 1
+        assert c["events.degraded_rebuild"] == factory.degraded_rebuilds
+        inst = _instant_counts(obs.tracer)
+        assert inst["churn.fail"] == 1
+        assert inst["churn.recover"] == 1
+        assert inst["index.degraded_rebuild"] == factory.degraded_rebuilds
+    finally:
+        router.close()
+    assert _shm_segments() <= before
+    assert not _live_workers()
 
 
 # ---------------------------------------------------------------------------
