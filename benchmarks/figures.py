@@ -655,6 +655,12 @@ def bench_overload(force=False):
         "admission": OverloadControl(admission=True),
         "retraction": OverloadControl(retraction=True),
         "both": OverloadControl(admission=True, retraction=True),
+        # "both" plus patience-distribution-driven early retraction:
+        # requests predicted to miss their prefill deadline are pulled
+        # before the hard deadline once the session's abandonment
+        # hazard crosses the threshold (ROADMAP §3's last open item)
+        "patience": OverloadControl(admission=True, retraction=True,
+                                    patience_retraction=True),
     }
     spec = cluster_spec()
 
@@ -766,7 +772,8 @@ def _plot_overload(data):
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, "overload.png")
     palette = {"none": "#e34948", "admission": "#2a78d6",
-               "retraction": "#eda100", "both": "#1baf7a"}
+               "retraction": "#eda100", "both": "#1baf7a",
+               "patience": "#9b59b6"}
     fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(9.6, 4.0), dpi=120)
     ctls = sorted(next(iter(data["sweep"].values())))
     for c in ctls:
@@ -1630,6 +1637,134 @@ def bench_obs_overhead(force=False):
         f"wall overhead on {r['n_requests']} closed-loop requests")
 
 
+def bench_fault_recovery(force=False):
+    """Availability and repair cost of the self-healing shard layer.
+
+    Replays one seeded ``FaultPlan`` (two worker crashes, two stalls,
+    one silent bitset corruption) against every walk backend × shard
+    count while streaming single-request probes through the factory's
+    guarded walk path, with the budgeted anti-entropy sweep running
+    every ``sweep_every`` probes (k=1, the background-wave cadence).
+    Reports, per cell:
+
+      * availability — fraction of probes answered bit-identically to
+        the fault-free flat-factory truth (crashes and stalls are
+        healed inline so only the corruption window can dent this),
+      * p99 decision latency over all probes, fault waves included,
+      * p50 time-to-repair from the factory's per-repair timer,
+      * heal / repair / escalation counters and a Contract 6 check:
+        after the final sweep every shard digest matches the one
+        recomputed from KV truth and decisions are bit-identical to
+        fault-free again.
+
+    REPRO_BENCH_SMALL=1 shrinks the probe count and shard set to a CI
+    smoke (the JSON is schema-checked by
+    ``scripts/check_bench_schema.py``).
+    """
+    import os
+    import time as _time
+
+    from repro.core.faults import FaultEvent, FaultInjector, FaultPlan
+    from repro.core.indicators import IndicatorFactory
+    from repro.core.types import Request
+
+    small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+    shard_counts = [2] if small else [2, 4, 8]
+    n_probes = 80 if small else 240
+    sweep_every = 16
+    n = 16
+    backends = ["serial", "thread", "process"]
+
+    def seed_kv(f):
+        r = np.random.default_rng(7)
+        for _ in range(60):
+            iid = int(r.integers(0, f.n))
+            length = int(r.integers(1, 10))
+            f.instances[iid].kv.insert(
+                tuple(int(x) for x in r.integers(0, 6, size=length)))
+
+    def probe(f, chain, rid=0):
+        return f.hits_for(Request(
+            rid=rid, arrival=0.0, prompt_len=len(chain) * f.block_size,
+            output_len=8, blocks=tuple(chain)))
+
+    def go():
+        rng = np.random.default_rng(99)
+        chains = [tuple(int(x) for x in
+                        rng.integers(0, 8, size=int(rng.integers(1, 10))))
+                  for _ in range(n_probes)]
+        with IndicatorFactory(n, kv_capacity_tokens=1 << 20) as ref:
+            seed_kv(ref)
+            truth = [np.asarray(probe(ref, c, i)).copy()
+                     for i, c in enumerate(chains)]
+        cells = []
+        for backend in backends:
+            for s in shard_counts:
+                plan = FaultPlan(events=(
+                    FaultEvent("crash", shard=1 % s, at=6),
+                    FaultEvent("crash", shard=3 % s, at=n_probes // 3),
+                    FaultEvent("stall", shard=0, at=12, seconds=0.01),
+                    FaultEvent("stall", shard=2 % s, at=n_probes // 2,
+                               seconds=0.01),
+                    FaultEvent("corrupt", shard=s - 1,
+                               at=2 * n_probes // 3, seed=31),
+                ))
+                with IndicatorFactory(
+                        n, kv_capacity_tokens=1 << 20, n_shards=s,
+                        walk_backend=backend,
+                        shard_timeout_s=10.0) as factory:
+                    factory.attach_faults(FaultInjector(plan))
+                    seed_kv(factory)
+                    be = factory._agg.backend
+                    lats, ok = [], 0
+                    for i, c in enumerate(chains):
+                        t0 = _time.perf_counter_ns()
+                        hits = probe(factory, c, i)
+                        lats.append(_time.perf_counter_ns() - t0)
+                        ok += int(np.array_equal(np.asarray(hits),
+                                                 truth[i]))
+                        if (i + 1) % sweep_every == 0:
+                            factory.anti_entropy_step(1)
+                    factory.anti_entropy_step(s)
+                    verified = all(factory.verify_shard(j)
+                                   for j in range(s))
+                    identical = bool(np.array_equal(
+                        np.asarray(probe(factory, chains[0])), truth[0]))
+                    lat_us = sorted(t / 1e3 for t in lats)
+                    rep_ms = sorted(t / 1e6 for t in factory.repair_ns)
+                    cells.append({
+                        "backend": backend, "n_shards": s,
+                        "probes": n_probes, "faults": len(plan),
+                        "availability": ok / n_probes,
+                        "p99_decision_us": lat_us[min(
+                            len(lat_us) - 1, int(0.99 * len(lat_us)))],
+                        "p50_repair_ms": (rep_ms[len(rep_ms) // 2]
+                                          if rep_ms else 0.0),
+                        "heals": int(getattr(be, "heals", 0)),
+                        "repairs": int(factory.shard_repairs),
+                        "escalations": int(getattr(be, "escalations",
+                                                   0)),
+                        "post_repair_identical": verified and identical,
+                    })
+        return {"sweep_every": sweep_every, "cells": cells}
+
+    r = cached("fault_recovery", go, force)
+    rows = [
+        csv_row(f"fault.{c['backend']}.s{c['n_shards']}",
+                c["p99_decision_us"],
+                f"avail {c['availability']:.3f}, "
+                f"p50 repair {c['p50_repair_ms']:.2f}ms, "
+                f"{c['heals']} heals/{c['repairs']} repairs")
+        for c in r["cells"]
+    ]
+    worst = min(c["availability"] for c in r["cells"])
+    healed = all(c["post_repair_identical"] for c in r["cells"])
+    return rows, (
+        f"fault recovery: {len(r['cells'])} backend×shard cells under a "
+        f"seeded crash+stall+corruption plan, worst availability "
+        f"{worst:.3f}, post-repair bit-identity={healed}")
+
+
 ALL_BENCHES = [
     bench_fig07_kv_awareness,
     bench_fig11_linear_sweep,
@@ -1656,4 +1791,5 @@ ALL_BENCHES = [
     bench_beyond_cost_indicator,
     bench_beyond_score_robustness,
     bench_obs_overhead,
+    bench_fault_recovery,
 ]

@@ -72,6 +72,14 @@ OBS_OVERHEAD_RECORD = ("n_sessions", "n_requests", "wall_ms",
                        "overhead_metrics", "overhead_enabled",
                        "identical_decisions", "trace_events",
                        "provenance", "timing")
+#: per-(backend, shard-count) cell of the fault-recovery bench — the
+#: self-healing layer's availability/repair accounting plus the hard
+#: Contract 6 bit (post-repair decisions bit-identical to fault-free)
+FAULT_RECOVERY_RECORD = (
+    "backend", "n_shards", "probes", "faults", "availability",
+    "p99_decision_us", "p50_repair_ms", "heals", "repairs",
+    "escalations", "post_repair_identical",
+)
 #: per-size record in router_scale.json (vector vs frozen scalar ref)
 ROUTER_SCALE_RECORD = ("vector_us", "scalar_us", "walk_us")
 #: per-(size, shard-count) record in the sharded sections — per-shard
@@ -311,6 +319,28 @@ def check_file(path):
             errors.append(f"{name}: identical_decisions is not True — "
                           f"observability changed a routing decision")
         _check_timing(data, name, errors, warnings)
+    elif name == "fault_recovery.json":
+        cells = data.get("cells")
+        if not isinstance(cells, list) or not cells:
+            errors.append(f"{name}: missing/empty 'cells' list")
+        for i, rec in enumerate(cells or []):
+            p = f"{name}.cells[{i}]"
+            _check_record(rec, FAULT_RECOVERY_RECORD, p, errors)
+            if isinstance(rec, dict):
+                if rec.get("post_repair_identical") is not True:
+                    errors.append(
+                        f"{p}: post_repair_identical is not True — "
+                        f"repaired shard state diverged from truth "
+                        f"(Contract 6)")
+                avail = rec.get("availability")
+                if isinstance(avail, (int, float)) and avail < 0.5:
+                    errors.append(f"{p}: availability {avail} < 0.5 — "
+                                  f"the healing layer is not healing")
+        backends = {rec.get("backend") for rec in cells or []
+                    if isinstance(rec, dict)}
+        for b in ("serial", "thread", "process"):
+            if b not in backends:
+                errors.append(f"{name}: missing backend '{b}' cell")
     elif name == "fig22.json":
         for t, by_pol in data.items():
             for p, rec in by_pol.items():

@@ -34,10 +34,12 @@ from __future__ import annotations
 import itertools
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.cluster.pd_disagg import PDDisaggSim
 from repro.cluster.simulator import ClusterSim, _SimInstance
 from repro.core.types import Request
-from repro.workloads.sessions import Session
+from repro.workloads.sessions import Session, abandon_hazard
 
 
 class _SessionFeedback:
@@ -90,6 +92,39 @@ class ClosedLoopSim(_SessionFeedback, ClusterSim):
     def _finish(self, inst: _SimInstance, req: Request):
         super()._finish(inst, req)
         self._session_feedback(req)
+
+    def _should_retract(self, req: Request, inst: _SimInstance) -> bool:
+        """Patience-driven early retraction (``OverloadControl
+        .patience_retraction``): on top of the hard-deadline rule,
+        retract a queued request when (a) its first token is
+        *predicted* to miss the prefill deadline on the instance it
+        sits on, and (b) the session's abandonment hazard — from the
+        patience distribution and the observed breach count, never the
+        session's private draw — has crossed the threshold.  The
+        predictor runs at ``noise=1.0`` (the admission-gate contract)
+        so the policy noise stream is untouched."""
+        if super()._should_retract(req, inst):
+            return True
+        ov = self.overload
+        if not ov.patience_retraction or req.deadline is None:
+            return False
+        sess = self._by_sid.get(req.session_id)
+        if sess is None:
+            return False
+        hazard = abandon_hazard(sess._breaches, sess.spec.patience_mean)
+        if hazard < ov.patience_threshold:
+            return False
+        f = self.router.factory
+        i = inst.iid
+        left = float(inst.prefill_left.get(req.rid, req.new_tokens))
+        # its own remaining prefill is the "new" work; queue ahead of it
+        # excludes itself (it is already counted in the instance column)
+        q = np.array([max(float(f.queued_prefill_tokens[i]) - left, 0.0)])
+        ttft = self.model.predict_ttft_batch(
+            q, np.array([left]),
+            np.array([float(f.r_bs[i])]),
+            np.array([float(f.total_tokens[i])]), noise=1.0)
+        return bool(self.now + float(ttft[0]) > req.deadline.prefill)
 
     def _drop(self, req: Request, reason: str):
         """A shed/retracted turn feeds back like a completion: the

@@ -261,7 +261,7 @@ class ClusterSim:
             self._start_step(inst)
 
     def _start_step(self, inst: _SimInstance):
-        if self.overload.retraction:
+        if self.overload.retraction or self.overload.patience_retraction:
             self._retract_expired(inst)
         allocs, decode_bs, ctx = inst.form_batch()
         prefill_tokens = sum(t for _, t in allocs)
@@ -279,15 +279,22 @@ class ClusterSim:
         self._push(self.now + dt, "step_end",
                    (inst.iid, allocs, decode_bs, inst.epoch))
 
+    def _should_retract(self, req: Request, inst: _SimInstance) -> bool:
+        """Retraction predicate, hard-deadline flavour: the prefill
+        deadline is already blown, so the first token cannot arrive in
+        time.  ``ClosedLoopSim`` extends it with the patience-driven
+        early variant (predicted breach × session abandonment hazard)."""
+        return (self.overload.retraction and req.deadline is not None
+                and req.deadline.prefill_blown(self.now))
+
     def _retract_expired(self, inst: _SimInstance):
-        """Cancel queued-or-prefilling requests whose prefill deadline
-        is already blown: the first token cannot arrive in time, so the
-        remaining prefill would be burnt on a guaranteed breach.  Runs
-        at step-formation time — the instance is between steps, so no
-        in-flight alloc references the retracted rids."""
+        """Cancel queued-or-prefilling requests ``_should_retract``
+        condemns — by default those whose prefill deadline is already
+        blown: the remaining prefill would be burnt on a guaranteed
+        breach.  Runs at step-formation time — the instance is between
+        steps, so no in-flight alloc references the retracted rids."""
         expired = [rid for rid, r in inst.waiting.items()
-                   if r.deadline is not None
-                   and r.deadline.prefill_blown(self.now)]
+                   if self._should_retract(r, inst)]
         for rid in expired:
             req = inst.waiting.pop(rid)
             left = inst.prefill_left.pop(rid)

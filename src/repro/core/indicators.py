@@ -156,6 +156,80 @@ def shard_owner(n_instances: int, n_shards: int) -> np.ndarray:
     return owner
 
 
+# ---------------------------------------------------------------------------
+# Anti-entropy digests (PR 9).  A shard's content digest is the
+# commutative sum (mod 2^64) of one mixed hash per *membership bit* —
+# pair (node chain-hash, local instance id) — over every live non-root
+# node, plus the live node count and total bit count.  Each node's
+# chain-hash is a pure function of its root→node block-key path
+# (splitmix64 chaining), so three independent computations of the same
+# logical state agree exactly: the incremental accumulator maintained
+# by add/remove, a rescan of the bitset rows, and a replay of the
+# canonical ``RadixKVIndex.chains()`` truth (``digest_from_chains``).
+# Commutativity makes the incremental update O(changed bits) per
+# mutation — the same asymptotics as the mutation itself.
+
+_M64 = (1 << 64) - 1
+#: arbitrary odd constant seeding the root's chain-hash
+_ROOT_H = 0x27220A95FE1EADB5
+#: odd multiplier for the per-bit digest term — a single multiply over
+#: two already-mixed inputs keeps mutation-path upkeep to a few int ops
+#: per changed bit (detection only needs commutative sums not to cancel,
+#: not a full finalizer)
+_PHI = 0x9E3779B97F4A7C15
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer over arbitrary Python ints (numpy scalars
+    coerced — a bare ``int64 & _M64`` would overflow)."""
+    x = int(x) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+def _chain_step(h: int, key: int) -> int:
+    """One chain-hash round (root→node path hash): a single multiply +
+    xorshift over the already-finalized parent hash — runs once per
+    node *allocation* on the KV-insert path, so it must stay cheap.
+    Kept in lockstep with the inlined copy in
+    ``AggregatedPrefixIndex._alloc``."""
+    x = ((h ^ key) * 0xBF58476D1CE4E5B9) & _M64
+    return x ^ (x >> 31)
+
+
+_IHASH_CACHE: Dict[int, int] = {}
+
+
+def _ihash(iid: int) -> int:
+    """Per-(local) instance-id hash, memoized — ids are small and dense
+    so the cache stays bounded by the widest shard ever built."""
+    h = _IHASH_CACHE.get(iid)
+    if h is None:
+        h = _mix64((iid + 1) * 0x9E3779B97F4A7C15)
+        _IHASH_CACHE[iid] = h
+    return h
+
+
+def digest_from_chains(pairs) -> Tuple[int, int, int]:
+    """Digest of the index a from-scratch rebuild over ``pairs`` —
+    iterable of ``(local_iid, block_chain)`` from the per-instance
+    ``RadixKVIndex.chains()`` truth — would produce.  Same triple as
+    ``AggregatedPrefixIndex.digest``: (bit-sum, live nodes, total bits)."""
+    acc, bits, nodes = 0, set(), set()
+    for li, chain in pairs:
+        h = _ROOT_H
+        ih = _ihash(li)
+        for b in chain:
+            h = _chain_step(h, b)
+            nodes.add(h)
+            k = (h, li)
+            if k not in bits:
+                bits.add(k)
+                acc = (acc + ((h ^ ih) * _PHI & _M64)) & _M64
+    return (acc, len(nodes), len(bits))
+
+
 class AggregatedPrefixIndex:
     """Flat, array-backed cross-instance prefix index.
 
@@ -204,7 +278,8 @@ class AggregatedPrefixIndex:
     """
 
     __slots__ = ("n", "words", "_full", "_masks", "_pop", "_parent",
-                 "_live", "_key", "_kids", "_free", "_top")
+                 "_live", "_key", "_kids", "_free", "_top",
+                 "_chash", "_dig", "_bits", "_dig_on")
 
     def __init__(self, n_instances: int, capacity: int = 256):
         self.n = n_instances
@@ -230,6 +305,17 @@ class AggregatedPrefixIndex:
         # walk's hot path; None marks a freed row
         self._kids: List[Optional[Dict[int, int]]] = [None] * cap
         self._free: List[int] = []
+        # per-node chain-hash (pure function of the root→node key path)
+        # plus the incremental anti-entropy accumulator: sum of
+        # mixed (chain-hash, iid) pairs over every membership bit.
+        # Both are LAZY — zero mutation-path upkeep until the first
+        # digest read reconstructs them (``_enable_digest``), then
+        # maintained incrementally
+        self._chash: List[int] = [0] * cap
+        self._chash[0] = _ROOT_H
+        self._dig = 0
+        self._bits = 0
+        self._dig_on = False
         # row 0 is the root, pinned to the full instance set so the
         # popcount narrowing check works from the very first block
         self._top = 1
@@ -254,6 +340,7 @@ class AggregatedPrefixIndex:
         self._live.extend([False] * cap)
         self._key.extend([None] * cap)
         self._kids.extend([None] * cap)
+        self._chash.extend([0] * cap)
 
     def _alloc(self, parent: int, key) -> int:
         if self._free:
@@ -269,6 +356,11 @@ class AggregatedPrefixIndex:
         self._live[nid] = True
         self._key[nid] = key
         self._kids[nid] = {}
+        if self._dig_on:
+            # inlined ``_chain_step`` (keep in lockstep) — on the
+            # KV-insert path once per node allocation
+            x = ((self._chash[parent] ^ key) * 0xBF58476D1CE4E5B9) & _M64
+            self._chash[nid] = x ^ (x >> 31)
         return nid
 
     def _free_node(self, nid: int) -> int:
@@ -318,8 +410,17 @@ class AggregatedPrefixIndex:
             ids = np.fromiter(fresh, np.int64, len(fresh))
             self._masks[ids, w] |= np.uint64(mbit)
             pop = self._pop
-            for nid in fresh:
-                pop[nid] += 1
+            if self._dig_on:
+                chash, ih = self._chash, _ihash(iid)
+                dig = self._dig
+                for nid in fresh:
+                    pop[nid] += 1
+                    dig += (chash[nid] ^ ih) * _PHI & _M64
+                self._dig = dig & _M64
+                self._bits += len(fresh)
+            else:
+                for nid in fresh:
+                    pop[nid] += 1
 
     def remove_leaf(self, iid: int, path: Sequence[int]):
         """Instance ``iid`` evicted the leaf at ``path`` (root→leaf keys).
@@ -340,6 +441,11 @@ class AggregatedPrefixIndex:
         if v & mbit:
             self._masks[node, w] = np.uint64(v & ~mbit)
             self._pop[node] -= 1
+            if self._dig_on:
+                self._dig = (self._dig - ((self._chash[node]
+                                           ^ _ihash(iid))
+                                          * _PHI & _M64)) & _M64
+                self._bits -= 1
         # prune the freed tail: no instance holds it, nothing hangs off
         pop = self._pop
         while node and not pop[node] and not kids[node]:
@@ -362,10 +468,20 @@ class AggregatedPrefixIndex:
             return
         col[np.fromiter(hits, np.int64, len(hits))] &= ~bit
         stack = []
-        for nid in hits:
-            pop[nid] -= 1
-            if not pop[nid] and not kids[nid]:
-                stack.append(nid)
+        if self._dig_on:
+            chash, ih, dig = self._chash, _ihash(iid), self._dig
+            for nid in hits:
+                pop[nid] -= 1
+                dig -= (chash[nid] ^ ih) * _PHI & _M64
+                if not pop[nid] and not kids[nid]:
+                    stack.append(nid)
+            self._dig = dig & _M64
+            self._bits -= len(hits)
+        else:
+            for nid in hits:
+                pop[nid] -= 1
+                if not pop[nid] and not kids[nid]:
+                    stack.append(nid)
         while stack:
             nid = stack.pop()
             if not live[nid] or pop[nid] or kids[nid]:
@@ -373,6 +489,103 @@ class AggregatedPrefixIndex:
             parent = self._free_node(nid)
             if parent and not pop[parent] and not kids[parent]:
                 stack.append(parent)
+
+    # ---- anti-entropy (PR 9) ------------------------------------------
+    def _enable_digest(self):
+        """Deferred digest bring-up: chain hashes and the accumulator
+        are reconstructed from the live tree on the first digest read,
+        then maintained incrementally.  Mutations before that read pay
+        zero digest upkeep — the Contract 5 discipline applied to
+        anti-entropy: an index that is never verified must execute the
+        exact pre-digest instruction sequence."""
+        chash, kids = self._chash, self._kids
+        stack = [0]
+        while stack:
+            nid = stack.pop()
+            h = chash[nid]
+            for key, child in kids[nid].items():
+                x = ((h ^ key) * 0xBF58476D1CE4E5B9) & _M64
+                chash[child] = x ^ (x >> 31)
+                stack.append(child)
+        self._dig_on = True
+        dig, _, bits = self.rescan_digest()
+        self._dig, self._bits = dig, bits
+
+    @property
+    def digest(self) -> Tuple[int, int, int]:
+        """Incrementally-maintained content digest: ``(bit-sum mod 2^64,
+        live non-root nodes, total membership bits)``.  Matches
+        :meth:`rescan_digest` iff no mask word was corrupted *after the
+        first digest read* (upkeep starts lazily — ``_enable_digest``),
+        and :func:`digest_from_chains` over the KV truth iff no mutation
+        was ever dropped or misapplied, before or after."""
+        if not self._dig_on:
+            self._enable_digest()
+        return (self._dig, self.n_nodes, self._bits)
+
+    def rescan_digest(self) -> Tuple[int, int, int]:
+        """Recompute the digest triple from the live bitset rows (not
+        the incremental accumulator) — a mismatch against ``digest``
+        means a mask bit changed without going through add/remove."""
+        if not self._dig_on:
+            self._enable_digest()
+        acc, bits, nodes = 0, 0, 0
+        masks, chash = self._masks, self._chash
+        for nid in range(1, self._top):
+            if not self._live[nid]:
+                continue
+            nodes += 1
+            row = masks[nid]
+            if not row.any():
+                continue
+            idxs = np.flatnonzero(np.unpackbits(
+                row.view(np.uint8), bitorder="little",
+                count=self.n)).tolist()
+            h = chash[nid]
+            for i in idxs:
+                acc += (h ^ _ihash(i)) * _PHI & _M64
+            bits += len(idxs)
+        return (acc & _M64, nodes, bits)
+
+    def reset(self):
+        """Drop every node (root stays pinned full) without reallocating
+        the mask matrix — the in-place half of ``repair``: callers
+        re-``add`` the canonical chains afterwards."""
+        cap = self._masks.shape[0]
+        self._masks[:] = 0
+        self._pop = [0] * cap
+        self._parent = [-1] * cap
+        self._live = [False] * cap
+        self._key = [None] * cap
+        self._kids = [None] * cap
+        self._free = []
+        self._chash = [0] * cap
+        self._chash[0] = _ROOT_H
+        self._dig = 0
+        self._bits = 0
+        self._top = 1
+        self._masks[0] = self._full
+        self._pop[0] = self.n
+        self._live[0] = True
+        self._kids[0] = {}
+
+    def corrupt_bit(self, seed: int) -> Optional[Tuple[int, int]]:
+        """Fault-injection hook: deterministically flip one membership
+        bit in a live non-root row *without* updating the pop cache or
+        the digest accumulator — exactly the silent corruption the
+        anti-entropy sweep exists to catch.  Returns ``(nid, iid)`` or
+        None if the index is empty."""
+        live = [nid for nid in range(1, self._top)
+                if self._live[nid] and self._pop[nid]]
+        if not live or not self.n:
+            return None
+        r = _mix64(seed ^ 0xB17F11B5)
+        nid = live[r % len(live)]
+        iid = (r >> 17) % self.n
+        w = iid >> 6
+        v = int(self._masks.item(nid, w)) ^ (1 << (iid & 63))
+        self._masks[nid, w] = np.uint64(v)
+        return (nid, iid)
 
     # ---- queries ------------------------------------------------------
     def _scatter(self, words: np.ndarray, depth: int, out: np.ndarray):
@@ -763,12 +976,14 @@ class IndicatorFactory:
     def __init__(self, n_instances: int, kv_capacity_tokens: int = 1 << 62,
                  block_size: int = 64, exact_only: bool = False,
                  n_shards: int = 1, parallel_walks: bool = False,
-                 walk_backend: Optional[str] = None):
+                 walk_backend: Optional[str] = None,
+                 shard_timeout_s: Optional[float] = None):
         self.n = n_instances
         self.block_size = block_size
         self.exact_only = exact_only
         self.walk_backend = walk_backend
         self.parallel_walks = parallel_walks
+        self.shard_timeout_s = shard_timeout_s
         # degraded-mode telemetry: walk-backend deaths survived by
         # rebuilding the index from the per-instance radix trees
         self.degraded_rebuilds = 0
@@ -778,6 +993,16 @@ class IndicatorFactory:
         # the counter and the event move together (Router wires this to
         # the obs registry/tracer when observability is attached)
         self.on_degraded_rebuild = None
+        # anti-entropy telemetry (PR 9): scoped repairs performed,
+        # digest mismatches seen, the sweep cursor, and per-repair wall
+        # cost; on_shard_repair fires exactly once per repair
+        self.shard_repairs = 0
+        self.verify_mismatches = 0
+        self.repair_ns: List[int] = []
+        self.on_shard_repair = None
+        self._sweep_cursor = 0
+        self._fault_injector = None
+        self.on_backend_event = None
         # shard count for the aggregated index AND the device-mirror
         # partition (same shard_bounds cut); 1 = the unsharded flat index
         self.n_shards = max(1, min(int(n_shards), n_instances))
@@ -822,7 +1047,8 @@ class IndicatorFactory:
             from .sharded_index import ShardedPrefixIndex
             self._agg = ShardedPrefixIndex(n_instances, self.n_shards,
                                            parallel=parallel_walks,
-                                           backend=walk_backend)
+                                           backend=walk_backend,
+                                           timeout_s=shard_timeout_s)
         self.instances = []
         for i in range(n_instances):
             kv = RadixKVIndex(block_size=block_size,
@@ -835,13 +1061,58 @@ class IndicatorFactory:
                                self._on_evict(_i, path))
                 kv.on_clear = (lambda _i=i: self._on_clear(_i))
             self.instances.append(InstanceState(i, self, kv))
+        self._wire_agg()
+
+    def _wire_agg(self):
+        """Arm the aggregated index's self-healing hooks: the factory
+        is the canonical chains provider (supervised worker recovery
+        rebuilds only from it), and any attached fault injector carries
+        over to replacement backends."""
+        agg = self._agg
+        if agg is None:
+            return
+        sp = getattr(agg, "set_chains_provider", None)
+        if sp is not None:
+            sp(self._shard_chains)
+        if self._fault_injector is not None:
+            af = getattr(agg, "attach_faults", None)
+            if af is not None:
+                af(self._fault_injector)
+        if self.on_backend_event is not None:
+            backend = getattr(agg, "backend", None)
+            if backend is not None:
+                backend.on_event = self.on_backend_event
+
+    def attach_backend_events(self, cb):
+        """Wire ``cb(kind, shard, info)`` to the shard backend's
+        recovery events (restart / timeout / escalation / repair);
+        survives degraded rebuilds.  None disarms."""
+        self.on_backend_event = cb
+        agg = self._agg
+        backend = getattr(agg, "backend", None) if agg is not None \
+            else None
+        if backend is not None:
+            backend.on_event = cb
+
+    def _mutate_recover(self, e, op, *args):
+        """A routed mutation failed: scoped repair when the error names
+        a shard, full rebuild otherwise, then re-apply the mutation —
+        all three index mutations are idempotent, so re-applying after
+        a repair that already replayed it is a no-op."""
+        shard = getattr(e, "shard", None)
+        self._rebuild_index(shard=shard)
+        if shard is not None:
+            try:
+                getattr(self._agg, op)(*args)
+            except (RuntimeError, OSError):
+                self._rebuild_index()
 
     def _on_insert(self, iid: int, blocks):
         try:
             self._agg.add(iid, blocks)
-        except (RuntimeError, OSError):
-            self._rebuild_index()        # the rebuild replays the tree,
-            #                              this insert included
+        except (RuntimeError, OSError) as e:
+            self._mutate_recover(e, "add", iid, blocks)
+            # the rebuild/repair replays the tree, this insert included
         if self._capture is not None:
             self._capture.append((iid, blocks))
 
@@ -849,15 +1120,15 @@ class IndicatorFactory:
         self.evictions += 1
         try:
             self._agg.remove_leaf(iid, path)
-        except (RuntimeError, OSError):
-            self._rebuild_index()
+        except (RuntimeError, OSError) as e:
+            self._mutate_recover(e, "remove_leaf", iid, path)
 
     def _on_clear(self, iid: int):
         self.evictions += 1
         try:
             self._agg.remove_instance(iid)
-        except (RuntimeError, OSError):
-            self._rebuild_index()
+        except (RuntimeError, OSError) as e:
+            self._mutate_recover(e, "remove_instance", iid)
 
     # ---- lifecycle -------------------------------------------------------
     def close(self):
@@ -919,12 +1190,15 @@ class IndicatorFactory:
         self.instances[iid].kv.clear()
 
     # ---- degraded mode (walk-backend death) ------------------------------
-    def _rebuild_index(self):
-        """A walk backend died mid-query: tear the broken index down,
-        build a replacement (same sharded flavour with fresh workers;
-        a serial flat index when the respawn fails too), and repopulate
-        it from the per-instance radix trees — the KV$ ground truth the
-        aggregate is defined over.  Bumps the eviction counter so any
+    def _rebuild_index(self, shard: Optional[int] = None):
+        """A walk backend died mid-query.  When the error named a shard
+        (``ShardError.shard``) and the surviving backend can repair in
+        place, rebuild **only that shard's range** from the per-instance
+        radix trees — healthy shards' node arrays are untouched.
+        Otherwise the legacy path: tear the broken index down, build a
+        replacement (same sharded flavour with fresh workers; a serial
+        flat index when the respawn fails too), and repopulate it from
+        KV truth.  Either way bumps the eviction counter so any
         in-flight wave plan or speculative capture is invalidated."""
         self.degraded_rebuilds += 1
         cb = self.on_degraded_rebuild
@@ -938,6 +1212,8 @@ class IndicatorFactory:
             except Exception:
                 pass
         self.evictions += 1
+        if shard is not None and self._repair_in_place(shard):
+            return
         old, self._agg = self._agg, None
         if old is not None and hasattr(old, "close"):
             try:
@@ -950,7 +1226,8 @@ class IndicatorFactory:
             try:
                 agg = ShardedPrefixIndex(self.n, self.n_shards,
                                          parallel=self.parallel_walks,
-                                         backend=self.walk_backend)
+                                         backend=self.walk_backend,
+                                         timeout_s=self.shard_timeout_s)
             except Exception:
                 agg = None                # respawn failed: go serial
         if agg is None:
@@ -961,6 +1238,132 @@ class IndicatorFactory:
         # the kv callbacks close over self._agg dynamically, so the
         # swap retargets every future insert/evict/clear
         self._agg = agg
+        self._wire_agg()
+
+    def _walk_retry(self, e, fn):
+        """Bounded degraded-mode retry for a failed walk: scoped repair
+        when the error names a shard (``ShardError.shard``), full
+        rebuild otherwise, then re-run the walk.  Bounded by shards + 1
+        attempts — each repair heals one shard, so a plan injecting
+        consecutive crashes on every shard still converges instead of
+        looping."""
+        for _ in range(self._index_shards() + 1):
+            self._rebuild_index(shard=getattr(e, "shard", None))
+            try:
+                return fn()
+            except (RuntimeError, OSError) as e2:
+                e = e2
+        raise e
+
+    def _repair_in_place(self, s: int) -> bool:
+        """Try the scoped repair; False falls back to the full rebuild
+        (no ``repair_shard`` on the index, backend already torn down,
+        or the repair itself failed)."""
+        agg = self._agg
+        if agg is None or not hasattr(agg, "repair_shard"):
+            return False
+        backend = getattr(agg, "backend", None)
+        if backend is not None and getattr(backend, "_closed", False):
+            return False
+        try:
+            self.repair_shard(s, _count_rebuild=False)
+        except Exception:
+            return False
+        return True
+
+    # ---- anti-entropy (PR 9) ---------------------------------------------
+    def _index_shards(self) -> int:
+        """Shard count of the live aggregated index (1 for the flat
+        unsharded index, 0 for exact_only factories)."""
+        agg = self._agg
+        return getattr(agg, "n_shards", 1) if agg is not None else 0
+
+    def _shard_chains(self, s: int) -> List[Tuple[int, list]]:
+        """Canonical truth for shard ``s``: every ``(local_iid, chain)``
+        in its instance range, read from the per-instance radix trees."""
+        lo, hi = shard_bounds(self.n, self._index_shards())[s]
+        pairs = []
+        for iid in range(lo, hi):
+            for chain in self.instances[iid].kv.chains():
+                pairs.append((iid - lo, chain))
+        return pairs
+
+    def attach_faults(self, injector):
+        """Arm deterministic fault injection
+        (``repro.core.faults.FaultInjector``) on the aggregated index's
+        backend; survives degraded rebuilds.  None disarms."""
+        self._fault_injector = injector
+        agg = self._agg
+        if agg is not None:
+            af = getattr(agg, "attach_faults", None)
+            if af is not None:
+                af(injector)
+
+    def verify_shard(self, s: int) -> bool:
+        """True iff shard ``s``'s aggregated index agrees with KV truth:
+        the incremental digest, a rescan of the bitset rows, and a
+        replay of ``RadixKVIndex.chains()`` all produce the same digest
+        triple.  Counts mismatches; never mutates."""
+        agg = self._agg
+        if agg is None:
+            return True
+        truth = digest_from_chains(self._shard_chains(s))
+        sd = getattr(agg, "shard_digest", None)
+        if sd is not None:
+            inc, scan = sd(s)
+        else:
+            inc, scan = agg.digest, agg.rescan_digest()
+        ok = tuple(inc) == truth and tuple(scan) == truth
+        if not ok:
+            self.verify_mismatches += 1
+        return ok
+
+    def repair_shard(self, s: int, _count_rebuild: bool = True):
+        """Rebuild shard ``s`` — and only shard ``s`` — from canonical
+        KV truth, leaving healthy shards' node arrays untouched.  Bumps
+        the eviction counter (a repaired shard may answer differently,
+        so in-flight plans and speculative captures are invalid) and
+        fires ``on_shard_repair`` exactly once."""
+        agg = self._agg
+        if agg is None:
+            return
+        t0 = time.perf_counter_ns()
+        rp = getattr(agg, "repair_shard", None)
+        if rp is not None:
+            rp(s, self._shard_chains(s))
+        else:
+            # flat unsharded index: shard 0 is the whole index
+            agg.reset()
+            for li, chain in self._shard_chains(0):
+                agg.add(li, chain)
+        self.repair_ns.append(time.perf_counter_ns() - t0)
+        self.shard_repairs += 1
+        if _count_rebuild:
+            self.evictions += 1
+        cb = self.on_shard_repair
+        if cb is not None:
+            try:
+                cb(s, self.shard_repairs)
+            except Exception:
+                pass
+
+    def anti_entropy_step(self, k: int = 1) -> int:
+        """Budgeted background sweep: verify the next ``k`` shards in
+        cursor order, repairing any whose digests disagree with KV
+        truth.  Returns the number of repairs performed.  O(k · shard
+        state) worst case, O(k · occupied rows) typical — callers run
+        it once per wave with small ``k``."""
+        if self._agg is None or k <= 0:
+            return 0
+        S = self._index_shards()
+        repaired = 0
+        for _ in range(min(int(k), S)):
+            s = self._sweep_cursor % S
+            self._sweep_cursor += 1
+            if not self.verify_shard(s):
+                self.repair_shard(s)
+                repaired += 1
+        return repaired
 
     def __len__(self):
         return self.n
@@ -982,10 +1385,11 @@ class IndicatorFactory:
             try:
                 depths = self._agg.match_depths(req.blocks,
                                                 out=self._hit_depths)
-            except (RuntimeError, OSError):
-                self._rebuild_index()    # degraded: serial retry
-                depths = self._agg.match_depths(req.blocks,
-                                                out=self._hit_depths)
+            except (RuntimeError, OSError) as e:
+                # degraded: scoped repair (or full rebuild) + retry
+                depths = self._walk_retry(
+                    e, lambda: self._agg.match_depths(
+                        req.blocks, out=self._hit_depths))
             self.walk_ns += time.perf_counter_ns() - t0
             self.walks += 1
             hits = depths * self.block_size
@@ -1099,12 +1503,14 @@ class IndicatorFactory:
                 depth_u = self._agg.match_depths_many(chains, order=order,
                                                       adj=adj)
                 handle = None
-        except (RuntimeError, OSError):
-            # walk backend died on dispatch: rebuild and run this
-            # wave's walk serially on the replacement index
-            self._rebuild_index()
-            depth_u = self._agg.match_depths_many(chains, order=order,
-                                                  adj=adj)
+        except (RuntimeError, OSError) as e:
+            # walk backend died on dispatch: repair (scoped to the
+            # failed shard when the error names one) and run this
+            # wave's walk on the healed index
+            depth_u = self._walk_retry(
+                e, lambda: self._agg.match_depths_many(chains,
+                                                       order=order,
+                                                       adj=adj))
             handle = None
         return _WaveHandle(tuple(reqs), uid, chains, order, adj,
                            depth_u, handle,
@@ -1119,13 +1525,13 @@ class IndicatorFactory:
         if h.handle is not None:
             try:
                 h.handle.wait()
-            except (RuntimeError, OSError):
-                # a shard worker died mid-query (degraded mode): rebuild
-                # the index and recompute this wave's walk serially —
-                # the wave proceeds instead of raising
-                self._rebuild_index()
-                h.depth_u = self._agg.match_depths_many(
-                    h.chains, order=h.order, adj=h.adj)
+            except (RuntimeError, OSError) as e:
+                # a shard worker died mid-query (degraded mode): repair
+                # and recompute this wave's walk — the wave proceeds
+                # instead of raising
+                h.depth_u = self._walk_retry(
+                    e, lambda: self._agg.match_depths_many(
+                        h.chains, order=h.order, adj=h.adj))
                 h.handle = None
         self.walk_ns += h.submit_ns + (time.perf_counter_ns() - t0)
         self.walks += len(h.chains)
@@ -1143,10 +1549,11 @@ class IndicatorFactory:
         if h.handle is not None:
             try:
                 h.handle.wait()
-            except (RuntimeError, OSError):
-                # the speculation is being dropped anyway; just replace
-                # the broken backend so the next wave has an index
-                self._rebuild_index()
+            except (RuntimeError, OSError) as e:
+                # the speculation is being dropped anyway; just heal
+                # the broken shard (or replace the backend) so the
+                # next wave has an index
+                self._rebuild_index(shard=getattr(e, "shard", None))
 
     def wave_inputs(self, reqs: Sequence[Request], with_lcp: bool = True):
         """(depth (k,n), lcp (k,k) | None, plen (k,)) for an arrival wave.

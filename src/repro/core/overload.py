@@ -48,10 +48,20 @@ class OverloadControl:
     retraction: bool = False
     slack: float = 1.0
     decode_margin: float = 1.5
+    #: patience-distribution-driven early retraction (closed loop only):
+    #: retract a queued request when its first token is predicted to
+    #: miss the prefill deadline AND the session's abandonment hazard
+    #: (``repro.workloads.sessions.abandon_hazard``) has crossed
+    #: ``patience_threshold`` — the prefill would likely be burnt on a
+    #: user about to hang up anyway.  Off by default; open-loop
+    #: simulators ignore it (no session state to read a hazard from).
+    patience_retraction: bool = False
+    patience_threshold: float = 0.75
 
     @property
     def enabled(self) -> bool:
-        return self.admission or self.retraction
+        return self.admission or self.retraction \
+            or self.patience_retraction
 
 
 #: the all-off configuration (bit-identity baseline)

@@ -277,6 +277,14 @@ class RoutingPipeline:
             reg.observe("pipeline.score_us", ((t2 - t1) - tp) / 1e3)
             reg.observe("pipeline.commit_us", (t3 - t2) / 1e3)
             reg.observe("pipeline.wave_size", float(len(reqs)))
+        # anti-entropy sweep (PR 9): digest-verify the next K shards
+        # against KV truth, repairing on mismatch.  Off the routing
+        # result path (this wave is already committed) and disabled at
+        # the default k=0 — the fault-free instruction sequence above
+        # is untouched.
+        k = router.anti_entropy_k
+        if k:
+            factory.anti_entropy_step(k)
         return out
 
     def _shard_marks(self, tr):

@@ -70,17 +70,23 @@ class Router:
                  n_shards: int = 1, parallel_walks: bool = False,
                  walk_backend: Optional[str] = None,
                  pipeline_overlap: Optional[bool] = None,
+                 shard_timeout_s: Optional[float] = None,
+                 anti_entropy_k: int = 0,
                  obs=None):
         self.policy = policy
         self.factory = IndicatorFactory(
             n_instances, kv_capacity_tokens=kv_capacity_tokens,
             block_size=block_size, exact_only=exact_only,
             n_shards=n_shards, parallel_walks=parallel_walks,
-            walk_backend=walk_backend)
+            walk_backend=walk_backend, shard_timeout_s=shard_timeout_s)
         self.insert_on_route = insert_on_route
         self.decision_ns: List[int] = []
         self.routed = 0
         self.pipeline = RoutingPipeline(self, overlap=pipeline_overlap)
+        #: anti-entropy budget: shards digest-verified (and repaired on
+        #: mismatch) at the tail of every routed wave; 0 (the default)
+        #: disables the sweep entirely
+        self.anti_entropy_k = int(anti_entropy_k)
         # observability bundle (repro.obs.Obs) — None (the default)
         # means *no* observability code runs anywhere in the routing
         # stack: every integration point is an ``is None`` branch, so
@@ -90,6 +96,8 @@ class Router:
         if obs is not None and (obs.registry is not None
                                 or obs.tracer is not None):
             self.factory.on_degraded_rebuild = self._on_degraded_rebuild
+            self.factory.on_shard_repair = self._on_shard_repair
+            self.factory.attach_backend_events(self._on_backend_event)
 
     # ---- lifecycle ----------------------------------------------------
     def close(self):
@@ -116,6 +124,27 @@ class Router:
         if obs.tracer is not None:
             obs.tracer.instant("index.degraded_rebuild",
                                args={"n": n})
+
+    def _on_shard_repair(self, s: int, n: int):
+        """Exactly-once scoped-repair event (fired by the factory at
+        the ``shard_repairs`` increment)."""
+        obs = self.obs
+        if obs.registry is not None:
+            obs.registry.inc("events.index_repair")
+        if obs.tracer is not None:
+            obs.tracer.instant("index.shard_repair",
+                               args={"shard": s, "n": n})
+
+    def _on_backend_event(self, kind: str, shard: int, info: dict):
+        """Shard-backend recovery events (``worker_restart`` /
+        ``worker_timeout`` / ``shard_escalated`` / ``shard_repair``) →
+        obs registry counter + tracer instant."""
+        obs = self.obs
+        if obs.registry is not None:
+            obs.registry.inc(f"events.{kind}")
+        if obs.tracer is not None:
+            obs.tracer.instant(f"shard.{kind}",
+                               args={"shard": shard, **info})
 
     def _emit_churn(self, kind: str, iid: int):
         obs = self.obs

@@ -36,12 +36,36 @@ interface with three implementations:
     verbatim); the segment is reused across walks and grown on demand,
     so the walk hot path pays no per-call segment create/attach.
 
+Self-healing (PR 9)
+-------------------
+When a **chains provider** is attached (``set_chains_provider`` — the
+indicator factory wires its per-shard ``RadixKVIndex.chains()`` truth),
+the process backend *supervises* its workers instead of fail-stopping:
+a worker that dies (EOF) or goes stuck (walk deadline exceeded) is
+restarted with capped exponential backoff, only that shard's index is
+rebuilt from canonical truth (``reload``), and the in-flight walk is
+re-sent to the healed shard; after ``max_restarts`` failed restarts the
+shard **escalates** to a serial in-parent fallback index so one broken
+shard can never kill the cluster.  Without a provider the legacy
+fail-stop behaviour is preserved exactly: any worker error, timeout, or
+EOF tears the whole backend down (segments unlinked) before raising.
+A worker that *answers* with ``("err", …)`` also keeps the legacy
+teardown — that is an application error, not a liveness failure.
+
+The hardcoded 60 s poll timeout is gone: every backend takes
+``timeout_s`` (falling back to ``REPRO_SHARD_TIMEOUT_S``, then a low
+pytest default) and derives a scale-aware ``walk_deadline`` from its
+per-shard instance width.  Seeded fault injection
+(``repro.core.faults``) hooks every backend's walk/mutation paths
+behind ``if self._faults is not None`` — zero work when absent.
+
 Shared-memory lifetime (the third architecture contract, see
 ``docs/ARCHITECTURE.md``): every segment — per-shard mask matrices,
 the per-backend fixed-slot metrics block, the walk output scratch — is closed
 AND unlinked by the owner on ``close()`` and on the error paths
-(worker exception, parent timeout, mid-query failure).  Leaks are
-pinned by ``tests/test_shard_backends.py`` against ``/dev/shm``.
+(worker exception, parent timeout, mid-query failure, supervised
+restart).  Leaks are pinned by ``tests/test_shard_backends.py``
+against ``/dev/shm``.
 
 Worker protocol (one duplex pipe per shard)::
 
@@ -52,29 +76,65 @@ Worker protocol (one duplex pipe per shard)::
     ("walk_many", name, shape,
      chains, order, adj)             ("ok",)  — match_depths_many slice
     ("nodes",)                       ("ok", n_nodes)
+    ("digest",)                      ("ok", digest, rescan_digest)
+    ("reload", pairs)                ("ok",)  — reset + replay truth
     ("ping",)                        ("ok",)
+    ("stall", seconds)               no ack   — injected stall
+    ("corrupt", seed)                no ack   — injected bit flip
+    ("die",)                         —        — injected crash (exits)
     ("boom",)                        ("err", …) — test hook (mid-query
                                      failure injection)
     ("close",)                       ("bye",)  — unlink masks and exit
 
 Worker exceptions answer ``("err", repr)`` (the parent raises and tears
-the backend down); every parent receive polls with a timeout so a hung
-worker raises instead of deadlocking the router.
+the backend down); every parent receive polls with the walk deadline so
+a hung worker heals — or, unsupervised, raises — instead of
+deadlocking the router.
 """
 from __future__ import annotations
 
+import os
 import time
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.obs.registry import N_WORKER_SLOTS
 
+from .faults import FaultInjector, ShardError
 from .indicators import AggregatedPrefixIndex, _WORD, shard_bounds
 
-#: parent-side receive timeout (seconds) — a worker that cannot answer
-#: within this is treated as dead and the backend tears down
-_POLL_TIMEOUT = 60.0
+#: default parent-side walk deadline base (seconds) outside pytest
+DEFAULT_TIMEOUT_S = 60.0
+#: low default under pytest so a wedged worker fails the test, not CI
+PYTEST_TIMEOUT_S = 15.0
+
+
+def resolve_timeout(timeout_s: Optional[float] = None) -> float:
+    """Effective backend timeout: explicit argument, else the
+    ``REPRO_SHARD_TIMEOUT_S`` environment override, else a low default
+    when running under pytest, else :data:`DEFAULT_TIMEOUT_S`."""
+    if timeout_s is not None:
+        return float(timeout_s)
+    env = os.environ.get("REPRO_SHARD_TIMEOUT_S")
+    if env:
+        try:
+            return float(env)
+        except ValueError:
+            pass
+    if "PYTEST_CURRENT_TEST" in os.environ:
+        return PYTEST_TIMEOUT_S
+    return DEFAULT_TIMEOUT_S
+
+
+class _WorkerDown(Exception):
+    """Internal: shard ``s``'s worker is dead or stuck and the backend
+    is supervised — callers heal instead of tearing down."""
+
+    def __init__(self, shard: int, reason: str):
+        super().__init__(reason)
+        self.shard = shard
+        self.reason = reason
 
 
 class WalkHandle:
@@ -114,11 +174,66 @@ class ShardBackend:
     shards: Optional[List[AggregatedPrefixIndex]] = None
 
     def __init__(self, n_instances: int, n_shards: int,
-                 capacity: int = 256):
+                 capacity: int = 256, timeout_s: Optional[float] = None):
         self.n = n_instances
         self.n_shards = n_shards
         self.bounds = shard_bounds(n_instances, n_shards)
         self.capacity = capacity
+        self.timeout_s = resolve_timeout(timeout_s)
+        self._faults: Optional[FaultInjector] = None
+        self._chains: Optional[Callable[[int], list]] = None
+        #: recovery counters (all backends; the in-process ones only
+        #: ever bump ``timeouts``)
+        self.timeouts = 0
+        self.heals = 0
+        self.escalations = 0
+        #: per-heal/repair wall cost (ns) for time-to-repair benches
+        self.repair_ns: List[int] = []
+        #: optional ``cb(kind, shard, info_dict)`` — the router wires
+        #: this into the obs registry/tracer
+        self.on_event = None
+
+    @property
+    def walk_deadline(self) -> float:
+        """Scale-aware receive deadline: the configured timeout,
+        stretched linearly once per-shard width exceeds the 64k
+        instances one worker is sized for."""
+        per = max(self.n // max(self.n_shards, 1), 1)
+        return self.timeout_s * max(1.0, per / 65536.0)
+
+    # ---- self-healing hooks -------------------------------------------
+    def attach_faults(self, injector: Optional[FaultInjector]):
+        """Arm deterministic fault injection (None disarms)."""
+        self._faults = injector
+
+    def set_chains_provider(self, provider):
+        """``provider(s) -> [(local_iid, chain), …]`` — the canonical
+        KV truth for shard ``s``.  Arms supervised recovery on backends
+        that support it; repairs rebuild only from this."""
+        self._chains = provider
+
+    @property
+    def supervised(self) -> bool:
+        return self._chains is not None
+
+    def _emit(self, kind: str, shard: int, **info):
+        cb = self.on_event
+        if cb is not None:
+            try:
+                cb(kind, shard, info)
+            except Exception:
+                pass
+
+    def _mut_faults(self, s: int) -> bool:
+        """Apply due mutation faults for shard ``s``; True = drop the
+        mutation.  Parent-side for every backend so semantics match."""
+        drop = False
+        for ev in self._faults.on_mutation(s):
+            if ev.kind == "drop":
+                drop = True
+            elif ev.kind == "delay":
+                time.sleep(ev.seconds)
+        return drop
 
     # ---- mutation (local ids, owner resolved by the caller) -----------
     def mutate(self, s: int, op: str, *args):
@@ -134,6 +249,17 @@ class ShardBackend:
         raise NotImplementedError
 
     def n_nodes(self) -> int:
+        raise NotImplementedError
+
+    # ---- anti-entropy -------------------------------------------------
+    def shard_digest(self, s: int):
+        """``(incremental_digest, rescan_digest)`` triples for shard
+        ``s`` (see ``AggregatedPrefixIndex.digest``)."""
+        raise NotImplementedError
+
+    def repair_shard(self, s: int, pairs):
+        """Rebuild shard ``s`` — and only shard ``s`` — from the
+        canonical ``(local_iid, chain)`` pairs."""
         raise NotImplementedError
 
     # ---- telemetry ----------------------------------------------------
@@ -169,8 +295,10 @@ class _InProcessBackend(ShardBackend):
     """Shared machinery for the serial and thread backends: a list of
     in-process flat indexes plus numpy telemetry accumulators."""
 
-    def __init__(self, n_instances, n_shards, capacity=256):
-        super().__init__(n_instances, n_shards, capacity)
+    def __init__(self, n_instances, n_shards, capacity=256,
+                 timeout_s=None):
+        super().__init__(n_instances, n_shards, capacity,
+                         timeout_s=timeout_s)
         self.shards = [AggregatedPrefixIndex(hi - lo, capacity=capacity)
                        for lo, hi in self.bounds]
         # fixed-slot metrics block (repro.obs.registry.WORKER_SLOTS);
@@ -192,13 +320,28 @@ class _InProcessBackend(ShardBackend):
         return np.array(self._slots)
 
     def mutate(self, s, op, *args):
+        if self._faults is not None and self._mut_faults(s):
+            return
         getattr(self.shards[s], op)(*args)
         self._slots[s, 3] += 1               # mutations slot
 
     def n_nodes(self):
         return sum(sh.n_nodes for sh in self.shards)
 
+    def _walk_faults(self, s):
+        for ev in self._faults.on_walk(s):
+            if ev.kind == "stall":
+                time.sleep(ev.seconds)
+            elif ev.kind == "corrupt":
+                self.shards[s].corrupt_bit(ev.seed)
+            elif ev.kind == "crash":
+                self._slots[s, 4] += 1       # errors slot
+                raise ShardError(
+                    s, f"prefix-shard {s}: injected crash")
+
     def _walk_task(self, s, lo, hi, blocks, out):
+        if self._faults is not None:
+            self._walk_faults(s)
         t0 = time.perf_counter_ns()
         self.shards[s].match_depths(blocks, out=out[lo:hi])
         self._walk_ns[s] += time.perf_counter_ns() - t0
@@ -206,12 +349,34 @@ class _InProcessBackend(ShardBackend):
         self._slots[s, 2] += 1               # walk_batches slot
 
     def _walk_many_task(self, s, lo, hi, chains, order, adj, out):
+        if self._faults is not None:
+            self._walk_faults(s)
         t0 = time.perf_counter_ns()
         self.shards[s].match_depths_many(chains, order=order, adj=adj,
                                          out=out[:, lo:hi])
         self._walk_ns[s] += time.perf_counter_ns() - t0
         self._walks[s] += len(chains)
         self._slots[s, 2] += 1               # walk_batches slot
+
+    # ---- anti-entropy -------------------------------------------------
+    def _quiesce(self):
+        pass
+
+    def shard_digest(self, s):
+        self._quiesce()
+        idx = self.shards[s]
+        return (idx.digest, idx.rescan_digest())
+
+    def repair_shard(self, s, pairs):
+        self._quiesce()
+        lo, hi = self.bounds[s]
+        t0 = time.perf_counter_ns()
+        idx = AggregatedPrefixIndex(hi - lo, capacity=self.capacity)
+        for li, chain in pairs:
+            idx.add(li, chain)
+        self.shards[s] = idx
+        self.repair_ns.append(time.perf_counter_ns() - t0)
+        self._emit("shard_repair", s)
 
     def close(self):
         pass
@@ -247,8 +412,10 @@ class ThreadBackend(_InProcessBackend):
     name = "thread"
     async_walks = True
 
-    def __init__(self, n_instances, n_shards, capacity=256):
-        super().__init__(n_instances, n_shards, capacity)
+    def __init__(self, n_instances, n_shards, capacity=256,
+                 timeout_s=None):
+        super().__init__(n_instances, n_shards, capacity,
+                         timeout_s=timeout_s)
         self._pool = None
         self._inflight: List = []
 
@@ -260,18 +427,24 @@ class ThreadBackend(_InProcessBackend):
                 thread_name_prefix="prefix-shard")
         return self._pool
 
-    @staticmethod
-    def _result(s, f):
+    def _result(self, s, f):
         """Bounded drain of one shard's walk future: a worker thread
-        stuck past ``_POLL_TIMEOUT`` raises a diagnostic naming the
-        shard instead of wedging the router forever."""
+        stuck past the walk deadline raises a :class:`ShardError`
+        naming the shard and elapsed time instead of wedging the router
+        forever — the factory repairs that one shard and retries."""
         from concurrent.futures import TimeoutError as _FutTimeout
+        deadline = self.walk_deadline
+        t0 = time.monotonic()
         try:
-            return f.result(timeout=_POLL_TIMEOUT)
+            return f.result(timeout=deadline)
         except _FutTimeout:
-            raise RuntimeError(
-                f"prefix-shard {s} walk stuck on thread backend "
-                f"(no result within {_POLL_TIMEOUT:.0f}s)") from None
+            self.timeouts += 1
+            elapsed = time.monotonic() - t0
+            self._emit("worker_timeout", s, elapsed_s=elapsed)
+            raise ShardError(
+                s, f"prefix-shard {s} walk stuck on thread backend "
+                   f"(no result within {elapsed:.1f}s, walk deadline "
+                   f"{deadline:.1f}s)") from None
 
     def _drain(self):
         if self._inflight:
@@ -283,17 +456,35 @@ class ThreadBackend(_InProcessBackend):
         self._drain()
         super().mutate(s, op, *args)
 
+    def _quiesce(self):
+        try:
+            self._drain()
+        except ShardError:
+            pass                 # the repair that follows supersedes it
+
     def _submit(self, tasks):
         pool = self._ensure_pool()
         futures = [(s, pool.submit(t)) for s, t in enumerate(tasks)]
         self._inflight.extend(futures)
 
         def wait():
-            for s, f in futures:
-                self._result(s, f)
-            done = {f for _, f in futures}
-            self._inflight = [p for p in self._inflight
-                              if p[1] not in done]
+            # drain every shard even when one errors: leaving a sibling
+            # task running would race the caller's retry walk on the
+            # shared out buffer
+            err = None
+            try:
+                for s, f in futures:
+                    try:
+                        self._result(s, f)
+                    except ShardError as e:
+                        if err is None:
+                            err = e
+            finally:
+                done = {f for _, f in futures}
+                self._inflight = [p for p in self._inflight
+                                  if p[1] not in done]
+            if err is not None:
+                raise err
         return WalkHandle(wait)
 
     def submit_walk(self, blocks, out):
@@ -444,8 +635,24 @@ def _shard_worker(conn, lo: int, hi: int, capacity: int,
                     conn.send(("ok",))
                 elif cmd == "nodes":
                     conn.send(("ok", idx.n_nodes))
+                elif cmd == "digest":
+                    conn.send(("ok", idx.digest, idx.rescan_digest()))
+                elif cmd == "reload":
+                    idx.reset()
+                    for li, chain in msg[1]:
+                        idx.add(li, chain)
+                    conn.send(("ok",))
                 elif cmd == "ping":
                     conn.send(("ok",))
+                elif cmd == "stall":
+                    time.sleep(msg[1])          # injected stall, no ack
+                elif cmd == "corrupt":
+                    idx.corrupt_bit(msg[1])     # injected flip, no ack
+                elif cmd == "die":
+                    # injected crash: no goodbye, but never leak the
+                    # mask segment (the parent backstop-unlinks too)
+                    idx.close()
+                    os._exit(1)
                 elif cmd == "boom":
                     raise RuntimeError("injected shard-worker failure")
                 elif cmd == "close":
@@ -480,16 +687,28 @@ class ProcessBackend(ShardBackend):
     metrics accumulate in an ``(S, N_WORKER_SLOTS)`` int64 shared
     fixed-slot block (``repro.obs.registry.WORKER_SLOTS`` — columns 0/1
     are the legacy walk telemetry pair) the parent reads without a
-    round trip.  Every parent receive polls with a timeout; any worker
-    error or timeout tears the whole backend down (segments unlinked,
-    workers joined or terminated).
+    round trip.
+
+    With a chains provider attached the backend is **supervised**: a
+    dead or stuck worker is healed in place (restart + per-shard reload
+    from truth + walk retry, escalating to an in-parent fallback index
+    after ``max_restarts``).  Without one — or when a worker answers
+    ``("err", …)`` — the legacy fail-stop teardown applies: segments
+    unlinked, workers joined or terminated, then raise.
     """
 
     name = "process"
     async_walks = True
+    #: failed restarts per shard before escalating to in-parent serial
+    max_restarts = 3
+    #: capped exponential backoff between restarts (seconds)
+    backoff_base = 0.05
+    backoff_cap = 1.0
 
-    def __init__(self, n_instances, n_shards, capacity=256):
-        super().__init__(n_instances, n_shards, capacity)
+    def __init__(self, n_instances, n_shards, capacity=256,
+                 timeout_s=None):
+        super().__init__(n_instances, n_shards, capacity,
+                         timeout_s=timeout_s)
         import multiprocessing as mp
         from multiprocessing import shared_memory
         self._closed = False
@@ -501,7 +720,15 @@ class ProcessBackend(ShardBackend):
         self._out_shm = None
         self._out_cap = 0
         self._pending: Optional[WalkHandle] = None
-        ctx = mp.get_context("spawn")   # fork-safety vs the jax runtime
+        # shards healed while a walk was in flight: the old incarnation
+        # took the walk message to its grave, so collect must re-send
+        # instead of waiting out the deadline on the fresh worker
+        self._lost: set = set()
+        # supervision state: per-shard restart counts and the escalated
+        # in-parent fallback indexes
+        self._restarts = [0] * n_shards
+        self._fallback: Dict[int, AggregatedPrefixIndex] = {}
+        self._ctx = mp.get_context("spawn")  # fork-safety vs jax runtime
         self._telem_shm = shared_memory.SharedMemory(
             create=True, size=n_shards * N_WORKER_SLOTS * 8)
         self._telem = np.ndarray((n_shards, N_WORKER_SLOTS),
@@ -509,37 +736,64 @@ class ProcessBackend(ShardBackend):
                                  buffer=self._telem_shm.buf)
         self._telem[:] = 0
         try:
-            for s, (lo, hi) in enumerate(self.bounds):
-                parent, child = ctx.Pipe()
-                p = ctx.Process(
-                    target=_shard_worker,
-                    args=(child, lo, hi, capacity,
-                          self._telem_shm.name, s, n_shards),
-                    daemon=True, name=f"prefix-shard-{s}")
-                p.start()
-                child.close()
+            for s in range(n_shards):
+                parent, p = self._spawn(s)
                 self._conns.append(parent)
                 self._procs.append(p)
             for s, conn in enumerate(self._conns):
-                msg = self._recv(conn, s)
+                msg = self._recv(conn, s, heal=False,
+                                 deadline=self.spawn_deadline)
                 self._mask_names.append(msg[1])
         except BaseException:
             self.close()
             raise
 
+    @property
+    def spawn_deadline(self) -> float:
+        """Ready-handshake deadline for a (re)spawned worker: spawn
+        cost (interpreter boot + imports) is independent of the walk
+        deadline, so a tight walk deadline must not make every restart
+        look dead on arrival."""
+        return max(self.walk_deadline, PYTEST_TIMEOUT_S)
+
+    def _spawn(self, s):
+        lo, hi = self.bounds[s]
+        parent, child = self._ctx.Pipe()
+        p = self._ctx.Process(
+            target=_shard_worker,
+            args=(child, lo, hi, self.capacity,
+                  self._telem_shm.name, s, self.n_shards),
+            daemon=True, name=f"prefix-shard-{s}")
+        p.start()
+        child.close()
+        return parent, p
+
     # ---- plumbing -----------------------------------------------------
-    def _recv(self, conn, s):
-        """Receive one message from shard ``s``'s worker; timeout, EOF,
-        and ``err`` answers tear the backend down before raising a
-        diagnostic that names the stuck/dead shard."""
-        if not conn.poll(_POLL_TIMEOUT):
+    def _recv(self, conn, s, heal=True, deadline=None):
+        """Receive one message from shard ``s``'s worker.  A timeout or
+        EOF raises :class:`_WorkerDown` on a supervised backend (the
+        caller heals) and tears the backend down otherwise; an ``err``
+        answer always tears down (legacy fail-stop for application
+        errors)."""
+        if deadline is None:
+            deadline = self.walk_deadline
+        t0 = time.monotonic()
+        if not conn.poll(deadline):
+            self.timeouts += 1
+            elapsed = time.monotonic() - t0
+            self._emit("worker_timeout", s, elapsed_s=elapsed)
+            reason = (f"prefix-shard {s} worker stuck (no answer "
+                      f"within {elapsed:.1f}s, walk deadline "
+                      f"{deadline:.1f}s)")
+            if heal and self.supervised:
+                raise _WorkerDown(s, reason)
             self.close()
-            raise RuntimeError(
-                f"prefix-shard {s} worker timed out (no answer within "
-                f"{_POLL_TIMEOUT:.0f}s)")
+            raise RuntimeError(reason)
         try:
             msg = conn.recv()
         except (EOFError, OSError):
+            if heal and self.supervised:
+                raise _WorkerDown(s, f"prefix-shard {s} worker died")
             self.close()
             raise RuntimeError(f"prefix-shard {s} worker died")
         if msg[0] == "err":
@@ -552,13 +806,138 @@ class ProcessBackend(ShardBackend):
         try:
             self._conns[s].send(msg)
         except (OSError, ValueError):
+            if self.supervised and not self._closed:
+                raise _WorkerDown(
+                    s, f"prefix-shard {s} worker pipe is closed")
             self.close()
             raise RuntimeError(
                 f"prefix-shard {s} worker pipe is closed")
 
+    # ---- supervision --------------------------------------------------
+    def _unlink_mask(self, s):
+        from multiprocessing import shared_memory
+        if s >= len(self._mask_names):
+            return
+        try:
+            seg = shared_memory.SharedMemory(name=self._mask_names[s])
+            seg.close()
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+
+    def _build_local(self, s, pairs):
+        lo, hi = self.bounds[s]
+        idx = AggregatedPrefixIndex(hi - lo, capacity=self.capacity)
+        for li, chain in pairs:
+            idx.add(li, chain)
+        return idx
+
+    def _truth(self, s):
+        return self._chains(s) if self._chains is not None else []
+
+    def _heal(self, s, reason):
+        """Supervised recovery for shard ``s``: reap the worker,
+        backstop-unlink its mask segment, then restart (backoff) and
+        reload from canonical truth — or escalate to an in-parent
+        fallback once the restart budget is spent.  Only shard ``s`` is
+        touched; the other workers keep their state."""
+        if self._closed or s in self._fallback:
+            return
+        if self._pending is not None:
+            # the in-flight walk died with the old incarnation — flag
+            # it so collect re-sends instead of waiting out the deadline
+            self._lost.add(s)
+        conn, proc = self._conns[s], self._procs[s]
+        try:
+            conn.close()
+        except OSError:
+            pass
+        if proc.is_alive():
+            proc.terminate()
+        proc.join(timeout=5.0)
+        self._unlink_mask(s)
+        self._restarts[s] += 1
+        self.heals += 1
+        pairs = self._truth(s)
+        t0 = time.perf_counter_ns()
+        if self._restarts[s] > self.max_restarts:
+            self._fallback[s] = self._build_local(s, pairs)
+            self.escalations += 1
+            self.repair_ns.append(time.perf_counter_ns() - t0)
+            self._emit("shard_escalated", s,
+                       restarts=self._restarts[s], reason=reason)
+            return
+        time.sleep(min(self.backoff_base * (2 ** (self._restarts[s] - 1)),
+                       self.backoff_cap))
+        parent, p = self._spawn(s)
+        self._conns[s], self._procs[s] = parent, p
+        try:
+            if not parent.poll(self.spawn_deadline):
+                raise EOFError
+            self._mask_names[s] = parent.recv()[1]
+            parent.send(("reload", pairs))
+            if not parent.poll(self.spawn_deadline):
+                raise EOFError
+            if parent.recv()[0] != "ok":
+                raise EOFError
+        except (EOFError, OSError):
+            # the replacement failed too — burn another restart (and
+            # eventually escalate) rather than tearing the cluster down
+            self._heal(s, f"{reason}; restart failed")
+            return
+        self.repair_ns.append(time.perf_counter_ns() - t0)
+        self._emit("worker_restart", s, restarts=self._restarts[s],
+                   reason=reason)
+
+    def _request(self, s, msg):
+        """Round-trip ``msg`` to shard ``s`` with supervised retry;
+        returns the answer, or None once the shard has escalated (the
+        caller serves from the fallback index)."""
+        while s not in self._fallback:
+            try:
+                self._send(s, msg)
+                return self._recv(self._conns[s], s)
+            except _WorkerDown as wd:
+                self._heal(s, wd.reason)
+        return None
+
+    # ---- fault injection ----------------------------------------------
+    def _walk_faults(self, s):
+        fb = self._fallback.get(s)
+        for ev in self._faults.on_walk(s):
+            if ev.kind == "stall":
+                if fb is not None:
+                    time.sleep(ev.seconds)
+                else:
+                    self._send(s, ("stall", ev.seconds))
+            elif ev.kind == "corrupt":
+                if fb is not None:
+                    fb.corrupt_bit(ev.seed)
+                else:
+                    self._send(s, ("corrupt", ev.seed))
+            elif ev.kind == "crash":
+                if fb is not None:
+                    self._fallback[s] = self._build_local(
+                        s, self._truth(s))
+                else:
+                    self._send(s, ("die",))
+
     # ---- mutation -----------------------------------------------------
     def mutate(self, s, op, *args):
-        self._send(s, (op,) + args)
+        if self._faults is not None and self._mut_faults(s):
+            return
+        fb = self._fallback.get(s)
+        if fb is not None:
+            getattr(fb, op)(*args)
+            self._telem[s, 3] += 1
+            return
+        try:
+            self._send(s, (op,) + args)
+        except _WorkerDown as wd:
+            # the mutation already landed in the owning RadixKVIndex
+            # (callbacks fire after the tree mutation), so the heal's
+            # reload-from-truth includes it — nothing to replay
+            self._heal(s, wd.reason)
 
     # ---- queries ------------------------------------------------------
     def _drain_pending(self):
@@ -568,6 +947,7 @@ class ProcessBackend(ShardBackend):
         pending, self._pending = self._pending, None
         if pending is not None:
             pending.wait()
+        self._lost.clear()   # stale flags from a discarded wave
 
     def _scratch(self, shape):
         """The persistent output segment, grown (fresh name — workers
@@ -594,23 +974,71 @@ class ProcessBackend(ShardBackend):
             except FileNotFoundError:
                 pass
 
-    def _collect(self, shm, shape, out):
+    def _collect(self, shm, shape, out, resend, local):
+        """Build the walk handle: drain every live worker's ack (healing
+        and re-sending on supervised failures), copy the scratch into
+        ``out``, then run escalated shards' walks in-parent over their
+        fallback indexes (they write the same disjoint slices)."""
         def wait():
-            for s, conn in enumerate(self._conns):
-                self._recv(conn, s)
+            for s in range(self.n_shards):
+                # a heal mid-wave (e.g. on the mutation path) lost the
+                # in-flight walk with the old worker — re-send first
+                # instead of waiting out the deadline for an answer
+                # that can never come
+                lost = s in self._lost
+                self._lost.discard(s)
+                while s not in self._fallback:
+                    try:
+                        if lost:
+                            lost = False
+                            resend(s)
+                        self._recv(self._conns[s], s)
+                        break
+                    except _WorkerDown as wd:
+                        self._heal(s, wd.reason)
+                        lost = True
+                self._lost.discard(s)
             buf = np.ndarray(shape, dtype=np.int64, buffer=shm.buf)
             np.copyto(out, buf)
             del buf
+            for s in sorted(self._fallback):
+                local(s)
         handle = WalkHandle(wait)
         self._pending = handle
         return handle
 
+    def _fanout(self, s, msg):
+        """Send one shard its walk message, applying due walk faults
+        first and healing a broken pipe in place."""
+        try:
+            if self._faults is not None:
+                self._walk_faults(s)
+            if s not in self._fallback:
+                self._send(s, msg)
+        except _WorkerDown as wd:
+            self._heal(s, wd.reason)
+            if s not in self._fallback:
+                try:
+                    self._send(s, msg)
+                except _WorkerDown as wd2:
+                    self._heal(s, wd2.reason)
+
     def submit_walk(self, blocks, out):
         self._drain_pending()
         shm = self._scratch((self.n,))
+        msg = ("walk", shm.name, self.n, blocks)
         for s in range(self.n_shards):
-            self._send(s, ("walk", shm.name, self.n, blocks))
-        return self._collect(shm, (self.n,), out)
+            self._fanout(s, msg)
+
+        def local(s):
+            lo, hi = self.bounds[s]
+            t0 = time.perf_counter_ns()
+            self._fallback[s].match_depths(blocks, out=out[lo:hi])
+            self._telem[s, 0] += time.perf_counter_ns() - t0
+            self._telem[s, 1] += 1
+            self._telem[s, 2] += 1
+        return self._collect(shm, (self.n,), out,
+                             lambda s: self._send(s, msg), local)
 
     def submit_walk_many(self, chains, order, adj, out):
         self._drain_pending()
@@ -619,17 +1047,48 @@ class ProcessBackend(ShardBackend):
         msg = ("walk_many", shm.name, shape, tuple(chains),
                list(order), np.asarray(adj))
         for s in range(self.n_shards):
-            self._send(s, msg)
-        return self._collect(shm, shape, out)
+            self._fanout(s, msg)
+
+        def local(s):
+            lo, hi = self.bounds[s]
+            t0 = time.perf_counter_ns()
+            self._fallback[s].match_depths_many(
+                msg[3], order=msg[4], adj=msg[5], out=out[:, lo:hi])
+            self._telem[s, 0] += time.perf_counter_ns() - t0
+            self._telem[s, 1] += len(chains)
+            self._telem[s, 2] += 1
+        return self._collect(shm, shape, out,
+                             lambda s: self._send(s, msg), local)
 
     def n_nodes(self):
         self._drain_pending()
         total = 0
         for s in range(self.n_shards):
-            self._send(s, ("nodes",))
-        for s, conn in enumerate(self._conns):
-            total += self._recv(conn, s)[1]
+            ans = self._request(s, ("nodes",))
+            total += (ans[1] if ans is not None
+                      else self._fallback[s].n_nodes)
         return total
+
+    # ---- anti-entropy -------------------------------------------------
+    def shard_digest(self, s):
+        self._drain_pending()
+        fb = self._fallback.get(s)
+        if fb is None:
+            ans = self._request(s, ("digest",))
+            if ans is not None:
+                return (tuple(ans[1]), tuple(ans[2]))
+            fb = self._fallback[s]
+        return (fb.digest, fb.rescan_digest())
+
+    def repair_shard(self, s, pairs):
+        self._drain_pending()
+        t0 = time.perf_counter_ns()
+        if s in self._fallback:
+            self._fallback[s] = self._build_local(s, pairs)
+        elif self._request(s, ("reload", list(pairs))) is None:
+            self._fallback[s] = self._build_local(s, pairs)
+        self.repair_ns.append(time.perf_counter_ns() - t0)
+        self._emit("shard_repair", s)
 
     # ---- telemetry ----------------------------------------------------
     @property
@@ -656,6 +1115,7 @@ class ProcessBackend(ShardBackend):
         self._closed = True
         from multiprocessing import shared_memory
         self._pending = None
+        self._fallback = {}
         self._drop_scratch()
         for conn in self._conns:
             try:
@@ -703,7 +1163,8 @@ _BACKENDS = {"serial": SerialBackend, "thread": ThreadBackend,
 
 
 def make_backend(name: str, n_instances: int, n_shards: int,
-                 capacity: int = 256) -> ShardBackend:
+                 capacity: int = 256,
+                 timeout_s: Optional[float] = None) -> ShardBackend:
     """Build a backend by name (``serial`` / ``thread`` / ``process``)."""
     try:
         cls = _BACKENDS[name]
@@ -711,4 +1172,5 @@ def make_backend(name: str, n_instances: int, n_shards: int,
         raise ValueError(
             f"unknown shard backend {name!r}; expected one of "
             f"{sorted(_BACKENDS)}") from None
-    return cls(n_instances, n_shards, capacity=capacity)
+    return cls(n_instances, n_shards, capacity=capacity,
+               timeout_s=timeout_s)

@@ -83,7 +83,7 @@ class ShardedPrefixIndex:
 
     def __init__(self, n_instances: int, n_shards: int,
                  capacity: int = 256, parallel: bool = False,
-                 backend=None):
+                 backend=None, timeout_s: Optional[float] = None):
         if not 1 <= n_shards <= n_instances:
             raise ValueError(
                 f"n_shards must be in [1, n_instances]: {n_shards} vs "
@@ -96,7 +96,8 @@ class ShardedPrefixIndex:
             backend = "thread" if parallel else "serial"
         if isinstance(backend, str):
             backend = make_backend(backend, n_instances, n_shards,
-                                   capacity=capacity)
+                                   capacity=capacity,
+                                   timeout_s=timeout_s)
         self.backend: ShardBackend = backend
 
     @property
@@ -179,6 +180,27 @@ class ShardedPrefixIndex:
             order, adj = _sorted_lcp(chains)
         return out, self.backend.submit_walk_many(chains, order, adj,
                                                   out)
+
+    # ---- self-healing / anti-entropy (PR 9) ---------------------------
+    def attach_faults(self, injector):
+        """Arm deterministic fault injection on the backend
+        (``repro.core.faults.FaultInjector``; None disarms)."""
+        self.backend.attach_faults(injector)
+
+    def set_chains_provider(self, provider):
+        """``provider(s) -> [(local_iid, chain), …]`` canonical truth;
+        arms supervised worker recovery on the process backend and is
+        what ``repair_shard`` callers replay."""
+        self.backend.set_chains_provider(provider)
+
+    def shard_digest(self, s: int):
+        """``(incremental, rescan)`` digest triples for shard ``s``."""
+        return self.backend.shard_digest(s)
+
+    def repair_shard(self, s: int, pairs):
+        """Rebuild shard ``s`` — and only shard ``s`` — from canonical
+        ``(local_iid, chain)`` pairs.  Healthy shards are untouched."""
+        self.backend.repair_shard(s, pairs)
 
     # ---- lifecycle ----------------------------------------------------
     def close(self):

@@ -256,7 +256,19 @@ def ingest_router(reg: MetricsRegistry, router) -> MetricsRegistry:
     reg.counter_set("pipeline.spec_blocked_ns", p.spec_blocked_ns)
     reg.counter_set("router.routed", router.routed)
     reg.counter_set("router.decisions", len(router.decision_ns))
+    # self-healing accumulators (PR 9): factory anti-entropy counters
+    # plus the shard backend's recovery counters — getattr-guarded so
+    # pre-PR-9 factories/backends (and exact_only) ingest cleanly
+    reg.counter_set("index.shard_repairs",
+                    getattr(f, "shard_repairs", 0))
+    reg.counter_set("index.verify_mismatches",
+                    getattr(f, "verify_mismatches", 0))
     backend = getattr(f._agg, "backend", None)
+    if backend is not None:
+        reg.counter_set("shard.timeouts", getattr(backend, "timeouts", 0))
+        reg.counter_set("shard.heals", getattr(backend, "heals", 0))
+        reg.counter_set("shard.escalations",
+                        getattr(backend, "escalations", 0))
     block = None
     if backend is not None:
         wm = getattr(backend, "worker_metrics", None)

@@ -59,12 +59,37 @@ from repro.core.types import DEFAULT_SLO, FAMILY_SLOS, SLO, Request, \
     slo_for_family
 
 __all__ = ["BLOCK", "SLO", "DEFAULT_SLO", "FAMILY_SLOS", "SessionSpec",
-           "SESSIONS", "Session", "make_sessions", "make_mixed_sessions",
-           "session_stats", "blocks_to_tokens"]
+           "SESSIONS", "Session", "abandon_hazard", "make_sessions",
+           "make_mixed_sessions", "session_stats", "blocks_to_tokens"]
 
 BLOCK = 64                 # tokens per content block (matches traces.py)
 _SESSION_SPACE = 1 << 20   # private block-id range per session
 _APP_SPACE = 1 << 60       # app prefixes live above every session range
+
+
+def abandon_hazard(breaches: int, patience_mean: float) -> float:
+    """P(a session abandons on its *next* breaching turn | it has
+    survived ``breaches`` consecutive breaches so far), under the
+    session patience model ``patience = 1 + Poisson(patience_mean)``:
+    with ``X ~ Poisson(mean)`` and ``b = breaches`` this is
+    ``P(X == b) / P(X >= b)``.  The hazard rises toward 1 as breaches
+    accumulate past the mean — the signal the patience-driven
+    retraction mode thresholds on (``OverloadControl
+    .patience_retraction``).  Pure function of the distribution, not of
+    any concrete session's hidden draw: the controller sees exactly
+    what a production router could (the breach count), never the
+    session's private patience sample."""
+    m = float(patience_mean)
+    b = max(int(breaches), 0)
+    if m <= 0.0:
+        return 1.0
+    pmf = math.exp(-m)            # P(X == 0)
+    below = 0.0                   # P(X <= b-1)
+    for k in range(1, b + 1):
+        below += pmf
+        pmf *= m / k
+    tail = max(1.0 - below, pmf)  # P(X >= b), underflow-guarded
+    return min(pmf / tail, 1.0)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,8 +38,12 @@ from repro.configs import get_config
 from repro.core import (IndicatorFactory, LatencyModel, OverloadControl,
                         Router, make_policy, spec_from_config)
 from repro.core._prefix_ref import AggregatedPrefixIndexRef
-from repro.core.indicators import AggregatedPrefixIndex
+from repro.core.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.core.indicators import (AggregatedPrefixIndex, _pairwise_lcp,
+                                   digest_from_chains)
 from repro.core.scalar_ref import make_scalar_policy
+from repro.core.shard_backends import (DEFAULT_TIMEOUT_S,
+                                       PYTEST_TIMEOUT_S, resolve_timeout)
 from repro.core.sharded_index import ShardedPrefixIndex
 from repro.workloads.traces import make_trace
 
@@ -380,6 +384,286 @@ def test_disabled_controls_bit_identical_to_scalar_ref(spec):
     scalar = fates(ref_policy, None)
     assert allopt_off == base
     assert scalar == base
+
+
+# ---------------------------------------------------------------------------
+# 5. PR 9: self-healing shard layer under deterministic fault injection
+# ---------------------------------------------------------------------------
+def _seed_kv(factory, n_chains=60, seed=7):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_chains):
+        iid = int(rng.integers(0, factory.n))
+        factory.instances[iid].kv.insert(_rand_chain(rng))
+
+
+def _probe_chains(rng, k):
+    return [_rand_chain(rng, vocab=8) for _ in range(k)]
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_fault_matrix_fate_parity(n_shards):
+    """A seeded crash+stall+corruption plan at every backend × shard
+    count: no whole-backend teardown, every walk completes within 2×
+    the configured walk deadline, the digest sweep repairs the
+    corruption, and decisions stay bit-identical to the fault-free
+    serial run (the corrupted wave excepted — the sweep repairs it
+    before the next one)."""
+    before = _shm_segments()
+    n = 16
+    rng = np.random.default_rng(500 + n_shards)
+    singles = _probe_chains(rng, 12)
+    waves = [_probe_chains(rng, 4) for _ in range(3)]
+    # fault-free serial truth (flat factory — Contract: decisions are
+    # bit-identical at any shard count / backend)
+    with IndicatorFactory(n, kv_capacity_tokens=1 << 20) as ref:
+        _seed_kv(ref)
+        want_single = [np.asarray(ref.hits_for(
+            _probe_request(c, ref.block_size))).copy() for c in singles]
+        want_wave = [ref.wave_inputs(
+            [_probe_request(c, ref.block_size, rid=i)
+             for i, c in enumerate(w)])[0].copy() for w in waves]
+    sh = n_shards
+    plan = FaultPlan(events=(
+        FaultEvent("crash", shard=1 % sh, at=2),
+        FaultEvent("crash", shard=3 % sh, at=5),
+        FaultEvent("stall", shard=2 % sh, at=4, seconds=0.02),
+        FaultEvent("stall", shard=0, at=7, seconds=0.02),
+        # scheduled well past the probes (retried walks advance the
+        # per-shard ordinals too); tripped by the drain loop below,
+        # then repaired by the sweep
+        FaultEvent("corrupt", shard=sh - 1,
+                   at=len(singles) + len(waves) + 10, seed=321),
+    ))
+    for backend in BACKENDS:
+        with IndicatorFactory(n, kv_capacity_tokens=1 << 20,
+                              n_shards=n_shards, walk_backend=backend,
+                              shard_timeout_s=10.0) as factory:
+            inj = FaultInjector(plan)
+            factory.attach_faults(inj)
+            _seed_kv(factory)
+            agg0 = factory._agg
+            be = factory._agg.backend
+            deadline = be.walk_deadline
+            for c, want in zip(singles, want_single):
+                t0 = os.times().elapsed
+                hits = factory.hits_for(_probe_request(c,
+                                                       factory.block_size))
+                assert os.times().elapsed - t0 < 2 * deadline, \
+                    f"{backend}/{n_shards}: walk blew the deadline"
+                assert np.array_equal(np.asarray(hits), want), \
+                    f"{backend}/{n_shards} diverged under faults"
+            for w, want in zip(waves, want_wave):
+                depth, _, _ = factory.wave_inputs(
+                    [_probe_request(c, factory.block_size, rid=i)
+                     for i, c in enumerate(w)])
+                assert np.array_equal(depth, want), \
+                    f"{backend}/{n_shards} wave diverged under faults"
+            # drain the injector until the scheduled corruption trips
+            # (crash retries drift the ordinals, so the exact walk
+            # count is backend-dependent), then let the sweep repair
+            for _ in range(40):
+                if not inj.pending:
+                    break
+                factory.hits_for(_probe_request(singles[0],
+                                               factory.block_size))
+            assert not inj.pending
+            assert factory.anti_entropy_step(n_shards) in (0, 1)
+            assert all(factory.verify_shard(s) for s in range(
+                factory._index_shards()))
+            # post-repair decisions are bit-identical again
+            hits = factory.hits_for(_probe_request(singles[0],
+                                                   factory.block_size))
+            assert np.array_equal(np.asarray(hits), want_single[0])
+            # the backend was never torn down; the supervised process
+            # backend healed in place without a single factory rebuild
+            assert factory._agg is agg0
+            assert not getattr(be, "_closed", False)
+            assert len(inj.fired) == len(plan)
+            if backend == "process":
+                assert factory.degraded_rebuilds == 0
+                assert be.heals >= 2
+    assert _shm_segments() <= before
+    assert not _live_workers()
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_corruption_caught_by_digest_sweep(backend):
+    """A silently flipped membership bit (pop cache and digest
+    accumulator untouched) is invisible to walks' error paths — only
+    the anti-entropy sweep can see it.  The sweep must catch it,
+    repair exactly the corrupted shard, and leave every shard's digest
+    equal to the one recomputed from KV truth."""
+    n, n_shards, target = 16, 4, 2
+    plan = FaultPlan(events=(
+        FaultEvent("corrupt", shard=target, at=0, seed=77),))
+    with IndicatorFactory(n, kv_capacity_tokens=1 << 20,
+                          n_shards=n_shards, walk_backend=backend,
+                          shard_timeout_s=10.0) as factory:
+        factory.attach_faults(FaultInjector(plan))
+        _seed_kv(factory, n_chains=80, seed=13)
+        # one walk trips the scheduled corruption on the target shard
+        factory.hits_for(_probe_request((1, 2, 3), factory.block_size))
+        assert not factory.verify_shard(target)
+        assert factory.verify_mismatches == 1
+        repaired = factory.anti_entropy_step(n_shards)
+        assert repaired == 1 and factory.shard_repairs == 1
+        for s in range(n_shards):
+            assert factory.verify_shard(s)
+            inc, scan = factory._agg.shard_digest(s)
+            truth = digest_from_chains(factory._shard_chains(s))
+            assert tuple(inc) == truth and tuple(scan) == truth
+    assert not _live_workers()
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+def test_worker_restart_mid_speculative_prefetch():
+    """A shard worker killed while a speculative wave walk is in
+    flight, with commits landing during the insert capture: the
+    supervised backend restarts the worker and retries the walk, the
+    capture stays valid, and the patched depths equal a fresh serial
+    walk over the final KV state — bit-identity held, zero factory
+    rebuilds."""
+    before = _shm_segments()
+    n, n_shards = 16, 4
+    rng = np.random.default_rng(31)
+    with IndicatorFactory(n, kv_capacity_tokens=1 << 20,
+                          n_shards=n_shards, walk_backend="process",
+                          shard_timeout_s=10.0) as factory:
+        _seed_kv(factory, n_chains=50, seed=31)
+        be = factory._agg.backend
+        reqs = [_probe_request(c, factory.block_size, rid=i)
+                for i, c in enumerate(_probe_chains(rng, 5))]
+        factory.begin_insert_capture()
+        h = factory.wave_submit(reqs)
+        be._procs[1].kill()              # dies mid-speculative-walk
+        # join so the pipe is really closed before the commits: the
+        # shard-1 mutation below must hit the dead worker, not a still
+        # half-open pipe buffer (the walk answer may legitimately have
+        # been sent pre-kill — the heal is then observed on mutate)
+        be._procs[1].join()
+        # commits land while the speculation is outstanding — one on
+        # the killed shard's range, one elsewhere
+        lo1, hi1 = factory._agg.bounds[1]
+        new_chains = [(lo1, _rand_chain(rng)), (0, _rand_chain(rng))]
+        for iid, chain in new_chains:
+            factory.instances[iid].kv.insert(chain)
+        inserted, valid = factory.end_insert_capture()
+        assert valid and len(inserted) == 2
+        depth, _, _ = factory.wave_collect(h)
+        # pipeline's exact np.maximum LCP patch for the capture
+        chains_q = list(h.chains)
+        u = len(chains_q)
+        cross = _pairwise_lcp(chains_q + [c for _, c in inserted])
+        for j, (iid, _) in enumerate(inserted):
+            col = cross[:u, u + j][h.uid]
+            np.maximum(depth[:, iid], col, out=depth[:, iid])
+        assert be.heals >= 1
+        assert factory.degraded_rebuilds == 0
+        assert not be._closed
+        # fresh serial truth over the FINAL KV state
+        fresh = AggregatedPrefixIndex(n)
+        for inst in factory.instances:
+            for chain in inst.kv.chains():
+                fresh.add(inst.iid, chain)
+        want = fresh.match_depths_many([r.blocks for r in reqs])
+        assert np.array_equal(depth, want)
+    assert _shm_segments() <= before
+    assert not _live_workers()
+
+
+@pytest.mark.chaos
+def test_scoped_rebuild_leaves_healthy_shards_untouched():
+    """PR 7's degraded rebuild, scoped: repairing shard 1 must not
+    touch the other shards' index objects (object identity, not just
+    content) nor replace the sharded index itself."""
+    n, n_shards = 16, 4
+    with IndicatorFactory(n, kv_capacity_tokens=1 << 20,
+                          n_shards=n_shards,
+                          walk_backend="serial") as factory:
+        _seed_kv(factory, n_chains=80, seed=23)
+        agg0 = factory._agg
+        be = agg0.backend
+        healthy = {s: be.shards[s] for s in (0, 2, 3)}
+        masks = {s: sh._masks for s, sh in healthy.items()}
+        broken = be.shards[1]
+        factory._rebuild_index(shard=1)
+        assert factory.degraded_rebuilds == 1
+        assert factory.shard_repairs == 1
+        assert factory._agg is agg0          # no index replacement
+        assert be.shards[1] is not broken    # the failed shard rebuilt
+        for s, sh in healthy.items():
+            assert be.shards[s] is sh, f"healthy shard {s} replaced"
+            assert be.shards[s]._masks is masks[s], \
+                f"healthy shard {s}'s node arrays touched"
+        # the repaired shard agrees with KV truth, and walks with it
+        assert factory.verify_shard(1)
+        ref = AggregatedPrefixIndexRef(n)
+        for inst in factory.instances:
+            for chain in inst.kv.chains():
+                ref.add(inst.iid, chain)
+        probes = _probe_chains(np.random.default_rng(23), 6)
+        assert np.array_equal(ref.match_depths_many(probes),
+                              agg0.match_depths_many(probes))
+
+
+@pytest.mark.chaos
+def test_resolve_timeout_precedence(monkeypatch):
+    """Explicit argument > ``REPRO_SHARD_TIMEOUT_S`` env > low pytest
+    default > ``DEFAULT_TIMEOUT_S``; an unparseable env value falls
+    through."""
+    monkeypatch.setenv("REPRO_SHARD_TIMEOUT_S", "7.25")
+    assert resolve_timeout(3.5) == 3.5
+    assert resolve_timeout() == 7.25
+    monkeypatch.setenv("REPRO_SHARD_TIMEOUT_S", "not-a-number")
+    assert resolve_timeout() == PYTEST_TIMEOUT_S
+    monkeypatch.delenv("REPRO_SHARD_TIMEOUT_S")
+    assert resolve_timeout() == PYTEST_TIMEOUT_S   # PYTEST_CURRENT_TEST
+    monkeypatch.delenv("PYTEST_CURRENT_TEST", raising=False)
+    assert resolve_timeout() == DEFAULT_TIMEOUT_S
+
+
+@pytest.mark.chaos
+@pytest.mark.process
+def test_stall_beyond_deadline_heals():
+    """A worker stalled past the configured walk deadline is treated
+    as stuck: the timeout counter bumps, the diagnostic names the
+    shard, the supervised heal restarts it, and the answer is still
+    bit-correct — no teardown, no factory rebuild."""
+    n, n_shards = 8, 2
+    events = []
+    plan = FaultPlan(events=(
+        FaultEvent("stall", shard=1, at=0, seconds=2.0),))
+    with IndicatorFactory(n, kv_capacity_tokens=1 << 20,
+                          n_shards=n_shards, walk_backend="process",
+                          shard_timeout_s=0.3) as factory:
+        factory.attach_faults(FaultInjector(plan))
+        factory.attach_backend_events(
+            lambda kind, shard, info: events.append((kind, shard, info)))
+        _seed_kv(factory, n_chains=40, seed=5)
+        be = factory._agg.backend
+        assert be.walk_deadline == pytest.approx(0.3)
+        c = _rand_chain(np.random.default_rng(5))
+        hits = factory.hits_for(_probe_request(c, factory.block_size))
+        assert be.timeouts >= 1 and be.heals >= 1
+        assert factory.degraded_rebuilds == 0
+        assert not be._closed
+        timeout_evs = [e for e in events if e[0] == "worker_timeout"]
+        assert timeout_evs and timeout_evs[0][1] == 1
+        assert timeout_evs[0][2]["elapsed_s"] >= 0.3
+        fresh = AggregatedPrefixIndex(n)
+        for inst in factory.instances:
+            for chain in inst.kv.chains():
+                fresh.add(inst.iid, chain)
+        req = _probe_request(c, factory.block_size)
+        want = np.minimum(fresh.match_depths(c) * factory.block_size,
+                          req.prompt_len)
+        assert np.array_equal(np.asarray(hits), want)
+    assert not _live_workers()
 
 
 @pytest.mark.chaos
