@@ -1765,6 +1765,157 @@ def bench_fault_recovery(force=False):
         f"{worst:.3f}, post-repair bit-identity={healed}")
 
 
+def bench_hetero_fleet(force=False):
+    """Heterogeneous fleet: fused model-normalized score vs a two-layer
+    route-then-balance baseline on the mixed-fleet closed-loop scenario.
+
+    The fleet is ``make_mixed_fleet``'s canonical testbed — 8 fast
+    instances (Qwen3-30B-MoE, ~3B active params so its marginal prefill
+    token is ~2.3x cheaper) + 8 slow ones (dense Qwen2-7B) — serving
+    chat (pinned to the 7B), coder (pinned to the MoE) and API-agent
+    (unconstrained) session families under closed-loop feedback.  Two
+    schedulers face the same workload:
+
+      * ``lmetric`` — the fused score ``(P+1)·norm × (BS+1)``: one
+        argmin over every feasible instance, speed-aware via the
+        per-instance normalization column (Contract 7),
+      * ``route-then-balance`` — the classic split: a model-routing
+        tier picks the least-mean-loaded feasible hardware class
+        (speed-blind), then the plain multiplication score balances
+        within it.
+
+    Reports, per policy, the overall goodput/TTFT/SLO summary plus a
+    per-hardware-class breakdown (``hardware_class_summary``), an
+    ``agree`` bit (fused goodput >= baseline — the cancellation
+    derivation's prediction; schema-checked as a hard error), a
+    goodput-gain ratio, and a decision-probe timing block.
+    REPRO_BENCH_SMALL=1 shrinks to a CI-friendly 200-session smoke.
+    """
+    import os
+
+    from repro.cluster.closed_loop import ClosedLoopSim
+    from repro.cluster.metrics import hardware_class_summary, summarize
+    from repro.cluster.simulator import make_mixed_fleet
+    from repro.core import LatencyModel, Router
+    from repro.core.types import Request
+    from repro.workloads.sessions import (SESSIONS,
+                                          make_mixed_fleet_sessions,
+                                          session_stats)
+    from .common import (capacity_qps, cluster_spec, median_of_k,
+                         timing_meta)
+
+    small = os.environ.get("REPRO_BENCH_SMALL", "0") == "1"
+    n_sessions = 200 if small else 1200
+    # offered session-start load vs the HOMOGENEOUS-fast capacity
+    # estimate.  Closed-loop feedback self-paces (a session's next turn
+    # waits for the previous one), so a nominal 2.0 is what actually
+    # lands in the contended regime where the two layers' objectives
+    # conflict and the schedulers separate; lower fractions leave both
+    # at ~100% SLO with indistinguishable goodput
+    base_frac = 2.0
+    mix_shares = {"chatbot": 0.4, "coder": 0.3, "agent": 0.3}
+    pols = ["lmetric", "route-then-balance"]
+    repeats = 9
+    spec = cluster_spec()
+
+    def run_one(pol_name):
+        fleet = make_mixed_fleet()
+        mix, acc = {}, 0
+        for fam in sorted(mix_shares):
+            mix[fam] = int(n_sessions * mix_shares[fam])
+            acc += mix[fam]
+        mix["coder"] += n_sessions - acc      # exact total
+        rates = {
+            fam: base_frac * mix_shares[fam] * capacity_qps(fam)
+            / SESSIONS[fam].expected_requests()
+            for fam in mix}
+        sessions = make_mixed_fleet_sessions(mix, seed=17,
+                                             start_rates=rates)
+        router = Router(build_policy(pol_name), fleet.n,
+                        kv_capacity_tokens=KV_CAPACITY, fleet=fleet)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec))
+        try:
+            done = sim.run_sessions(sessions)
+            # side-effect-free decision probe against the end-of-run
+            # landscape: full feasible-set walk + score + argmin
+            f = router.factory
+            probe = Request(rid=-1, arrival=0.0,
+                            prompt_len=8 * f.block_size, output_len=8,
+                            blocks=tuple(range(8)),
+                            model_requirement="")
+            pol = router.policy
+
+            def probe_batch(k=32):
+                # amortize per-call jitter: one sample = 32 decisions
+                for _ in range(k):
+                    pol.route(probe, f, 0.0)
+
+            probe_us, spread = median_of_k(probe_batch, repeats=repeats)
+            probe_us /= 32.0
+        finally:
+            router.close()
+        s = summarize(done, per_family_slo=True)
+        s.update(session_stats(sessions))
+        s["sched_us"] = router.mean_decision_us()
+        s["policy"] = pol_name
+        return {"overall": s,
+                "classes": hardware_class_summary(done, fleet),
+                "probe_us": probe_us}, spread
+
+    def go():
+        fleet = make_mixed_fleet()
+        norm = fleet.prefill_norm
+        by_cls = {c: [i for i in range(fleet.n)
+                      if fleet.class_of(i) == c]
+                  for c in fleet.class_vocab}
+        out = {
+            "n_sessions": n_sessions,
+            "offered_frac": base_frac,
+            "mix_shares": mix_shares,
+            "fleet": {
+                "classes": {
+                    c: {"model": fleet.model_of(ids[0]),
+                        "count": len(ids),
+                        "prefill_norm_s_per_tok": float(norm[ids[0]])}
+                    for c, ids in by_cls.items()},
+                "norm_ratio": float(norm.max() / norm.min()),
+            },
+            "policies": {},
+        }
+        spreads = []
+        for p in pols:
+            cell, spread = run_one(p)
+            spreads.append(spread)
+            out["policies"][p] = cell
+        fused = out["policies"]["lmetric"]["overall"]["goodput_rps"]
+        base = out["policies"]["route-then-balance"]["overall"][
+            "goodput_rps"]
+        out["goodput_gain"] = fused / max(base, 1e-9)
+        out["agree"] = bool(fused >= base)
+        out["timing"] = timing_meta(repeats, spreads)
+        return out
+
+    r = cached("hetero_fleet", go, force)
+    rows = []
+    for p, cell in r["policies"].items():
+        s = cell["overall"]
+        per_cls = " ".join(
+            f"{c}:goodput={cs['goodput_rps']:.2f}/s,"
+            f"slo={cs['slo_attainment'] * 100:.0f}%"
+            for c, cs in sorted(cell["classes"].items()))
+        rows.append(csv_row(
+            f"hetero.{p}", s["sched_us"],
+            f"goodput={s['goodput_rps']:.2f}/s "
+            f"ttft={s['ttft_mean'] * 1e3:.1f}ms "
+            f"slo={s['slo_attainment'] * 100:.1f}% "
+            f"abandon={s['abandon_rate'] * 100:.1f}% {per_cls}"))
+    return rows, (
+        f"hetero fleet ({r['n_sessions']} sessions, norm ratio "
+        f"{r['fleet']['norm_ratio']:.2f}x): fused normalized lmetric "
+        f"goodput {r['goodput_gain']:.2f}x vs route-then-balance "
+        f"(agree={r['agree']})")
+
+
 ALL_BENCHES = [
     bench_fig07_kv_awareness,
     bench_fig11_linear_sweep,
@@ -1792,4 +1943,5 @@ ALL_BENCHES = [
     bench_beyond_score_robustness,
     bench_obs_overhead,
     bench_fault_recovery,
+    bench_hetero_fleet,
 ]

@@ -22,7 +22,11 @@ check keeps them diffable across PRs:
   Perfetto-loadability rests on), ``obs_metrics.json`` a well-formed
   registry snapshot, and ``obs_overhead.json`` must carry an intact
   ``identical_decisions`` bit (observability changing a routing
-  decision is a hard failure, Contract 5).
+  decision is a hard failure, Contract 5),
+* ``hetero_fleet.json`` must carry per-hardware-class summary blocks
+  for both schedulers and an intact ``agree`` bit (the fused
+  model-normalized score losing to the route-then-balance baseline on
+  mixed-fleet goodput is a hard failure — Contract 7's prediction).
 
 Usage:  python scripts/check_bench_schema.py [results/bench]
 Exit 0 = all artifacts valid; 1 = violations (printed per file).
@@ -80,6 +84,15 @@ FAULT_RECOVERY_RECORD = (
     "p99_decision_us", "p50_repair_ms", "heals", "repairs",
     "escalations", "post_repair_identical",
 )
+#: per-policy cell of the hetero-fleet bench: the overall closed-loop
+#: summary plus the per-hardware-class breakdown the mixed fleet
+#: exists to compare
+HETERO_FLEET_OVERALL = (
+    "n", "ttft_mean", "ttft_p95", "tpot_mean", "slo_attainment",
+    "goodput_rps", "abandon_rate", "n_sessions", "sched_us", "policy",
+)
+HETERO_CLASS_RECORD = ("n", "ttft_mean", "slo_attainment",
+                       "goodput_rps")
 #: per-size record in router_scale.json (vector vs frozen scalar ref)
 ROUTER_SCALE_RECORD = ("vector_us", "scalar_us", "walk_us")
 #: per-(size, shard-count) record in the sharded sections — per-shard
@@ -341,6 +354,39 @@ def check_file(path):
         for b in ("serial", "thread", "process"):
             if b not in backends:
                 errors.append(f"{name}: missing backend '{b}' cell")
+    elif name == "hetero_fleet.json":
+        for key in ("n_sessions", "fleet", "policies", "goodput_gain",
+                    "agree", "timing"):
+            if key not in data:
+                errors.append(f"{name}: missing top-level '{key}'")
+        for p in ("lmetric", "route-then-balance"):
+            if p not in data.get("policies", {}):
+                errors.append(f"{name}.policies: missing policy '{p}'")
+        for p, cell in data.get("policies", {}).items():
+            if not isinstance(cell, dict):
+                errors.append(f"{name}.policies.{p}: expected dict")
+                continue
+            _check_record(cell.get("overall"), HETERO_FLEET_OVERALL,
+                          f"{name}.policies.{p}.overall", errors)
+            classes = cell.get("classes")
+            if not isinstance(classes, dict) or not classes:
+                errors.append(f"{name}.policies.{p}: missing/empty "
+                              f"per-hardware-class 'classes' block")
+            else:
+                for c, rec in classes.items():
+                    _check_record(rec, HETERO_CLASS_RECORD,
+                                  f"{name}.policies.{p}.classes.{c}",
+                                  errors)
+        fleet_classes = data.get("fleet", {}).get("classes", {})
+        if len(fleet_classes) < 2:
+            errors.append(f"{name}: fleet has fewer than 2 hardware "
+                          f"classes — nothing heterogeneous to compare")
+        if data.get("agree") is False:
+            errors.append(
+                f"{name}: agree is False — the fused model-normalized "
+                f"score lost to the two-layer route-then-balance "
+                f"baseline on mixed-fleet goodput")
+        _check_timing(data, name, errors, warnings)
     elif name == "fig22.json":
         for t, by_pol in data.items():
             for p, rec in by_pol.items():

@@ -120,7 +120,10 @@ class ClosedLoopSim(_SessionFeedback, ClusterSim):
         # its own remaining prefill is the "new" work; queue ahead of it
         # excludes itself (it is already counted in the instance column)
         q = np.array([max(float(f.queued_prefill_tokens[i]) - left, 0.0)])
-        ttft = self.model.predict_ttft_batch(
+        # per-instance predictor: inst.model IS self.model on a
+        # homogeneous fleet; on a heterogeneous one the prediction uses
+        # the instance's own roofline constants (PR 10)
+        ttft = inst.model.predict_ttft_batch(
             q, np.array([left]),
             np.array([float(f.r_bs[i])]),
             np.array([float(f.total_tokens[i])]), noise=1.0)

@@ -126,6 +126,30 @@ def summarize(requests: List[Request], slo_ttft: float = SLO_TTFT,
     return out
 
 
+def hardware_class_summary(requests: List[Request], fleet,
+                           per_family_slo: bool = True
+                           ) -> Dict[str, Dict[str, float]]:
+    """Per-hardware-class latency/SLO/goodput breakdown (mixed fleets).
+
+    Groups *finished* requests by the hardware class of the instance
+    they were scheduled to (``fleet.class_of(r.sched_to)``) and runs
+    :func:`summarize` on each group — the per-class goodput/TTFT/SLO
+    blocks ``bench_hetero_fleet`` reports.  Requests judged by their
+    family SLO by default (the mixed-scenario spelling).  Requests that
+    never finished or never got scheduled are excluded (they have no
+    class to attribute to); shed/retraction accounting stays with
+    :func:`overload_summary`.
+    """
+    by_cls: Dict[str, List[Request]] = {}
+    for r in requests:
+        if r.t_finish <= 0.0 or r.sched_to < 0:
+            continue
+        by_cls.setdefault(fleet.class_of(r.sched_to), []).append(r)
+    return {c: summarize(rs, by_family=False,
+                         per_family_slo=per_family_slo)
+            for c, rs in sorted(by_cls.items())}
+
+
 def overload_summary(finished: List[Request],
                      dropped: Sequence[Request] = (),
                      churn_recovery: Sequence[float] = ()

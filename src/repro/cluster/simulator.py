@@ -98,6 +98,22 @@ class _SimInstance:
         return allocs, decode_bs, ctx
 
 
+def make_mixed_fleet(mix=None, chips: int = 1, **spec_kw):
+    """The canonical heterogeneous testbed: a ``FleetSpec`` mixing a
+    fast class (Qwen3-30B-MoE — the paper's own eval model; only ~3B
+    *active* params, so its marginal prefill token is ~2.3x cheaper
+    than the dense 7B's) with a slow one (Qwen2-7B, dense), 8 instances
+    each by default.  ``mix`` overrides with ``(model_name,
+    hardware_class, count)`` groups (instances of one group are
+    contiguous — what the chaos hetero arm's class-scoped kill plans
+    index by).  Pass the result to ``Router(fleet=...)`` and
+    ``ClusterSim`` picks the per-instance specs up from the factory."""
+    from repro.core.fleet import make_fleet
+    if mix is None:
+        mix = (("qwen3_30b_moe", "fast", 8), ("qwen2_7b", "slow", 8))
+    return make_fleet(mix, chips=chips, **spec_kw)
+
+
 class ClusterSim:
     def __init__(self, router: Router, spec: EngineSpec,
                  model: Optional[LatencyModel] = None,
@@ -106,7 +122,25 @@ class ClusterSim:
         self.spec = spec
         self.model = model or LatencyModel(spec)
         n = len(router.factory)
-        self.instances = [_SimInstance(i, spec, self.model) for i in range(n)]
+        fleet = router.factory.fleet
+        self.fleet = fleet
+        if fleet is None:
+            # homogeneous: every instance shares THE model object — the
+            # exact legacy construction (bit-identity anchor)
+            self.instances = [_SimInstance(i, spec, self.model)
+                              for i in range(n)]
+        else:
+            # heterogeneous ground truth: each instance steps under its
+            # own spec's roofline.  One LatencyModel per distinct spec
+            # (they are stateless at error_std=0); the cluster-level
+            # ``self.model`` remains the *predictor* the admission gate
+            # and retraction heuristics consult — predictors are allowed
+            # to be imperfect (cf. llm-d-untuned), ground truth is not.
+            models = {}
+            self.instances = [
+                _SimInstance(i, s, models.setdefault(id(s),
+                                                     LatencyModel(s)))
+                for i, s in enumerate(fleet.specs)]
         self._events: List = []
         self._seq = itertools.count()
         self.now = 0.0
@@ -115,8 +149,12 @@ class ClusterSim:
         # admission shedding + deadline retraction share one stamped
         # deadline per request (repro.core.overload)
         self.overload = overload if overload is not None else NO_CONTROL
+        # a fleet needs the admission gate even with all controls off:
+        # its capability pre-filter is what sheds infeasible-everywhere
+        # requests (Contract 7) before the router's masked path raises
         self._admission = (AdmissionController(self.model, self.overload)
-                           if self.overload.enabled else None)
+                           if (self.overload.enabled or fleet is not None)
+                           else None)
         self.dropped: List[Request] = []
         self.retractions = 0
         self.wasted_prefill_tokens = 0
@@ -268,7 +306,10 @@ class ClusterSim:
         if prefill_tokens == 0 and decode_bs == 0:
             inst.busy = False
             return
-        dt = self.model.step_time(prefill_tokens, decode_bs, ctx)
+        # ground truth is per instance: inst.model IS self.model on a
+        # homogeneous fleet (same object, same floats) and the
+        # instance's own spec's model on a heterogeneous one
+        dt = inst.model.step_time(prefill_tokens, decode_bs, ctx)
         inst.busy = True
         # telemetry: attribute step time to 10s windows
         total = prefill_tokens + decode_bs

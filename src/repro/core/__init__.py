@@ -2,6 +2,7 @@ from .types import (DEFAULT_SLO, FAMILY_SLOS, Deadline, Request, SLO,
                     slo_for_family, stamp_deadline)
 from .radix import RadixKVIndex, tokens_to_blocks
 from .overload import NO_CONTROL, AdmissionController, OverloadControl
+from .fleet import FleetSpec, homogeneous_fleet, make_fleet
 from .indicators import (AggregatedPrefixIndex, IndicatorFactory,
                          InstanceState, shard_bounds)
 from .shard_backends import (ProcessBackend, SerialBackend, ShardBackend,
@@ -12,8 +13,8 @@ from .latency_model import EngineSpec, LatencyModel, spec_from_config
 from .policies import (DynamoPolicy, FilterKVPolicy, JSQPolicy,
                        LinearKVPolicy, LMetricPolicy, Policy,
                        PolyServePolicy, PreblePolicy,
-                       SessionAffinityPolicy, SimulationPolicy,
-                       make_policy)
+                       RouteThenBalancePolicy, SessionAffinityPolicy,
+                       SimulationPolicy, make_policy)
 from .hotspot import HotspotDetector
 from .router import Router
 
@@ -21,6 +22,7 @@ __all__ = [
     "Request", "SLO", "DEFAULT_SLO", "FAMILY_SLOS", "Deadline",
     "slo_for_family", "stamp_deadline",
     "OverloadControl", "AdmissionController", "NO_CONTROL",
+    "FleetSpec", "make_fleet", "homogeneous_fleet",
     "RadixKVIndex", "tokens_to_blocks",
     "AggregatedPrefixIndex", "ShardedPrefixIndex", "shard_bounds",
     "ShardBackend", "SerialBackend", "ThreadBackend", "ProcessBackend",
@@ -29,6 +31,7 @@ __all__ = [
     "InstanceState", "EngineSpec", "LatencyModel", "spec_from_config",
     "Policy", "JSQPolicy", "LinearKVPolicy", "DynamoPolicy",
     "FilterKVPolicy", "SimulationPolicy", "PreblePolicy", "PolyServePolicy",
-    "LMetricPolicy", "SessionAffinityPolicy", "make_policy",
+    "LMetricPolicy", "RouteThenBalancePolicy", "SessionAffinityPolicy",
+    "make_policy",
     "HotspotDetector", "Router",
 ]

@@ -977,13 +977,38 @@ class IndicatorFactory:
                  block_size: int = 64, exact_only: bool = False,
                  n_shards: int = 1, parallel_walks: bool = False,
                  walk_backend: Optional[str] = None,
-                 shard_timeout_s: Optional[float] = None):
+                 shard_timeout_s: Optional[float] = None,
+                 fleet=None):
         self.n = n_instances
         self.block_size = block_size
         self.exact_only = exact_only
         self.walk_backend = walk_backend
         self.parallel_walks = parallel_walks
         self.shard_timeout_s = shard_timeout_s
+        # --- heterogeneous fleet columns (PR 10) -------------------------
+        # model_id / hardware_class ride in the SoA like every other
+        # indicator (same shard_bounds partition as the device mirror
+        # and the sharded prefix index).  They are written once at init
+        # and never mutated, so the per-shard dirty protocol has nothing
+        # to re-upload for them — device_hetero_view caches one upload.
+        # prefill_norm is the per-instance marginal prefill cost; it is
+        # None iff no fleet was given OR the fleet's costs are constant
+        # (FleetSpec.norm_or_none) — the collapse that keeps homogeneous
+        # configurations on the exact legacy instruction sequence.
+        self.fleet = fleet
+        if fleet is not None:
+            if fleet.n != n_instances:
+                raise ValueError(f"fleet describes {fleet.n} instances, "
+                                 f"factory has {n_instances}")
+            self.model_id = fleet.model_codes.copy()
+            self.hardware_class = fleet.class_codes.copy()
+            self.prefill_norm = fleet.norm_or_none()
+        else:
+            self.model_id = np.zeros(n_instances, dtype=np.int64)
+            self.hardware_class = np.zeros(n_instances, dtype=np.int64)
+            self.prefill_norm = None
+        self._dev_hetero = None
+        self._feasible_cache = {}
         # degraded-mode telemetry: walk-backend deaths survived by
         # rebuilding the index from the per-instance radix trees
         self.degraded_rebuilds = 0
@@ -1476,6 +1501,50 @@ class IndicatorFactory:
                     for j in range(4))
         return self._dev
 
+    # ---- heterogeneous fleet reads (PR 10) -------------------------------
+    def feasible_mask(self, requirement: str):
+        """Boolean capability mask for a ``model_requirement``, or
+        ``None`` when there is nothing to filter (no fleet attached, or
+        an empty requirement — every instance qualifies).  Contract 7:
+        this is a *pre-score* filter; callers intersect it into the
+        policy's candidate set exactly like the alive mask, so a
+        ``None`` return keeps the legacy instruction sequence.  Masks
+        are cached per requirement string (the fleet is immutable)."""
+        if self.fleet is None or not requirement:
+            return None
+        m = self._feasible_cache.get(requirement)
+        if m is None:
+            m = self.fleet.feasible_mask(requirement)
+            self._feasible_cache[requirement] = m
+        return m
+
+    def device_hetero_view(self):
+        """(model_id, hardware_class, prefill_norm) as device arrays,
+        partitioned by the same ``shard_bounds`` cut as ``device_view``.
+        The columns are written once at init and never mutated, so —
+        unlike the load indicators — one cached upload serves every
+        wave; ``mark_dirty`` has nothing to invalidate here.  The norm
+        slot is ``None`` when ``prefill_norm`` collapsed (homogeneous
+        fleet), mirroring the host-side contract."""
+        if self._dev_hetero is not None:
+            return self._dev_hetero
+        import jax
+        import jax.numpy as jnp
+        with jax.experimental.enable_x64():
+            shards = [(jnp.asarray(self.model_id[lo:hi]),
+                       jnp.asarray(self.hardware_class[lo:hi]),
+                       None if self.prefill_norm is None
+                       else jnp.asarray(self.prefill_norm[lo:hi]))
+                      for lo, hi in self._mirror_bounds]
+            if self.n_shards == 1:
+                self._dev_hetero = shards[0]
+            else:
+                self._dev_hetero = tuple(
+                    None if shards[0][j] is None else
+                    jnp.concatenate([s[j] for s in shards])
+                    for j in range(3))
+        return self._dev_hetero
+
     # ---- wave inputs (host half of the batch routing path) ---------------
     def wave_submit(self, reqs: Sequence[Request]) -> _WaveHandle:
         """Start the walk stage for an arrival wave: dedup to unique
@@ -1647,7 +1716,7 @@ class IndicatorFactory:
                 keep.sum(axis=1).astype(np.int64))
 
     def snapshot(self) -> Dict[str, List]:
-        return {
+        snap = {
             "r_bs": self.r_bs.tolist(),
             "q_bs": self.q_bs.tolist(),
             "bs": self.bs_vector().tolist(),
@@ -1655,3 +1724,7 @@ class IndicatorFactory:
             "total_tokens": self.total_tokens.tolist(),
             "kv_tokens": [i.kv.tokens_stored for i in self.instances],
         }
+        if self.fleet is not None:
+            snap["model_id"] = self.model_id.tolist()
+            snap["hardware_class"] = self.hardware_class.tolist()
+        return snap

@@ -53,6 +53,19 @@ class EngineSpec:
     def c_attn(self) -> float:
         return self.kv_bytes_per_token / (HBM_BW * self.chips)
 
+    @property
+    def prefill_token_cost(self) -> float:
+        """Marginal step-time cost of one queued prefill token (s/token).
+
+        Exactly the prefill terms of ``step_time``: the compute term
+        plus the quarter-weighted attention-read term.  This is the
+        per-instance normalization constant the heterogeneous LMetric
+        score multiplies into the P-token indicator
+        (``IndicatorFactory.prefill_norm``) — derived from the same
+        roofline constants the simulator grounds truth on, so "fast
+        hardware" and "cheap model" both shrink it."""
+        return self.c_flops + self.c_attn * 0.25
+
 
 def spec_from_config(cfg, chips: int = 1, **kw) -> EngineSpec:
     kv_layers = sum(1 for k in cfg.block_pattern if k in ("attn", "swa",

@@ -82,6 +82,10 @@ class AdmissionController:
         self.control = control
         self.shed = 0
         self.admitted = 0
+        # infeasible-everywhere sheds (no live instance serves the
+        # request's model_requirement) — a capability property, counted
+        # separately from deadline sheds; see ``admit_wave``
+        self.capability_shed = 0
 
     def metrics_into(self, reg):
         """Mirror the gate's accumulators onto a metrics registry
@@ -91,6 +95,8 @@ class AdmissionController:
         ingestion contract)."""
         reg.counter_set("admission.shed", self.shed)
         reg.counter_set("admission.admitted", self.admitted)
+        reg.counter_set("admission.capability_shed",
+                        self.capability_shed)
 
     def admit_wave(self, factory, reqs: Sequence[Request],
                    now: float, alive: Optional[np.ndarray] = None):
@@ -106,15 +112,38 @@ class AdmissionController:
         """
         for r in reqs:
             stamp_deadline(r, slack=self.control.slack)
+        shed = []
+        if factory.fleet is not None:
+            # capability pre-filter (Contract 7): a request whose
+            # model_requirement no *live* instance serves is shed here
+            # regardless of control.admission — feasibility is a fleet
+            # property, not an overload control, and routing it anywhere
+            # would raise in the router's masked path.  Fleet-less
+            # factories skip this block entirely (legacy sequence).
+            feasible_reqs = []
+            for r in reqs:
+                mask = factory.feasible_mask(r.model_requirement)
+                if mask is not None:
+                    ok = mask if alive is None \
+                        else (mask & alive.astype(bool))
+                    if not bool(ok.any()):
+                        shed.append(r)
+                        self.capability_shed += 1
+                        continue
+                feasible_reqs.append(r)
+            reqs = feasible_reqs
         if not self.control.admission:
-            return list(reqs), []
+            if factory.fleet is not None:
+                self.shed += len(shed)
+                self.admitted += len(reqs)
+            return list(reqs), shed
         q = np.asarray(factory.queued_prefill_tokens, dtype=np.float64)
         d = np.asarray(factory.r_bs, dtype=np.float64)
         c = np.asarray(factory.total_tokens, dtype=np.float64)
         # decode-side feasibility is per instance, not per request:
         # computed once per wave (noise=1.0, see determinism contract)
         tpot = self.model.predict_tpot_batch(d, c, q, noise=1.0)
-        admitted, shed = [], []
+        admitted = []      # shed already holds any capability sheds
         for r in reqs:
             # per-instance KV$ hits: the gate sees the same new-token
             # cost routing would (a full-prompt bound over-sheds warm
@@ -132,6 +161,12 @@ class AdmissionController:
                 feasible &= tpot <= budget_t * self.control.decode_margin
             if alive is not None:
                 feasible &= alive.astype(bool)
+            if factory.fleet is not None:
+                # deadline feasibility must be judged on the instances
+                # that can actually serve the request (Contract 7)
+                mask = factory.feasible_mask(r.model_requirement)
+                if mask is not None:
+                    feasible &= mask
             if bool(feasible.any()):
                 admitted.append(r)
             else:

@@ -596,6 +596,15 @@ class LMetricPolicy(Policy):
             a = factory.p_tokens_for(req, hits) + 1.0
         else:
             a = 1.0 - hits / L + 1e-3
+        if factory.prefill_norm is not None:
+            # heterogeneous fleet: scale the KV$ term by the instance's
+            # marginal prefill cost (seconds of work, not tokens of
+            # work).  prefill_norm is None on homogeneous fleets — the
+            # collapse that keeps this branch off the legacy path (the
+            # cancellation property makes a constant norm decision-free,
+            # and skipping the multiply makes it bit-free too).  Same
+            # operation order as ScalarHeteroLMetricPolicy.
+            a = a * factory.prefill_norm
         if self.load_indicator == "bs":
             b = factory.bs_vector() + 1.0
         elif self.load_indicator == "cost":
@@ -612,6 +621,11 @@ class LMetricPolicy(Policy):
     def batch_supported(self, factory):
         if self.detector is not None or self.load_indicator == "cost":
             return False                     # documented host fallback
+        if factory.prefill_norm is not None:
+            # heterogeneous normalization: documented host fallback (the
+            # fused route_score kernel has no norm input; homogeneous
+            # fleets collapse the norm to None and keep the device plan)
+            return False
         return super().batch_supported(factory)
 
     def scores_batch(self, reqs, factory, now):
@@ -623,6 +637,8 @@ class LMetricPolicy(Policy):
                  + (plens[:, None] - hits)) + 1.0
         else:
             a = 1.0 - hits / L + 1e-3
+        if factory.prefill_norm is not None:
+            a = a * factory.prefill_norm[None, :]
         if self.load_indicator == "bs":
             b = factory.bs_vector() + 1.0
         elif self.load_indicator == "cost":
@@ -647,6 +663,70 @@ class LMetricPolicy(Policy):
             # mitigation: fall back to load-balance-only over remainder
             return self._select_min(factory.bs_vector(), allowed=allowed)
         return self._select_min(scores)
+
+
+# ---------------------------------------------------------------------------
+class RouteThenBalancePolicy(Policy):
+    """Two-layer baseline for the heterogeneous fleet (PR 10).
+
+    Layer 1 (model router) picks the *hardware class* with the lowest
+    mean batch size among feasible candidates — it sees load but not
+    speed, the classic split where a model-routing tier sits in front
+    of an off-the-shelf load balancer.  Layer 2 then runs the plain
+    (un-normalized) multiplication score *within* the chosen class,
+    where the cancellation property makes normalization moot.
+
+    The fused model-normalized LMetric beats this exactly when the
+    layers' objectives conflict: a lightly-loaded slow class can win
+    layer 1 while a moderately-loaded fast class would finish the
+    prefill sooner (``bench_hetero_fleet`` measures the gap).  Host
+    fallback only (``batch_kind=None``): the class pick is a stateful
+    per-decision reduction the frozen-state device plan cannot model.
+    """
+    name = "route-then-balance"
+    batch_kind = None
+
+    def _lmetric_scores(self, req, factory, hits):
+        a = factory.p_tokens_for(req, hits) + 1.0
+        b = factory.bs_vector() + 1.0
+        return a * b
+
+    def _candidates(self, req, factory) -> np.ndarray:
+        """Feasible ∩ alive, falling back to alive (the router sheds
+        infeasible-everywhere requests before they reach a policy)."""
+        ok = np.ones(len(factory), dtype=bool)
+        feas = factory.feasible_mask(req.model_requirement)
+        if feas is not None:
+            ok &= feas
+        if self.alive is not None:
+            ok &= self.alive
+        if not ok.any():
+            ok = (np.ones(len(factory), dtype=bool)
+                  if self.alive is None else self.alive.copy())
+        return ok
+
+    def route(self, req, factory, now):
+        hits = factory.hits_for(req)
+        ok = self._candidates(req, factory)
+        cls = factory.hardware_class
+        bs = factory.bs_vector()
+        best_c, best_load = -1, np.inf
+        for c in np.unique(cls[ok]):
+            load = float(bs[ok & (cls == c)].mean())
+            if load < best_load:
+                best_c, best_load = int(c), load
+        allowed = np.flatnonzero(ok & (cls == best_c))
+        scores = self._lmetric_scores(req, factory, hits)
+        return self._select_min(scores, allowed=allowed)
+
+    def scores_batch(self, reqs, factory, now):
+        # inspection matrix: the layer-2 score every row ranks (the
+        # layer-1 class restriction is a candidate filter, not a score)
+        hits = self._hits_matrix(reqs, factory)
+        plens = self._plens(reqs)
+        a = (factory.queued_prefill_tokens
+             + (plens[:, None] - hits)) + 1.0
+        return a * (factory.bs_vector() + 1.0)
 
 
 def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
@@ -674,4 +754,6 @@ def make_policy(name: str, latency_model: Optional[LatencyModel] = None,
         return LMetricPolicy(**kw)
     if name in ("session-affinity", "smetric", "affinity"):
         return SessionAffinityPolicy(**kw)
+    if name in ("route-then-balance", "rtb"):
+        return RouteThenBalancePolicy(**kw)
     raise KeyError(name)

@@ -72,13 +72,15 @@ class Router:
                  pipeline_overlap: Optional[bool] = None,
                  shard_timeout_s: Optional[float] = None,
                  anti_entropy_k: int = 0,
+                 fleet=None,
                  obs=None):
         self.policy = policy
         self.factory = IndicatorFactory(
             n_instances, kv_capacity_tokens=kv_capacity_tokens,
             block_size=block_size, exact_only=exact_only,
             n_shards=n_shards, parallel_walks=parallel_walks,
-            walk_backend=walk_backend, shard_timeout_s=shard_timeout_s)
+            walk_backend=walk_backend, shard_timeout_s=shard_timeout_s,
+            fleet=fleet)
         self.insert_on_route = insert_on_route
         self.decision_ns: List[int] = []
         self.routed = 0
@@ -171,9 +173,34 @@ class Router:
         return reg.snapshot()
 
     # ------------------------------------------------------------------
+    def _route_masked(self, req: Request, mask, now: float) -> int:
+        """Capability-masked decision (Contract 7): the feasibility mask
+        is intersected into the policy's candidate set exactly like the
+        alive mask — a *pre-score filter*, restored afterwards so the
+        next (unconstrained) request sees the legacy path.  A request no
+        live instance can serve must be shed upstream
+        (``AdmissionController``); reaching the policy with an empty
+        candidate set is a caller bug."""
+        pol = self.policy
+        saved = pol.alive
+        eff = mask if saved is None else (mask & saved)
+        if not eff.any():
+            raise ValueError(
+                f"no live instance serves model_requirement="
+                f"{req.model_requirement!r} (shed it at admission)")
+        pol.alive = eff
+        try:
+            return pol.route(req, self.factory, now)
+        finally:
+            pol.alive = saved
+
     def route(self, req: Request, now: float) -> int:
         t0 = time.perf_counter_ns()
-        iid = self.policy.route(req, self.factory, now)
+        mask = self.factory.feasible_mask(req.model_requirement)
+        if mask is None:
+            iid = self.policy.route(req, self.factory, now)
+        else:
+            iid = self._route_masked(req, mask, now)
         self.decision_ns.append(time.perf_counter_ns() - t0)
         obs = self.obs
         if obs is not None and obs.provenance is not None:
@@ -221,7 +248,12 @@ class Router:
         if not reqs:
             return []
         if (len(reqs) == 1 or not self.insert_on_route
-                or not self.policy.batch_supported(self.factory)):
+                or not self.policy.batch_supported(self.factory)
+                or (self.factory.fleet is not None
+                    and any(r.model_requirement for r in reqs))):
+            # a wave carrying model_requirements needs the per-request
+            # capability mask (Contract 7), which the fused device plan
+            # has no input for — documented host fallback.
             # without insert-on-route the plan's intra-wave LCP credit
             # would model KV$ inserts that never happen — host path.
             # any pending speculative walk targeted the wave path; the

@@ -239,11 +239,64 @@ class ScalarLMetricPolicy(ScalarPolicy):
         return self._select_min(scores, allowed=allowed)
 
 
+class ScalarHeteroLMetricPolicy(ScalarPolicy):
+    """Frozen scalar reference for the heterogeneous score (PR 10).
+
+    Appended alongside (never instead of) ``ScalarLMetricPolicy`` —
+    the homogeneous reference above stays the anchor for the
+    homogeneous bit-identity battery, this class anchors the
+    model-normalized one:
+
+        score_k = ((p_token_k + 1.0) * norm_k) * (bs_k + 1.0)
+
+    with ``norm_k`` the instance's marginal prefill cost
+    (``EngineSpec.prefill_token_cost``) and an optional capability
+    filter: when ``model_names`` is given, a request carrying a
+    ``model_requirement`` only scores matching instances (the Contract 7
+    pre-score filter, spelled as ``_select_min(allowed=...)``).
+
+    Operation order matters: the vectorized ``LMetricPolicy`` with
+    ``factory.prefill_norm`` set must match this loop to the last float
+    bit (the PR 10 differential battery routes identical traces through
+    both).  Do not "improve" this class — same freeze rule as the rest
+    of the module.
+    """
+    name = "hetero-lmetric"
+
+    def __init__(self, norm: Sequence[float],
+                 model_names: Optional[Sequence[str]] = None):
+        super().__init__()
+        self.norm = [float(x) for x in norm]
+        self.model_names = (None if model_names is None
+                            else list(model_names))
+
+    def scores(self, req, factory, hits):
+        out = []
+        for k, inst in enumerate(factory):
+            a = (inst.p_token(req, hits[k]) + 1.0) * self.norm[k]
+            b = inst.bs + 1.0
+            out.append(a * b)
+        return out
+
+    def feasible(self, req) -> Optional[List[int]]:
+        if self.model_names is None or not req.model_requirement:
+            return None
+        return [k for k, m in enumerate(self.model_names)
+                if m == req.model_requirement]
+
+    def route(self, req, factory, now):
+        hits = hits_for_scalar(factory, req)
+        scores = self.scores(req, factory, hits)
+        return self._select_min(scores, allowed=self.feasible(req))
+
+
 def make_scalar_policy(name: str,
                        latency_model: Optional[LatencyModel] = None,
                        **kw) -> ScalarPolicy:
     """Mirror of ``policies.make_policy`` over the frozen scalar classes."""
     name = name.lower()
+    if name == "hetero-lmetric":
+        return ScalarHeteroLMetricPolicy(**kw)
     if name in ("vllm", "jsq"):
         return ScalarJSQPolicy()
     if name in ("linear", "bailian"):

@@ -15,6 +15,7 @@ class Request:
     class_id: int = -1             # request class (shared-prefix group)
     session_id: int = -1           # closed-loop session (-1: open-loop)
     family: str = ""               # workload family tag (metrics breakdown)
+    model_requirement: str = ""    # "": any instance; else capability tag
 
     # ---- runtime bookkeeping (filled by sim/engine) ----
     sched_to: int = -1

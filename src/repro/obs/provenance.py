@@ -21,6 +21,19 @@ lower-loaded candidate existed — and increments the registry counter
 ``provenance.failure_condition`` so the condition is observable *before*
 its latency cost shows up in TTFT tails.
 
+Under a heterogeneous fleet (PR 10) the failure regime gains a second
+shape: the model-normalized score can keep a *fast* hardware class
+loaded far above the fleet median because its small normalization
+constant discounts queued prefill — cross-class capture.  When the
+factory carries a fleet, the detector classifies each capture by
+whether the lighter candidate sits in a *different* hardware class
+(``failure_kind: "cross_class"``) or the same one (``"affinity
+capture"``); the counter ``provenance.failure_condition`` covers both,
+``provenance.failure_condition.cross_class`` counts just the hetero
+shape.  The cancellation derivation in ``docs/ARCHITECTURE.md``
+explains why cross-class comparisons pick up the normalization ratio
+the homogeneous argument cancels away.
+
 Capturing a record costs one aggregated-index walk per decision (plus,
 for policies without a hit-vector ``scores`` form, one side-effect-free
 ``scores_batch`` row) — real but opt-in overhead; the decision sequence
@@ -46,6 +59,8 @@ class ProvenanceRecorder:
         self.records: List[dict] = []
         self._by_rid = {}
         self.failure_conditions = 0
+        self.cross_class_conditions = 0
+        self.last_failure_kind = None
         self._all = np.arange(0)  # cached identity candidate set
 
     # ------------------------------------------------------------------
@@ -90,7 +105,30 @@ class ProvenanceRecorder:
         pin = None
         if policy is not None and req.session_id >= 0:
             pin = policy.session_pin(req.session_id)
-        failure = self._failure_condition(iid, bs, new_prefill, live)
+        hetero = getattr(factory, "fleet", None) is not None
+        cls = factory.hardware_class if hetero else None
+        failure = self._failure_condition(iid, bs, new_prefill, live,
+                                          cls=cls)
+        if hetero:
+            # normalized indicators: enough to replay the hetero
+            # argmin by hand (Contract 7 instrumentation)
+            norm = factory.prefill_norm
+            top_k = [
+                {"iid": int(j),
+                 "new_prefill": int(new_prefill[j]),
+                 "batch": int(bs[j]),
+                 "score": float(scores[j]),
+                 "model_id": int(factory.model_id[j]),
+                 "hardware_class": int(factory.hardware_class[j]),
+                 "norm": 1.0 if norm is None else float(norm[j])}
+                for j in order]
+        else:
+            top_k = [
+                {"iid": int(j),
+                 "new_prefill": int(new_prefill[j]),
+                 "batch": int(bs[j]),
+                 "score": float(scores[j])}
+                for j in order]
         rec = {
             "rid": req.rid,
             "t": now,
@@ -100,27 +138,45 @@ class ProvenanceRecorder:
             "pinned": int(pin) if pin is not None else -1,
             "tie_count": n_ties,
             "tie_break": "round_robin" if n_ties > 1 else "unique",
-            "top_k": [
-                {"iid": int(j),
-                 "new_prefill": int(new_prefill[j]),
-                 "batch": int(bs[j]),
-                 "score": float(scores[j])}
-                for j in order],
+            "top_k": top_k,
             "failure_condition": failure,
         }
+        if hetero:
+            rec["model_requirement"] = req.model_requirement
+            rec["chosen_model_id"] = int(factory.model_id[iid])
+            rec["chosen_hardware_class"] = int(
+                factory.hardware_class[iid])
+            if failure:
+                rec["failure_kind"] = self.last_failure_kind
         self.records.append(rec)
         self._by_rid[req.rid] = rec
         if self.registry is not None:
             self.registry.inc("provenance.records")
             if failure:
                 self.registry.inc("provenance.failure_condition")
+                if self.last_failure_kind == "cross_class":
+                    self.registry.inc(
+                        "provenance.failure_condition.cross_class")
 
-    def _failure_condition(self, iid, bs, new_prefill, live) -> bool:
+    def _failure_condition(self, iid, bs, new_prefill, live,
+                           cls=None) -> bool:
         """Affinity capture: the product picked an instance loaded more
         than ``alpha ×`` the live-fleet median while a strictly
         lower-loaded candidate existed — only possible when the prefill
         factor's spread exceeds the load spread (the detectable
-        failure regime)."""
+        failure regime).
+
+        With ``cls`` (the per-instance hardware-class codes, hetero
+        fleets), the capture is additionally classified: when any
+        strictly lighter live candidate sits in a *different* class
+        than the chosen instance, the kind is ``"cross_class"`` — the
+        normalization-ratio regime the hetero cancellation derivation
+        flags — else ``"affinity_capture"``.  The classification is
+        exposed via ``last_failure_kind`` / the record's
+        ``failure_kind`` field; the return value (and the base
+        counter) is unchanged from the homogeneous detector.
+        """
+        self.last_failure_kind = None
         if len(live) < 2:
             return False
         bs_live = bs[live]
@@ -133,9 +189,16 @@ class ProvenanceRecorder:
         med = max(med, 1.0)
         if bs[iid] <= self.alpha * med:
             return False
-        hit = bool((bs_live < bs[iid]).any())
+        lighter = bs_live < bs[iid]
+        hit = bool(lighter.any())
         if hit:
             self.failure_conditions += 1
+            self.last_failure_kind = "affinity_capture"
+            if cls is not None:
+                other = cls[live][lighter] != cls[iid]
+                if bool(other.any()):
+                    self.last_failure_kind = "cross_class"
+                    self.cross_class_conditions += 1
         return hit
 
     # ------------------------------------------------------------------
@@ -164,6 +227,7 @@ class ProvenanceRecorder:
         return {
             "n_records": len(self.records),
             "failure_conditions": self.failure_conditions,
+            "cross_class_conditions": self.cross_class_conditions,
             "tie_rate": (sum(1 for r in self.records
                              if r["tie_count"] > 1)
                          / max(len(self.records), 1)),

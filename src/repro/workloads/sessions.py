@@ -60,7 +60,9 @@ from repro.core.types import DEFAULT_SLO, FAMILY_SLOS, SLO, Request, \
 
 __all__ = ["BLOCK", "SLO", "DEFAULT_SLO", "FAMILY_SLOS", "SessionSpec",
            "SESSIONS", "Session", "abandon_hazard", "make_sessions",
-           "make_mixed_sessions", "session_stats", "blocks_to_tokens"]
+           "make_mixed_sessions", "make_mixed_fleet_sessions",
+           "MIXED_FLEET_REQUIREMENTS", "session_stats",
+           "blocks_to_tokens"]
 
 BLOCK = 64                 # tokens per content block (matches traces.py)
 _SESSION_SPACE = 1 << 20   # private block-id range per session
@@ -110,6 +112,7 @@ class SessionSpec:
     block_tokens: int = BLOCK     # tokens per abstract block
     patience_mean: float = 2.0    # consecutive breaching TURNS tolerated
     slo: SLO = DEFAULT_SLO
+    model_requirement: str = ""   # "": any instance (Contract 7)
 
     def expected_requests(self) -> float:
         """Mean requests one session issues if it never abandons — the
@@ -217,7 +220,8 @@ class Session:
         return Request(rid=-1, arrival=arrival, blocks=blocks,
                        prompt_len=len(blocks) * spec.block_tokens,
                        output_len=out, class_id=self.sid,
-                       session_id=self.sid, family=spec.family)
+                       session_id=self.sid, family=spec.family,
+                       model_requirement=spec.model_requirement)
 
     def _emit_turn(self, arrival: float) -> List[Request]:
         spec = self.spec
@@ -330,6 +334,53 @@ def make_mixed_sessions(mix: Dict[str, int], seed: int = 0,
         rate = (start_rates or {}).get(name)
         out.extend(make_sessions(name, mix[name], seed=seed,
                                  start_rate=rate, slo=slo, sid0=sid0))
+        sid0 += mix[name]
+    out.sort(key=lambda s: (s.start_t, s.sid))
+    return out
+
+
+#: default family → model_requirement map for the mixed-fleet scenario:
+#: chatbots are fine on the small fast model, coder/toolagent loops need
+#: the big one, API agents take whatever is least loaded ("" = any).
+#: Keys are session-family names; values must be model names that exist
+#: in the fleet (``simulator.make_mixed_fleet`` defaults).
+MIXED_FLEET_REQUIREMENTS: Dict[str, str] = {
+    "chatbot": "qwen2_7b",
+    "coder": "qwen3_30b_moe",
+    "toolagent": "qwen3_30b_moe",
+    "agent": "",
+}
+
+
+def make_mixed_fleet_sessions(mix: Dict[str, int], seed: int = 0,
+                              requirements: Optional[Dict[str, str]] = None,
+                              start_rates: Optional[Dict[str, float]] = None,
+                              slo: Optional[SLO] = None) -> List[Session]:
+    """``make_mixed_sessions`` with per-family ``model_requirement``.
+
+    The mixed-fleet closed-loop scenario: each family's spec is
+    ``dataclasses.replace``d with its requirement from ``requirements``
+    (default ``MIXED_FLEET_REQUIREMENTS``; families absent from the map
+    stay unconstrained), so every request the session emits carries the
+    capability tag the router's pre-score filter (Contract 7) reads.
+    Content streams are untouched — the requirement rides on the spec,
+    not the RNG — so with an all-"" map this is bit-identical to
+    ``make_mixed_sessions``.
+    """
+    reqmap = MIXED_FLEET_REQUIREMENTS if requirements is None \
+        else requirements
+    out: List[Session] = []
+    sid0 = 0
+    for name in sorted(mix):
+        rate = (start_rates or {}).get(name)
+        sessions = make_sessions(name, mix[name], seed=seed,
+                                 start_rate=rate, slo=slo, sid0=sid0)
+        want = reqmap.get(name, "")
+        if want:
+            for s in sessions:
+                s.spec = dataclasses.replace(s.spec,
+                                             model_requirement=want)
+        out.extend(sessions)
         sid0 += mix[name]
     out.sort(key=lambda s: (s.start_t, s.sid))
     return out

@@ -666,6 +666,91 @@ def test_stall_beyond_deadline_heals():
     assert not _live_workers()
 
 
+# ---------------------------------------------------------------------------
+# 6. PR 10: heterogeneous fleet under churn (kill a hardware class)
+# ---------------------------------------------------------------------------
+def _hetero_churn_run(n_shards=1, walk_backend=None):
+    """Kill the entire fast hardware class (contiguous instances 0-7,
+    the ``make_fleet`` group layout) at t=30, recover it at t=60; a
+    third of the trace requires the fast class's model, a third the
+    slow one's, a third is unconstrained."""
+    from repro.cluster.simulator import make_mixed_fleet
+    fleet = make_mixed_fleet()
+    trace = make_trace("chatbot", qps=16.0, duration=90.0, seed=33)
+    for i, r in enumerate(trace):
+        if i % 3 == 0:
+            r.model_requirement = "qwen3_30b_moe"
+        elif i % 3 == 1:
+            r.model_requirement = "qwen2_7b"
+    spec = spec_from_config(get_config("qwen3_30b_moe"), chips=1)
+    router = Router(make_policy("lmetric"), fleet.n,
+                    kv_capacity_tokens=200_000, n_shards=n_shards,
+                    walk_backend=walk_backend, fleet=fleet)
+    sim = ClusterSim(router, spec, LatencyModel(spec))
+    for iid in range(8):
+        sim.fail_at(30.0, iid)
+        sim.recover_at(60.0, iid)
+    done = sim.run(copy.deepcopy(trace))
+    return trace, fleet, router, sim, done
+
+
+@pytest.mark.chaos
+@pytest.mark.hetero
+def test_hetero_class_outage_semantics():
+    """While the fast class is down: nothing lands on it, requests that
+    *require* its model are capability-shed (not routed, not raised),
+    and after recovery the class rejoins the rotation."""
+    trace, fleet, router, sim, done = _hetero_churn_run()
+    try:
+        fast = set(range(8))
+        for r in done:
+            if 30.0 <= r.t_sched < 60.0:
+                assert r.sched_to not in fast
+            if r.model_requirement:
+                assert fleet.model_of(r.sched_to) == r.model_requirement
+        shed = [r for r in sim.dropped if r.drop_reason == "shed"]
+        assert shed, "fast-class outage must shed fast-only requests"
+        assert all(r.model_requirement == "qwen3_30b_moe" for r in shed)
+        assert sim._admission.capability_shed == len(shed)
+        assert len(done) + len(shed) == len(trace)
+        late = [r for r in done if r.t_sched >= 60.0]
+        assert {r.sched_to for r in late} & fast, \
+            "recovered class never rejoined the rotation"
+        assert router.policy.alive is None   # fleet whole again
+    finally:
+        router.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.hetero
+@pytest.mark.process
+@pytest.mark.parametrize("n_shards", (1, 4))
+def test_hetero_class_outage_fate_parity(n_shards):
+    """The hetero churn schedule yields bit-identical request fates
+    (finished AND shed) across serial/thread/process walk backends,
+    and the post-churn aggregated index equals a from-scratch serial
+    rebuild over the surviving radix trees."""
+    before = _shm_segments()
+    fates = {}
+    for backend in BACKENDS:
+        kw = ({"walk_backend": backend} if backend != "serial"
+              else {"walk_backend": None})
+        trace, fleet, router, sim, done = _hetero_churn_run(
+            n_shards=n_shards, **kw)
+        try:
+            fates[backend] = (
+                [(r.rid, r.sched_to, r.hit_tokens, r.retries)
+                 for r in done],
+                sorted((r.rid, r.drop_reason) for r in sim.dropped))
+            _assert_index_matches_rebuild(router.factory)
+        finally:
+            router.close()
+    assert fates["thread"] == fates["serial"], f"shards={n_shards}"
+    assert fates["process"] == fates["serial"], f"shards={n_shards}"
+    assert _shm_segments() <= before
+    assert not _live_workers()
+
+
 @pytest.mark.chaos
 def test_overload_controls_change_nothing_at_low_load(spec):
     """At comfortable load the admission gate and retraction pass must

@@ -1,0 +1,470 @@
+"""Heterogeneous-fleet property battery (PR 10).
+
+Proves the model-normalized multiplication score against the frozen
+scalar references (``repro.core.scalar_ref``) with randomized-input
+properties rather than fixed fixtures:
+
+(a) **Within-class order identity** — scaling every instance's score by
+    one positive normalization constant preserves the homogeneous
+    decision sequence exactly (the cancellation property,
+    docs/ARCHITECTURE.md Contract 7 derivation): for any constant
+    ``c`` the hetero scalar reference routes bit-identically to the
+    homogeneous one, and the vectorized path with a *non-constant* norm
+    vector routes bit-identically to the hetero scalar reference.
+(b) **Capability-mask feasibility** — a request carrying a
+    ``model_requirement`` is never routed to an instance that does not
+    serve it, at 1-8 index shards across serial/thread/process walk
+    backends; an infeasible-everywhere request is shed by the
+    admission gate (never reaches the router's masked path).
+(c) **Cross-class failure detection** — on a constructed cross-class
+    counterexample the multiplication-failure detector fires, labels
+    the capture ``cross_class``, and increments
+    ``provenance.failure_condition``.
+
+The battery uses ``hypothesis`` when it is installed; in environments
+without it, a minimal seeded-drawing shim below runs the same
+properties over deterministic pseudo-random examples and reports the
+falsifying draw — the properties themselves are identical either way.
+
+Constant-norm range: the scalar tie-break uses an *absolute* epsilon
+(1e-9), and raw homogeneous scores are integer-valued products whose
+distinct values differ by >= 1 — so any constant >= ~1e-6 keeps
+distinct scores separated beyond the tie window.  Real normalization
+constants are marginal prefill costs (~1e-4 s/token), comfortably
+inside the tested [1e-6, 1e6] range.
+"""
+import collections
+import copy
+import inspect
+import math
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import ClusterSim, make_mixed_fleet
+from repro.configs import get_config
+from repro.core import (LatencyModel, Router, make_policy,
+                        spec_from_config)
+from repro.core.fleet import homogeneous_fleet, make_fleet
+from repro.core.indicators import IndicatorFactory
+from repro.core.scalar_ref import make_scalar_policy
+from repro.core.types import Request
+from repro.obs.registry import MetricsRegistry
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:      # no hypothesis in this environment: same
+    # battery over seeded deterministic draws (log-uniform floats so
+    # both ends of wide ranges are exercised), falsifying example
+    # reported like hypothesis would
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            lo, hi = math.log(min_value), math.log(max_value)
+            return _Strategy(
+                lambda rng: float(math.exp(rng.uniform(lo, hi))))
+
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            return _Strategy(lambda rng: xs[rng.randint(len(xs))])
+
+    def given(*strats):
+        # like hypothesis, positional strategies fill the test's
+        # parameters from the right; the leading parameters stay
+        # visible to pytest (fixtures / parametrize) via __signature__
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            lead = params[:len(params) - len(strats)]
+            trail = [p.name for p in params[len(params) - len(strats):]]
+
+            def run(*args, **kw):
+                n = getattr(run, "_max_examples", 20)
+                rng = np.random.RandomState(
+                    zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF)
+                for i in range(n):
+                    vals = dict(zip(trail, (s.draw(rng) for s in strats)))
+                    try:
+                        fn(*args, **kw, **vals)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example #{i}: {vals!r}: {e}"
+                        ) from e
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__signature__ = inspect.Signature(lead)
+            run._shim = True
+            return run
+        return deco
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+N_INST = 16
+BLOCK = 64
+
+
+# ---------------------------------------------------------------------------
+# deterministic per-example workload + drive loop
+# ---------------------------------------------------------------------------
+def _mini_trace(seed, n=120, requirements=()):
+    """Small shared-prefix trace, a pure function of ``seed``.  Five app
+    prefixes give real KV$ hits; ``requirements`` (cycled over a random
+    subset of requests) attach capability tags."""
+    rng = np.random.RandomState(seed)
+    apps = [tuple(int(x) for x in rng.randint(0, 50,
+                                              size=rng.randint(2, 8)))
+            for _ in range(5)]
+    reqs, t = [], 0.0
+    for rid in range(n):
+        app = apps[rng.randint(len(apps))]
+        tail = tuple(int(x) for x in
+                     rng.randint(50, 1000, size=rng.randint(0, 6)))
+        blocks = app + tail
+        t += float(rng.exponential(0.05))
+        want = ""
+        if requirements and rng.rand() < 0.5:
+            want = requirements[rng.randint(len(requirements))]
+        reqs.append(Request(rid=rid, arrival=t, blocks=blocks,
+                            prompt_len=len(blocks) * BLOCK,
+                            output_len=int(rng.randint(2, 64)),
+                            model_requirement=want))
+    return reqs
+
+
+def _drive_policy(policy, trace, factory):
+    """The ``test_vectorized_diff`` drive loop: route directly through
+    the policy, mutating indicator state with a drain schedule that is
+    a pure function of the request index."""
+    outstanding = collections.deque()
+    decisions = []
+    for i, req in enumerate(trace):
+        iid = policy.route(req, factory, req.arrival)
+        decisions.append(iid)
+        inst = factory[iid]
+        hit = inst.kv_hit(req, touch=True)
+        inst.on_route(req, req.arrival, hit)
+        inst.kv.insert(req.blocks)
+        outstanding.append((iid, req, req.prompt_len - hit))
+        inst.on_prefill_progress(256)
+        if i % 3 == 0 and outstanding:
+            did, dreq, dnew = outstanding.popleft()
+            di = factory[did]
+            di.on_prefill_progress(dnew)
+            di.on_start_running(dreq)
+            for _ in range(dreq.output_len % 7):
+                di.on_decode_token()
+            di.on_finish(dreq)
+    return decisions
+
+
+def _drive_router(router, reqs, batch=8, use_batch=True):
+    """Route through the full router (which commits route hooks
+    itself) with the deterministic drain schedule of
+    ``tests/test_obs.py``."""
+    decisions = []
+    outstanding = collections.deque()
+    reqs = copy.deepcopy(reqs)
+    for i in range(0, len(reqs), batch):
+        wave = reqs[i:i + batch]
+        now = wave[0].arrival
+        if use_batch:
+            iids = router.route_batch(wave, now)
+        else:
+            iids = [router.route(r, now) for r in wave]
+        decisions.extend(iids)
+        for r, iid in zip(wave, iids):
+            outstanding.append((iid, r, r.new_tokens))
+            router.factory[iid].on_prefill_progress(256)
+        for _ in range(len(wave)):
+            if len(outstanding) > 2:
+                did, dreq, dnew = outstanding.popleft()
+                di = router.factory[did]
+                di.on_prefill_progress(dnew)
+                di.on_start_running(dreq)
+                for _ in range(dreq.output_len % 7):
+                    di.on_decode_token()
+                di.on_finish(dreq)
+    return decisions
+
+
+MIXED = (("qwen3_30b_moe", "fast", 8), ("qwen2_7b", "slow", 8))
+
+
+# ---------------------------------------------------------------------------
+# (a) within-class order identity under a positive constant
+# ---------------------------------------------------------------------------
+@pytest.mark.hetero
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(1e-6, 1e6))
+def test_constant_norm_preserves_homogeneous_order(seed, c):
+    """One hardware class: the hetero score with any positive constant
+    normalization routes bit-identically (including epsilon-tie
+    round-robin) to the frozen homogeneous reference."""
+    trace = _mini_trace(seed)
+    hom = make_scalar_policy("lmetric")
+    het = make_scalar_policy("hetero-lmetric", norm=[c] * N_INST)
+    f1 = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    f2 = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    want = _drive_policy(hom, copy.deepcopy(trace), f1)
+    got = _drive_policy(het, copy.deepcopy(trace), f2)
+    assert got == want, f"c={c} changed the homogeneous argmin"
+
+
+@pytest.mark.hetero
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_vectorized_matches_scalar_hetero_reference(seed):
+    """Non-constant norm vectors: the vectorized ``LMetricPolicy``
+    (reading ``factory.prefill_norm``) routes bit-identically to the
+    frozen ``ScalarHeteroLMetricPolicy`` loop — same op order, to the
+    last float bit."""
+    rng = np.random.RandomState(seed ^ 0xBEEF)
+    # realistic marginal-prefill-cost magnitudes, guaranteed non-constant
+    norm = 10.0 ** rng.uniform(-5, -2, size=N_INST)
+    norm[0], norm[1] = 1e-5, 1e-2
+    trace = _mini_trace(seed)
+    vec = make_policy("lmetric")
+    ref = make_scalar_policy("hetero-lmetric", norm=norm)
+    f1 = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    f1.prefill_norm = norm.astype(np.float64)  # injected hetero column
+    f2 = IndicatorFactory(N_INST, kv_capacity_tokens=150_000)
+    got = _drive_policy(vec, copy.deepcopy(trace), f1)
+    want = _drive_policy(ref, copy.deepcopy(trace), f2)
+    assert got == want
+
+
+@pytest.mark.hetero
+def test_homogeneous_fleet_collapses_to_legacy_path():
+    """A degenerate single-class fleet must be *bit-identical* to no
+    fleet at all, on every routing path: the norm vector collapses to
+    ``None`` (``FleetSpec.norm_or_none``), so the instruction sequence
+    is the pre-hetero one (Contract 7)."""
+    fleet = homogeneous_fleet("qwen2_7b", "fast", N_INST)
+    assert fleet.norm_or_none() is None
+    trace = _mini_trace(77, n=200)
+
+    def run(fleet_arg, n_shards=1, walk_backend=None, use_batch=True,
+            maker=make_policy):
+        router = Router(maker("lmetric"), N_INST,
+                        kv_capacity_tokens=150_000, fleet=fleet_arg,
+                        n_shards=n_shards, walk_backend=walk_backend)
+        try:
+            assert (router.factory.prefill_norm is None) \
+                == (True if fleet_arg is None else True)
+            return _drive_router(router, trace, use_batch=use_batch)
+        finally:
+            router.close()
+
+    ref = run(None, use_batch=False, maker=make_scalar_policy)
+    assert run(None) == ref
+    assert run(fleet) == ref                       # wave path
+    assert run(fleet, use_batch=False) == ref      # sequential path
+    assert run(fleet, n_shards=4) == ref           # sharded wave path
+    assert run(fleet, n_shards=4, walk_backend="thread") == ref
+
+
+# ---------------------------------------------------------------------------
+# (b) capability mask: never routed infeasible, shards x backends
+# ---------------------------------------------------------------------------
+def _check_feasibility(n_shards, walk_backend, seed):
+    fleet = make_fleet(MIXED)
+    trace = _mini_trace(seed, n=96,
+                        requirements=("qwen2_7b", "qwen3_30b_moe"))
+    router = Router(make_policy("lmetric"), N_INST,
+                    kv_capacity_tokens=150_000, fleet=fleet,
+                    n_shards=n_shards, walk_backend=walk_backend)
+    try:
+        got = _drive_router(router, trace)
+    finally:
+        router.close()
+    for req, iid in zip(trace, got):
+        if req.model_requirement:
+            assert fleet.model_of(iid) == req.model_requirement, \
+                (f"req {req.rid} wanted {req.model_requirement}, "
+                 f"routed to {fleet.model_of(iid)} "
+                 f"(shards={n_shards}, backend={walk_backend})")
+    # fate parity with the frozen hetero scalar reference (which
+    # carries its own capability filter): the masked vectorized path
+    # changes nothing but the candidate set
+    ref = Router(make_scalar_policy("hetero-lmetric",
+                                    norm=fleet.prefill_norm,
+                                    model_names=fleet.model_names),
+                 N_INST, kv_capacity_tokens=150_000)
+    try:
+        want = _drive_router(ref, trace, use_batch=False)
+    finally:
+        ref.close()
+    assert got == want, f"shards={n_shards}, backend={walk_backend}"
+
+
+@pytest.mark.hetero
+@pytest.mark.parametrize("walk_backend", (None, "thread"))
+@settings(max_examples=5, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 10 ** 6))
+def test_capability_mask_never_routes_infeasible(walk_backend, n_shards,
+                                                 seed):
+    _check_feasibility(n_shards, walk_backend, seed)
+
+
+@pytest.mark.hetero
+@pytest.mark.process
+@pytest.mark.parametrize("n_shards", (1, 4, 8))
+def test_capability_mask_process_backend(n_shards):
+    _check_feasibility(n_shards, "process", seed=11)
+
+
+@pytest.mark.hetero
+def test_infeasible_everywhere_is_shed_not_routed():
+    """A requirement no instance serves: the router's masked path
+    raises (caller bug to reach it), the admission gate sheds it first
+    (counted as ``capability_shed``), and the simulator takes the shed
+    path even with every overload control off."""
+    fleet = make_fleet(MIXED)
+    router = Router(make_policy("lmetric"), N_INST,
+                    kv_capacity_tokens=150_000, fleet=fleet)
+    try:
+        ghost = Request(rid=0, arrival=0.0, blocks=(1, 2), prompt_len=128,
+                        output_len=8, model_requirement="ghost_model")
+        with pytest.raises(ValueError, match="shed it at admission"):
+            router.route(ghost, 0.0)
+        spec = spec_from_config(get_config("qwen2_7b"), chips=1)
+        sim = ClusterSim(router, spec, LatencyModel(spec))
+        assert sim._admission is not None    # fleet forces the gate on
+        trace = _mini_trace(3, n=40)
+        for r in trace[:10]:
+            r.model_requirement = "ghost_model"
+        done = sim.run(trace)
+        shed = [r for r in sim.dropped if r.drop_reason == "shed"]
+        assert len(shed) == 10
+        assert sim._admission.capability_shed == 10
+        assert len(done) == 30
+        reg = MetricsRegistry()
+        sim._admission.metrics_into(reg)
+        assert reg.counters["admission.capability_shed"] == 10
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# (c) cross-class failure-condition detection
+# ---------------------------------------------------------------------------
+@pytest.mark.hetero
+def test_cross_class_counterexample_fires_detector():
+    """Constructed counterexample: a small fast-class norm discounts a
+    heavily loaded fast instance below every idle slow instance, so the
+    normalized product routes onto it — the detector must fire, label
+    the capture ``cross_class``, and bump both registry counters."""
+    from repro.obs import make_obs
+    fleet = make_fleet([("qwen3_30b_moe", "fast", 1),
+                        ("qwen2_7b", "slow", 7)])
+    obs = make_obs(metrics=True, provenance=True)
+    router = Router(make_policy("lmetric"), 8,
+                    kv_capacity_tokens=1 << 20, fleet=fleet, obs=obs)
+    try:
+        f = router.factory
+        # exaggerate the class ratio to 100x so the product provably
+        # prefers the lone loaded fast instance over the idle slow
+        # ones: score_fast = 1e-6*(P+1)*10 < score_slow = 1e-4*(P+1)*2
+        f.prefill_norm = np.array([1e-6] + [1e-4] * 7)
+        f.r_bs[0] = 9                       # loaded fast instance
+        f.r_bs[1:] = 1
+        req = Request(rid=0, arrival=0.0, blocks=(5, 6, 7),
+                      prompt_len=3 * BLOCK, output_len=8)
+        iid = router.route(req, 0.0)
+        assert iid == 0                     # cross-class capture
+        rec = obs.provenance.records[-1]
+        assert rec["failure_condition"] is True
+        assert rec["failure_kind"] == "cross_class"
+        assert rec["chosen_hardware_class"] == 0
+        c = obs.registry.counters
+        assert c["provenance.failure_condition"] == 1
+        assert c["provenance.failure_condition.cross_class"] == 1
+        assert obs.provenance.cross_class_conditions == 1
+    finally:
+        router.close()
+
+
+@pytest.mark.hetero
+def test_failure_detector_classifies_capture_kind():
+    """Unit-level classification: same-class lighter candidates keep
+    the homogeneous ``affinity_capture`` label; a lighter candidate in
+    another class upgrades it to ``cross_class``.  The boolean return
+    (and the base counter) match the homogeneous detector exactly."""
+    from repro.obs.provenance import ProvenanceRecorder
+    p = ProvenanceRecorder(alpha=2.0)
+    bs = np.array([9, 1, 1, 1], dtype=np.int64)
+    live = np.arange(4)
+    same = np.zeros(4, dtype=np.int64)           # all one class
+    split = np.array([0, 0, 1, 1], dtype=np.int64)
+    assert p._failure_condition(0, bs, None, live, cls=same) is True
+    assert p.last_failure_kind == "affinity_capture"
+    assert p._failure_condition(0, bs, None, live, cls=split) is True
+    assert p.last_failure_kind == "cross_class"
+    # below threshold: no fire, no kind, regardless of classes
+    assert p._failure_condition(1, bs, None, live, cls=split) is False
+    assert p.last_failure_kind is None
+    assert p.failure_conditions == 2
+    assert p.cross_class_conditions == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet plumbing invariants that the properties above lean on
+# ---------------------------------------------------------------------------
+@pytest.mark.hetero
+def test_fleet_columns_and_snapshot():
+    fleet = make_mixed_fleet()
+    assert fleet.n == 16
+    assert fleet.model_vocab == ("qwen3_30b_moe", "qwen2_7b")
+    assert fleet.class_vocab == ("fast", "slow")
+    assert fleet.norm_or_none() is not None
+    # fast hardware = cheaper marginal prefill token (the MoE's ~3B
+    # active params beat the dense 7B on the flops roofline)
+    assert fleet.prefill_norm[0] < fleet.prefill_norm[8]
+    f = IndicatorFactory(16, kv_capacity_tokens=1 << 20, fleet=fleet)
+    assert (f.model_id == fleet.model_codes).all()
+    assert (f.hardware_class == fleet.class_codes).all()
+    snap = f.snapshot()
+    assert snap["model_id"] == list(fleet.model_codes)
+    assert snap["hardware_class"] == list(fleet.class_codes)
+    mid, cls, norm = f.device_hetero_view()
+    assert (np.asarray(mid) == fleet.model_codes).all()
+    assert (np.asarray(cls) == fleet.class_codes).all()
+    assert np.allclose(np.asarray(norm), fleet.prefill_norm)
+    assert f.device_hetero_view() is not None   # cached second call
+    with pytest.raises(ValueError, match="fleet"):
+        IndicatorFactory(8, kv_capacity_tokens=1 << 20, fleet=fleet)
+
+
+@pytest.mark.hetero
+def test_route_then_balance_baseline_routes_feasibly():
+    """The two-layer baseline honours the same capability mask and
+    never routes infeasible — it differs from the fused score only in
+    *which feasible* instance it picks."""
+    fleet = make_fleet(MIXED)
+    trace = _mini_trace(9, n=96,
+                        requirements=("qwen2_7b", "qwen3_30b_moe"))
+    router = Router(make_policy("route-then-balance"), N_INST,
+                    kv_capacity_tokens=150_000, fleet=fleet)
+    try:
+        got = _drive_router(router, trace, use_batch=False)
+    finally:
+        router.close()
+    for req, iid in zip(trace, got):
+        if req.model_requirement:
+            assert fleet.model_of(iid) == req.model_requirement

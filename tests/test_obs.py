@@ -319,6 +319,76 @@ def test_metrics_snapshot_mirrors_legacy_telemetry(trace):
         router.close()
 
 
+@pytest.mark.hetero
+def test_provenance_round_trip_hetero_fields(trace):
+    """On a heterogeneous fleet every provenance record carries the
+    chosen instance's model/hardware-class codes, the request's
+    requirement, and per-candidate normalized indicators — enough to
+    replay the hetero argmin by hand — and the records survive a JSON
+    round-trip."""
+    from repro.cluster.simulator import make_mixed_fleet
+    fleet = make_mixed_fleet()
+    obs = make_obs(metrics=True, provenance=True)
+    router = Router(make_policy("lmetric"), 16,
+                    kv_capacity_tokens=150_000, fleet=fleet, obs=obs)
+    sub = copy.deepcopy(trace[:200])
+    for i, r in enumerate(sub):
+        if i % 4 == 0:
+            r.model_requirement = "qwen2_7b"
+    try:
+        _drive(router, sub)
+    finally:
+        router.close()
+    recs = json.loads(json.dumps(obs.provenance.records))
+    assert len(recs) == len(sub)
+    by_rid = {r.rid: r for r in sub}
+    for rec in recs:
+        iid = rec["chosen"]
+        assert rec["chosen_model_id"] == int(fleet.model_codes[iid])
+        assert rec["chosen_hardware_class"] == \
+            int(fleet.class_codes[iid])
+        want = by_rid[rec["rid"]].model_requirement
+        assert rec["model_requirement"] == want
+        if want:   # the capability mask held, and the record proves it
+            assert fleet.model_of(iid) == want
+        assert rec["top_k"], "hetero records keep the landscape"
+        for e in rec["top_k"]:
+            assert e["model_id"] == int(fleet.model_codes[e["iid"]])
+            assert e["hardware_class"] == int(fleet.class_codes[e["iid"]])
+            assert e["norm"] == float(fleet.prefill_norm[e["iid"]])
+    assert obs.registry.counters["provenance.records"] == len(sub)
+
+
+@pytest.mark.hetero
+def test_obs_identity_on_mixed_fleet_scenario():
+    """Contract 5 under heterogeneity: a fully-enabled obs bundle must
+    not change a single decision of the mixed-fleet closed-loop
+    scenario vs the disabled default."""
+    from repro.cluster.simulator import make_mixed_fleet
+    from repro.workloads.sessions import make_mixed_fleet_sessions
+    spec = spec_from_config(get_config("qwen3_30b_moe"), chips=1)
+
+    def fates(obs):
+        fleet = make_mixed_fleet()
+        sessions = make_mixed_fleet_sessions(
+            {"chatbot": 20, "coder": 10, "agent": 10}, seed=9)
+        router = Router(make_policy("lmetric"), fleet.n,
+                        kv_capacity_tokens=150_000, fleet=fleet, obs=obs)
+        sim = ClosedLoopSim(router, spec, LatencyModel(spec))
+        try:
+            done = sim.run_sessions(sessions)
+            return [(r.rid, r.sched_to, r.hit_tokens,
+                     round(r.t_finish, 9)) for r in done]
+        finally:
+            router.close()
+
+    base = fates(None)
+    assert base, "scenario produced no completions"
+    full = fates(make_obs(metrics=True, trace=True, provenance=True,
+                          sample_every=2))
+    assert full == base
+
+
 def test_provenance_failure_detector():
     """Affinity capture fires iff the chosen instance's load exceeds
     alpha x the live median while a lighter candidate exists."""
